@@ -1,0 +1,42 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on CPU — correctness-path
+timing, the TPU target numbers come from the roofline) vs the jnp oracle."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import time_us
+from repro.kernels import ops, ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    t, d, v = 4096, 128, 2048
+    ids = jnp.asarray(rng.integers(0, v, t), jnp.int32)
+    grads = jnp.asarray(rng.normal(0, 1, (t, d)), jnp.float32)
+    heat = jnp.asarray(rng.integers(1, 50, v), jnp.float32)
+    us = time_us(lambda: ops.heat_scatter(ids, grads, heat, 1e4, v))
+    us_ref = time_us(lambda: ref.heat_scatter_ref(ids, grads, heat, 1e4, v))
+    rows.append(("kernels/heat_scatter", us,
+                 f"T={t};D={d};V={v};ref_us={us_ref:.0f};mode=interpret"))
+
+    b, s, h, kv, hd = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, kv, hd)), jnp.bfloat16)
+    vv = jnp.asarray(rng.normal(0, 1, (b, s, kv, hd)), jnp.bfloat16)
+    us = time_us(lambda: ops.flash_attention(q, k, vv, blk_q=256, blk_k=256), iters=2)
+    us_ref = time_us(lambda: ref.flash_attention_ref(q, k, vv), iters=2)
+    rows.append(("kernels/flash_attention", us,
+                 f"B={b};S={s};H={h};KV={kv};hd={hd};ref_us={us_ref:.0f};mode=interpret"))
+
+    s_cache = 8192
+    kc = jnp.asarray(rng.normal(0, 1, (b, kv, s_cache, hd)), jnp.bfloat16)
+    vc = jnp.asarray(rng.normal(0, 1, (b, kv, s_cache, hd)), jnp.bfloat16)
+    qd = jnp.asarray(rng.normal(0, 1, (b, h, hd)), jnp.bfloat16)
+    kpos = jnp.arange(s_cache)
+    us = time_us(lambda: ops.flash_decode(qd, kc, vc, kpos, s_cache - 1, blk_s=1024),
+                 iters=2)
+    us_ref = time_us(lambda: ref.flash_decode_ref(qd, kc, vc, kpos, s_cache - 1), iters=2)
+    rows.append(("kernels/flash_decode", us,
+                 f"B={b};S={s_cache};ref_us={us_ref:.0f};mode=interpret"))
+    return rows

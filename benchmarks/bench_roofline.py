@@ -1,0 +1,25 @@
+"""Roofline terms per (arch x shape) on the single-pod mesh, read from the
+dry-run artifact (results/dryrun.json). One row per baselined combination —
+this is the §Roofline table of EXPERIMENTS.md."""
+import os
+
+from benchmarks.roofline import build_table
+
+
+def run():
+    path = "results/dryrun.json"
+    if not os.path.exists(path):
+        return [("roofline/missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all --out results/dryrun` first")]
+    rows = []
+    for r in build_table(path):
+        if r.mesh != "16x16":
+            continue
+        derived = (f"compute_s={r.compute_s:.3e};memory_s={r.memory_s:.3e};"
+                   f"collective_s={r.collective_s:.3e};bound={r.bottleneck};"
+                   f"useful={r.useful_ratio:.2f};mem_dev={r.mem_per_dev_gib:.2f}GiB;"
+                   f"fits={'Y' if r.fits else 'N'}")
+        # us_per_call: the roofline-projected step time on the target pod
+        step_s = max(r.compute_s, r.memory_s, r.collective_s)
+        rows.append((f"roofline/{r.arch}/{r.shape}", step_s * 1e6, derived))
+    return rows

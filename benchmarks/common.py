@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: timing + the rounds-to-target protocol."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FedConfig
+from repro.data.synthetic import FederatedDataset
+from repro.federated import FederatedTrainer
+from repro.models.recsys import (din_logits, din_loss, lr_logits, lr_loss,
+                                 lstm_logits, lstm_loss, make_din_params,
+                                 make_lr_params, make_lstm_params)
+
+
+def time_us(fn, *args, iters: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def task_bindings(ds: FederatedDataset):
+    """(make_params, loss, predict) for the dataset's task."""
+    if ds.task == "lr":
+        return (functools.partial(make_lr_params, ds.num_features), lr_loss,
+                lambda p, t: lr_logits(p, jnp.asarray(t["features"])))
+    if ds.task == "lstm":
+        return (functools.partial(make_lstm_params, ds.num_features), lstm_loss,
+                lambda p, t: lstm_logits(p, jnp.asarray(t["tokens"]),
+                                         (jnp.asarray(t["tokens"]) >= 0).astype(jnp.float32)))
+    if ds.task == "din":
+        return (functools.partial(make_din_params, ds.num_features), din_loss,
+                lambda p, t: din_logits(p, jnp.asarray(t["hist"]), jnp.asarray(t["target"])))
+    raise ValueError(ds.task)
+
+
+def rounds_to_target(ds: FederatedDataset, algorithm: str, target_loss: float,
+                     max_rounds: int, fed_kw: Optional[Dict] = None,
+                     eval_every: int = 5, seed: int = 0) -> Tuple[int, float, float]:
+    """Returns (rounds or max_rounds+, best train loss, wall time s)."""
+    mk, loss_fn, predict = task_bindings(ds)
+    kw = dict(num_clients=ds.num_clients, clients_per_round=10, local_iters=5,
+              local_batch=5, lr=0.5, algorithm=algorithm)
+    kw.update(fed_kw or {})
+    tr = FederatedTrainer(ds, mk, loss_fn, FedConfig(**kw), predict_fn=predict,
+                          metric="auc", rng_seed=seed)
+    t0 = time.perf_counter()
+    best = float("inf")
+    reached = None
+    for r in range(max_rounds):
+        tr.run_round()
+        if (r + 1) % eval_every == 0:
+            cur = tr.train_loss(num_batches=4, batch=256)
+            best = min(best, cur)
+            if cur <= target_loss and reached is None:
+                reached = r + 1
+                break
+    wall = time.perf_counter() - t0
+    return (reached if reached is not None else max_rounds + 1, best, wall)

@@ -1,0 +1,209 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+    compute term    = FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HBM bytes / (chips x 819 GB/s)
+    collective term = collective bytes / (chips x 50 GB/s per ICI link)
+
+Sources & corrections
+---------------------
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified: a
+10-iteration scanned matmul reports ~1 matmul of FLOPs), so raw HLO numbers
+undercount scan-over-layers models by ~L. We therefore report BOTH:
+
+  * ``hlo_flops`` / ``hlo_bytes`` — raw compiled numbers (body-once), and
+  * analytic totals from the model structure (validated against unrolled
+    small-config HLO in tests/test_roofline.py), used for the terms.
+
+Collective bytes come from the loop-aware HLO parser (repro.launch.hlo),
+which multiplies collectives inside while bodies by XLA's recorded
+``known_trip_count`` — exact, no correction needed. Collective shapes in the
+partitioned module are per-device shards already.
+
+MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) is reported alongside the
+analytic total; their ratio exposes remat/attention/dispatch overhead.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HW
+
+
+def analytic_flops(cfg, shape_name: str) -> Dict[str, float]:
+    """Structural FLOP count for one step of the lowered program."""
+    sc = SHAPES[shape_name]
+    return analytic_flops_for(cfg, sc.kind, sc.global_batch, sc.seq_len)
+
+
+def analytic_flops_for(cfg, kind: str, b: int, s: int) -> Dict[str, float]:
+    class _SC:
+        pass
+    sc = _SC()
+    sc.kind, sc.global_batch, sc.seq_len = kind, b, s
+    pc = cfg.param_counts()
+    hd = cfg.head_dim
+
+    def attn_flops(tokens, kv_len, heads):
+        # qk + pv matmuls: 2 * 2 * tokens * kv_len * hd per head
+        return 4.0 * tokens * kv_len * hd * heads
+
+    if sc.kind == "train":
+        tokens = float(b) * s
+        # matmul fwd = 2*active_params*tokens ; bwd = 2x fwd ; remat ~ +1 fwd
+        matmul = 2.0 * pc["active"] * tokens * (3.0 + 1.0)
+        kv_len = min(cfg.sliding_window, s) if cfg.sliding_window else s
+        causal_frac = 0.5 if not cfg.sliding_window else 1.0
+        attn = 0.0
+        if cfg.family != "ssm":
+            n_attn = (cfg.num_layers if cfg.family != "hybrid"
+                      else cfg.num_layers // max(cfg.attn_every, 1))
+            attn = attn_flops(tokens, kv_len, cfg.num_heads) * n_attn \
+                * causal_frac * 4.0          # fwd+bwd+remat
+        return {"total": matmul + attn, "matmul": matmul, "attn": attn,
+                "model_flops": 6.0 * pc["active"] * tokens}
+
+    if sc.kind == "prefill":
+        tokens = float(b) * s
+        matmul = 2.0 * pc["active"] * tokens
+        kv_len = min(cfg.sliding_window, s) if cfg.sliding_window else s
+        attn = 0.0
+        if cfg.family != "ssm":
+            n_attn = (cfg.num_layers if cfg.family != "hybrid"
+                      else cfg.num_layers // max(cfg.attn_every, 1))
+            frac = 0.5 if not cfg.sliding_window else 1.0
+            attn = attn_flops(tokens, kv_len, cfg.num_heads) * n_attn * frac
+        return {"total": matmul + attn, "matmul": matmul, "attn": attn,
+                "model_flops": 2.0 * pc["active"] * tokens}
+
+    # decode: one token per sequence
+    tokens = float(b)
+    matmul = 2.0 * pc["active"] * tokens
+    kv_len = min(cfg.sliding_window, s) if cfg.sliding_window else s
+    attn = 0.0
+    if cfg.family != "ssm":
+        n_attn = (cfg.num_layers if cfg.family != "hybrid"
+                  else cfg.num_layers // max(cfg.attn_every, 1))
+        attn = attn_flops(tokens, kv_len, cfg.num_heads) * n_attn
+    if cfg.family in ("ssm", "hybrid"):
+        # recurrent state update ~ 6 * state_size per token per layer
+        di = cfg.ssm_expand * cfg.d_model
+        state = cfg.ssm_heads * (di // max(cfg.ssm_heads, 1)) * max(cfg.ssm_state, di // max(cfg.ssm_heads, 1))
+        attn += 6.0 * state * tokens * cfg.num_layers
+    return {"total": matmul + attn, "matmul": matmul, "attn": attn,
+            "model_flops": 2.0 * pc["active"] * tokens}
+
+
+def analytic_hbm_bytes(cfg, shape_name: str) -> float:
+    """Dominant HBM traffic per step per *cluster* (bytes)."""
+    sc = SHAPES[shape_name]
+    b, s = sc.global_batch, sc.seq_len
+    pc = cfg.param_counts()
+    dt = 2.0  # bf16
+    if sc.kind == "train":
+        # read params + write params + read/write f32 grad accumulation
+        p_traffic = pc["total"] * (dt * 2 + 4 * 2)
+        act = 3.0 * b * s * cfg.d_model * dt * cfg.num_layers    # residual rd/wr
+        return p_traffic + act
+    if sc.kind == "prefill":
+        kv = 2.0 * b * min(cfg.sliding_window or s, s) * cfg.num_kv_heads * cfg.head_dim \
+            * dt * cfg.num_layers
+        return pc["total"] * dt + 2.0 * b * s * cfg.d_model * dt * cfg.num_layers + kv
+    # decode: every live param + the whole KV cache is read once per token
+    kv_len = min(cfg.sliding_window, s) if cfg.sliding_window else s
+    kv = 2.0 * b * kv_len * cfg.num_kv_heads * cfg.head_dim * dt * cfg.num_layers
+    if cfg.family == "hybrid":
+        kv = kv / max(cfg.attn_every, 1)
+        kv += b * cfg.num_layers * cfg.ssm_heads * (cfg.ssm_expand * cfg.d_model //
+                                                    max(cfg.ssm_heads, 1)) * cfg.ssm_state * 4
+    if cfg.family == "ssm":
+        kv = b * cfg.num_layers * (cfg.ssm_expand * cfg.d_model) ** 2 // max(cfg.ssm_heads, 1) * 4
+    return pc["active"] * dt + kv
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    analytic_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    fits: bool
+    mem_per_dev_gib: float
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def roofline_from_record(rec: Dict) -> Optional[RooflineRow]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    chips = rec["num_devices"]
+    af = analytic_flops(cfg, rec["shape"])
+    hbm = analytic_hbm_bytes(cfg, rec["shape"])
+    compute_s = af["total"] / (chips * HW["peak_flops_bf16"])
+    memory_s = hbm / (chips * HW["hbm_bandwidth"])
+    # parsed collective bytes are per-device already (post-partitioning)
+    coll_s = rec["collectives"]["total_collective_bytes"] / HW["ici_bandwidth"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mem_dev = (rec["memory"]["argument_size_in_bytes"]
+               + rec["memory"]["temp_size_in_bytes"]) / 2**30
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops=af["model_flops"], analytic_flops=af["total"],
+        hlo_flops=rec["flops"],
+        useful_ratio=af["model_flops"] / max(af["total"], 1.0),
+        fits=mem_dev <= HW["hbm_bytes"] / 2**30,
+        mem_per_dev_gib=mem_dev,
+    )
+
+
+def build_table(dryrun_json: str = "results/dryrun.json"):
+    recs = json.load(open(dryrun_json))
+    rows = []
+    for rec in recs:
+        row = roofline_from_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def main():
+    rows = build_table()
+    print(f"{'arch':28s} {'shape':12s} {'mesh':8s} "
+          f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+          f"{'bound':>10s} {'useful':>7s} {'mem/dev':>8s} fits")
+    for r in rows:
+        print(f"{r.arch:28s} {r.shape:12s} {r.mesh:8s} "
+              f"{r.compute_s:10.3e} {r.memory_s:10.3e} {r.collective_s:10.3e} "
+              f"{r.bottleneck:>10s} {r.useful_ratio:7.2f} "
+              f"{r.mem_per_dev_gib:7.2f}G {'Y' if r.fits else 'N'}")
+    out = [r.as_dict() for r in rows]
+    os.makedirs("results", exist_ok=True)
+    json.dump(out, open("results/roofline.json", "w"), indent=1)
+    with open("results/roofline_table.md", "w") as f:
+        f.write("| arch | shape | mesh | compute_s | memory_s | collective_s "
+                "| bound | useful | mem/dev | fits |\n|---|---|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            f.write(f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} "
+                    f"| {r.memory_s:.3e} | {r.collective_s:.3e} | {r.bottleneck} "
+                    f"| {r.useful_ratio:.2f} | {r.mem_per_dev_gib:.2f}G "
+                    f"| {'Y' if r.fits else 'N'} |\n")
+    print("wrote results/roofline.json + results/roofline_table.md")
+
+
+if __name__ == "__main__":
+    main()

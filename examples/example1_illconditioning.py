@@ -1,0 +1,41 @@
+"""Paper Example 1 / Figure 2: the ill-conditioning mechanism, end to end.
+
+Simulates the two-parameter problem with N clients where w1 is involved by a
+single client (heat dispersion = N): FedAvg's update of w1 is attenuated by
+1/N while FedSubAvg's correction restores it. Also prints the measured
+condition numbers (Theorems 1-2).
+
+    PYTHONPATH=src python examples/example1_illconditioning.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.preconditioner import condition_number, preconditioned_hessian
+
+
+def main():
+    n, rounds, lr = 100, 60, 0.5
+    counts = np.array([1.0, float(n)])
+
+    # H = (1/N) sum_i H_i = diag(2/N, 2) -> kappa = N
+    h = jnp.diag(jnp.asarray([2.0 / n, 2.0]))
+    print(f"kappa(H)              = {condition_number(h):8.1f}   (Theorem 1: >= N = {n})")
+    h_hat = preconditioned_hessian(h, counts, float(n))
+    print(f"kappa(D^1/2 H D^1/2)  = {condition_number(h_hat):8.2f}   (Theorem 2: Theta(1))")
+
+    w_avg = np.array([1.0, 1.0])
+    w_sub = np.array([1.0, 1.0])
+    print(f"\n{'round':>5s} {'FedAvg w1':>10s} {'FedSubAvg w1':>13s}")
+    for r in range(1, rounds + 1):
+        g = np.array([2 * w_avg[0] / n, 2 * w_avg[1]])     # aggregated mean grad
+        w_avg = w_avg - lr * g
+        g = np.array([2 * w_sub[0] / n, 2 * w_sub[1]]) * (n / counts)
+        w_sub = w_sub - lr * g
+        if r % 10 == 0 or r == 1:
+            print(f"{r:5d} {w_avg[0]:10.4f} {w_sub[0]:13.4g}")
+    print("\nFedAvg's cold parameter decays as (1-1/N)^r; FedSubAvg reaches the"
+          " optimum in one step — the Figure 2 picture.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end driver (deliverable b): federated training of a ~100M-param
+decoder LM with FedSubAvg for a few hundred rounds on a Zipf-heat federated
+corpus, with checkpointing and FedAvg comparison.
+
+The model is the qwen2.5 family at ~100M scale (8 layers, d=512, vocab 8192);
+one round = one FedSGD cohort step (Algorithm 1 with I=1), exactly the
+computation the pod dry-run lowers at 14B-400B scale.
+
+    PYTHONPATH=src python examples/federated_llm.py [--rounds 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import FedConfig, get_config
+from repro.data import make_lm_federated
+from repro.federated import make_round_step
+from repro.models import build_model
+from repro.common.pytree import tree_size
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--arch", default="qwen2_5_14b")
+    ap.add_argument("--algorithm", default="fedsubavg",
+                    choices=["fedsubavg", "fedavg"])
+    ap.add_argument("--ckpt", default="results/fed_llm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-parameter member of the assigned family
+    cfg = get_config(args.arch).replace(
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=1408, vocab_size=8192, dtype="float32", query_chunk=128, kv_chunk=128)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} params={tree_size(params)/1e6:.1f}M")
+
+    ds = make_lm_federated(num_clients=256, vocab=cfg.vocab_size, seq_len=128,
+                           samples_per_client=4, zipf_a=1.3)
+    print(f"corpus: {ds.stats()}")
+
+    fed = FedConfig(num_clients=ds.num_clients, clients_per_round=16, lr=0.05,
+                    algorithm=args.algorithm)
+    step = jax.jit(make_round_step(api.loss, params, fed, mode="fedsgd",
+                                   correct=args.algorithm == "fedsubavg"))
+    heat = jnp.asarray(ds.heat.counts, jnp.float32)
+    rng = np.random.default_rng(0)
+
+    t0 = time.time()
+    for r in range(args.rounds):
+        ids = rng.choice(ds.num_clients, size=fed.clients_per_round, replace=False)
+        sample = rng.integers(0, ds.client_data["tokens"].shape[1],
+                              size=fed.clients_per_round)
+        toks = ds.client_data["tokens"][ids, sample]
+        params, metrics = step(params, {"tokens": jnp.asarray(toks),
+                                        "heat_vocab": heat})
+        if (r + 1) % 20 == 0:
+            print(f"round {r+1:4d}  loss={float(metrics['loss']):.4f}  "
+                  f"({(time.time()-t0)/(r+1):.2f}s/round)", flush=True)
+
+    save_checkpoint(args.ckpt, params, step=args.rounds,
+                    extra={"arch": cfg.name, "algorithm": args.algorithm})
+    print(f"saved checkpoint to {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Quickstart: FedSubAvg vs FedAvg on a MovieLens-like federated rating task.
+
+Runs in ~1 minute on CPU and reproduces the paper's headline result: under
+feature heat dispersion the heat-corrected aggregation converges much faster.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import functools
+
+import jax.numpy as jnp
+
+from repro.configs import FedConfig
+from repro.data import make_movielens_like
+from repro.federated import FederatedTrainer
+from repro.models.recsys import lr_logits, lr_loss, make_lr_params
+
+
+def main():
+    ds = make_movielens_like(num_clients=150, num_items=100, mean_samples=30)
+    print(f"dataset: {ds.stats()}")
+
+    mk = functools.partial(make_lr_params, ds.num_features)
+    predict = lambda p, t: lr_logits(p, jnp.asarray(t["features"]))
+
+    for alg in ("fedavg", "fedsubavg"):
+        cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=10,
+                        local_iters=5, local_batch=5, lr=0.5, algorithm=alg)
+        tr = FederatedTrainer(ds, mk, lr_loss, cfg, predict_fn=predict, metric="auc")
+        tr.run(40, eval_every=10, verbose=True)
+        h = tr.history[-1]
+        print(f"==> {alg}: loss={h.train_loss:.4f} auc={h.test_metric:.4f} "
+              f"(dispersion={ds.heat.dispersion():.0f})\n")
+
+
+if __name__ == "__main__":
+    main()

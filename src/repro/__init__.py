@@ -1,0 +1,16 @@
+"""repro: Federated Submodel Optimization (FedSubAvg) as a multi-pod JAX framework.
+
+Reproduction of "Federated Submodel Optimization for Hot and Cold Data Features"
+(Ding et al., NeurIPS 2022), extended into a production-grade federated training /
+serving framework for embedding-heavy models on TPU pods.
+
+Public API surface:
+    repro.configs      -- architecture + federated configs (``get_config(name)``)
+    repro.core         -- heat statistics, aggregation, server algorithms
+    repro.federated    -- client/server round runtime and pod-scale simulation
+    repro.models       -- the model zoo (10 assigned architectures + paper models)
+    repro.kernels      -- Pallas TPU kernels (validated in interpret mode on CPU)
+    repro.launch       -- mesh construction, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

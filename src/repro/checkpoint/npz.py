@@ -1,0 +1,65 @@
+"""Flat-key npz checkpointing for boxed parameter pytrees.
+
+Leaves are stored under their tree path; Param logical axes go to a JSON
+sidecar so a restored checkpoint can be re-sharded under any mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.logical import Param, is_param
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_param)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_checkpoint(path: str, params, step: int = 0, extra: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = _flatten_with_paths(params)
+    def to_np(x):
+        x = jnp.asarray(x)
+        if x.dtype == jnp.bfloat16:
+            # numpy can't serialise bf16; store losslessly as f32 and cast
+            # back to the template dtype on restore
+            x = x.astype(jnp.float32)
+        return np.asarray(x)
+
+    arrays, axes = {}, {}
+    for key, leaf in flat:
+        if is_param(leaf):
+            arrays[key] = to_np(leaf.value)
+            axes[key] = list(leaf.axes)
+        else:
+            arrays[key] = to_np(leaf)
+            axes[key] = None
+    np.savez(path + ".npz", **{k: v for k, v in arrays.items()})
+    with open(path + ".meta.json", "w") as f:
+        json.dump({"step": step, "axes": axes, "extra": extra or {}}, f)
+
+
+def load_checkpoint(path: str, template) -> Any:
+    data = np.load(path + ".npz")
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    flat, treedef = _flatten_with_paths(template)
+    leaves = []
+    for key, leaf in flat:
+        arr = jnp.asarray(data[key])
+        if is_param(leaf):
+            leaves.append(Param(arr.astype(leaf.value.dtype), leaf.axes))
+        else:
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,11 @@
+from repro.common.pytree import (  # noqa: F401
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_zeros_like,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    tree_bytes,
+    cast_tree,
+)

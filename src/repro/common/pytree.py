@@ -1,0 +1,47 @@
+"""Small pytree arithmetic helpers used across the framework.
+
+The framework is deliberately dependency-light (no optax/flax in the container),
+so the handful of tree ops the optimizers and aggregators need live here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters in the tree."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def cast_tree(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a)

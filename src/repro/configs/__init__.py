@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    FedConfig,
+    ModelConfig,
+    ShapeConfig,
+    all_arch_ids,
+    get_config,
+    get_smoke_config,
+)

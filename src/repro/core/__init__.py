@@ -1,0 +1,24 @@
+"""The paper's primary contribution: heat-corrected federated submodel averaging."""
+from repro.core.heat import (  # noqa: F401
+    HeatStats,
+    client_indicator,
+    compute_heat_exact,
+    estimate_heat_randomized_response,
+    estimate_heat_secure_agg,
+    heat_correction_factors,
+)
+from repro.core.aggregate import (  # noqa: F401
+    HeatSpec,
+    correct_update_tree,
+    cohort_mean,
+    cohort_sum,
+)
+from repro.core.algorithms import (  # noqa: F401
+    ServerState,
+    make_server_algorithm,
+    SERVER_ALGORITHMS,
+)
+from repro.core.preconditioner import (  # noqa: F401
+    condition_number,
+    preconditioned_hessian,
+)

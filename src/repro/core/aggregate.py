@@ -1,0 +1,103 @@
+"""Pytree-aware aggregation with per-leaf heat semantics.
+
+A model's parameter tree mixes *feature-keyed* leaves (embedding tables, LM
+heads, per-expert FFN stacks) whose rows have individual heat counts, and
+*dense* leaves touched by every participating client. ``HeatSpec`` tags each
+leaf with the name of its feature space (or None for dense); the FedSubAvg
+correction is then a per-leaf broadcasted multiply — zero extra collectives
+when the leaf and its heat vector are co-sharded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.heat import heat_correction_factors
+from repro.sharding.logical import boxed_like, is_param, unbox
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class HeatSpec:
+    """Maps parameter-tree leaves to feature spaces.
+
+    ``leaf_spaces`` is a pytree with the same structure as the parameter tree;
+    each leaf is either ``None`` (dense parameter) or a tuple
+    ``(space_name, row_axis)`` saying: axis ``row_axis`` of this leaf is keyed
+    by feature space ``space_name`` (e.g. ("vocab", 0) for an embedding table
+    of shape (V, d), or ("expert", 0) for stacked expert weights (E, ...)).
+    """
+
+    leaf_spaces: Any
+
+    @staticmethod
+    def dense_like(params) -> "HeatSpec":
+        return HeatSpec(jax.tree.map(lambda _: None, params))
+
+
+def _broadcast_factor(factors: Array, leaf: Array, row_axis: int) -> Array:
+    shape = [1] * leaf.ndim
+    shape[row_axis] = leaf.shape[row_axis]
+    return factors.reshape(shape)
+
+
+def correct_update_tree(
+    update,
+    heat_spec: HeatSpec,
+    heat_counts: Dict[str, Array],
+    total: float,
+) -> Any:
+    """Apply the FedSubAvg correction ``N / n_m`` leaf-wise.
+
+    ``heat_counts[space]`` is the per-row count vector for that feature space.
+    Dense leaves pass through unchanged (their count is N by definition —
+    factor 1). This is Algorithm 1 line 9's scaling, vectorised over the tree.
+
+    Accepts boxed (Param) or plain trees; boxing is preserved.
+    """
+    boxed = any(is_param(l) for l in jax.tree.leaves(update, is_leaf=is_param))
+    plain = unbox(update) if boxed else update
+
+    def fix(leaf, space):
+        if space is None:
+            return leaf
+        name, axis = space
+        if name not in heat_counts:
+            return leaf          # no stats for this space -> factor 1
+        counts = heat_counts[name]
+        factors = heat_correction_factors(counts, total).astype(leaf.dtype)
+        return leaf * _broadcast_factor(factors, leaf, axis)
+
+    out = jax.tree.map(fix, plain, heat_spec.leaf_spaces, is_leaf=lambda x: x is None)
+    return boxed_like(out, update) if boxed else out
+
+
+def cohort_sum(deltas):
+    """Sum of per-client update trees stacked on axis 0."""
+    return jax.tree.map(lambda d: d.sum(axis=0), deltas)
+
+
+def cohort_mean(deltas):
+    return jax.tree.map(lambda d: d.mean(axis=0), deltas)
+
+
+def masked_cohort_mean(deltas, involvement):
+    """Mean over only the clients that involve each row (submodel semantics).
+
+    ``involvement``: (K, rows) 0/1 — client k touched row r. Used by the exact
+    (non-expectation) form of submodel averaging in tests: the average of the
+    local updates of the clients who involve the parameter.
+    """
+
+    def f(d):
+        # d: (K, rows, ...) ; involvement broadcast over trailing dims
+        inv = involvement.reshape(involvement.shape + (1,) * (d.ndim - 2))
+        num = (d * inv).sum(axis=0)
+        den = jnp.maximum(inv.sum(axis=0), 1.0)
+        return num / den
+
+    return jax.tree.map(f, deltas)

@@ -1,0 +1,112 @@
+"""Server-side federated optimization algorithms.
+
+The client side (local SGD, prox terms) lives in ``repro.federated.client``;
+this module owns what the cloud server does with the aggregated cohort update:
+
+    FedAvg     X <- X + eta * mean_i(Delta_i)
+    FedSubAvg  X_m <- X_m + eta * (N / n_m) * mean_i(Delta_i,m)        (Alg. 1 l.9)
+    FedProx    server-side identical to FedAvg (prox term is local)
+    Scaffold   the paper's server approximation (App. D.2, eq. 47):
+               Delta_glob <- (1 - K/N) Delta_glob + (K/N) mean_i(Delta_i)
+    FedAdam    server Adam over the pseudo-gradient -mean_i(Delta_i) (Reddi et al.)
+
+All are expressed as (init, apply) pairs over parameter pytrees so they jit and
+shard identically; FedSubAvg's correction is the only one that consults heat.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_add, tree_scale, tree_zeros_like
+from repro.configs.base import FedConfig
+from repro.core.aggregate import HeatSpec, correct_update_tree
+
+
+class ServerState(NamedTuple):
+    params: Any
+    opt: Any                 # algorithm-specific slots (momenta, control delta)
+    rounds: jax.Array        # scalar int32
+
+
+@dataclass(frozen=True)
+class ServerAlgorithm:
+    name: str
+    init: Callable[[Any], ServerState]
+    apply: Callable[[ServerState, Any], ServerState]   # (state, cohort_mean_delta)
+
+
+def _base_init(params) -> ServerState:
+    return ServerState(params=params, opt=(), rounds=jnp.zeros((), jnp.int32))
+
+
+def make_server_algorithm(
+    cfg: FedConfig,
+    heat_spec: Optional[HeatSpec] = None,
+    heat_counts: Optional[Dict[str, jax.Array]] = None,
+    total: Optional[float] = None,
+) -> ServerAlgorithm:
+    name = cfg.algorithm
+    eta = cfg.server_lr
+
+    if name in ("fedavg", "fedprox", "central"):
+
+        def apply(state: ServerState, delta) -> ServerState:
+            new = tree_add(state.params, tree_scale(delta, eta))
+            return ServerState(new, state.opt, state.rounds + 1)
+
+        return ServerAlgorithm(name, _base_init, apply)
+
+    if name == "fedsubavg":
+        if heat_spec is None or heat_counts is None or total is None:
+            raise ValueError("fedsubavg requires heat_spec, heat_counts and total N")
+
+        def apply(state: ServerState, delta) -> ServerState:
+            corrected = correct_update_tree(delta, heat_spec, heat_counts, total)
+            new = tree_add(state.params, tree_scale(corrected, eta))
+            return ServerState(new, state.opt, state.rounds + 1)
+
+        return ServerAlgorithm(name, _base_init, apply)
+
+    if name == "scaffold":
+        frac = cfg.clients_per_round / cfg.num_clients
+
+        def init(params) -> ServerState:
+            return ServerState(params, tree_zeros_like(params), jnp.zeros((), jnp.int32))
+
+        def apply(state: ServerState, delta) -> ServerState:
+            momentum = jax.tree.map(
+                lambda g, d: (1.0 - frac) * g + frac * d, state.opt, delta
+            )
+            new = tree_add(state.params, tree_scale(momentum, eta))
+            return ServerState(new, momentum, state.rounds + 1)
+
+        return ServerAlgorithm(name, init, apply)
+
+    if name == "fedadam":
+        b1, b2, eps = cfg.server_beta1, cfg.server_beta2, cfg.server_eps
+
+        def init(params) -> ServerState:
+            opt = (tree_zeros_like(params), tree_zeros_like(params))
+            return ServerState(params, opt, jnp.zeros((), jnp.int32))
+
+        def apply(state: ServerState, delta) -> ServerState:
+            m0, v0 = state.opt
+            t = state.rounds + 1
+            m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d, m0, delta)
+            v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * d * d, v0, delta)
+            tf = t.astype(jnp.float32)
+            mh = tree_scale(m, 1.0 / (1 - b1**tf))
+            vh = tree_scale(v, 1.0 / (1 - b2**tf))
+            step = jax.tree.map(lambda m_, v_: eta * m_ / (jnp.sqrt(v_) + eps), mh, vh)
+            return ServerState(tree_add(state.params, step), (m, v), t)
+
+        return ServerAlgorithm(name, init, apply)
+
+    raise ValueError(f"unknown server algorithm: {name!r}")
+
+
+SERVER_ALGORITHMS = ("fedavg", "fedprox", "scaffold", "fedadam", "fedsubavg", "central")

@@ -1,0 +1,149 @@
+"""Feature/parameter heat statistics (paper §2) and private estimation (App. F).
+
+"Heat" of a feature m is ``n_m``: the number of clients whose local data involve
+m. The paper's correction multiplies parameter m's aggregated update by
+``N / n_m`` (weighted generalisation: ``sum_i w_i / sum_{j: m in S(j)} w_j``,
+App. D.4). Heat is *static* over training — computed once from dataset
+statistics, optionally under local differential privacy via randomized response
+or exactly via secure aggregation (App. F).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Exact heat
+# ---------------------------------------------------------------------------
+
+
+def client_indicator(feature_ids, num_features: int) -> np.ndarray:
+    """0/1 vector: does this client involve feature m? (the App. F vector)."""
+    v = np.zeros((num_features,), dtype=np.int64)
+    ids = np.asarray(feature_ids).reshape(-1)
+    ids = ids[(ids >= 0) & (ids < num_features)]
+    v[np.unique(ids)] = 1
+    return v
+
+
+def compute_heat_exact(
+    client_feature_ids: Sequence, num_features: int, weights: Optional[Sequence[float]] = None
+) -> np.ndarray:
+    """n_m for every feature; weighted variant returns sum of involving weights."""
+    out = np.zeros((num_features,), dtype=np.float64)
+    for i, ids in enumerate(client_feature_ids):
+        ind = client_indicator(ids, num_features)
+        w = 1.0 if weights is None else float(weights[i])
+        out += w * ind
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Private estimation (Appendix F)
+# ---------------------------------------------------------------------------
+
+
+def estimate_heat_secure_agg(indicators: np.ndarray, rng: Optional[np.random.Generator] = None,
+                             modulus: int = 1 << 32) -> np.ndarray:
+    """Secure-aggregation simulation: pairwise additive masks that cancel.
+
+    Each client i adds masks ``m_{ij}`` for j>i and subtracts ``m_{ji}`` for
+    j<i (mod 2^32); the server sums the masked vectors and the masks cancel,
+    recovering the exact heat without seeing any individual indicator. This
+    simulates the Bonawitz et al. protocol's arithmetic; the crypto key
+    agreement is out of scope (there is no adversary inside a simulation).
+    """
+    rng = rng or np.random.default_rng(0)
+    n, m = indicators.shape
+    masked = indicators.astype(np.uint64) % modulus
+    # pairwise masks: draw one matrix of per-pair seeds lazily per pair row to
+    # keep memory at O(n * m) rather than O(n^2 * m)
+    acc = np.zeros((m,), dtype=np.uint64)
+    for i in range(n):
+        vec = masked[i].copy()
+        # every client re-derives the same pair mask from a shared seed;
+        # here: seed = (min(i,j), max(i,j))
+        for j in range(n):
+            if j == i:
+                continue
+            pair_rng = np.random.default_rng(hash((min(i, j), max(i, j))) % (1 << 63))
+            mask = pair_rng.integers(0, modulus, size=m, dtype=np.uint64)
+            if i < j:
+                vec = (vec + mask) % modulus
+            else:
+                vec = (vec - mask) % modulus
+        acc = (acc + vec) % modulus
+    return (acc % modulus).astype(np.float64)
+
+
+def estimate_heat_randomized_response(
+    indicators: np.ndarray, flip_prob: float, rng: Optional[np.random.Generator] = None
+) -> np.ndarray:
+    """Unbiased heat estimate under randomized response (Warner 1965).
+
+    Each client reports its true bit with prob ``1 - p`` and the flipped bit
+    with prob ``p``. If ``c`` is the count of reported ones over N clients,
+    ``(c - p*N) / (1 - 2p)`` is unbiased for the true count.
+    """
+    assert 0.0 <= flip_prob < 0.5
+    rng = rng or np.random.default_rng(0)
+    n, m = indicators.shape
+    flips = rng.random((n, m)) < flip_prob
+    reported = np.where(flips, 1 - indicators, indicators)
+    c = reported.sum(axis=0).astype(np.float64)
+    return (c - flip_prob * n) / (1.0 - 2.0 * flip_prob)
+
+
+# ---------------------------------------------------------------------------
+# Correction factors
+# ---------------------------------------------------------------------------
+
+
+def heat_correction_factors(counts, total, min_count: float = 1.0) -> Array:
+    """FedSubAvg per-row correction ``N / n_m``.
+
+    Rows no client involves (n_m = 0) receive factor 0 — they never get a
+    non-zero update anyway, and 0 avoids inf propagation. Estimated heat
+    (randomized response) can dip below 1; it is clamped to ``min_count``.
+    """
+    counts = jnp.asarray(counts, dtype=jnp.float32)
+    safe = jnp.maximum(counts, min_count)
+    factors = jnp.asarray(total, jnp.float32) / safe
+    return jnp.where(counts > 0, factors, 0.0)
+
+
+@dataclass(frozen=True)
+class HeatStats:
+    """Container binding a feature space to its heat counts."""
+
+    counts: np.ndarray       # (num_features,) float
+    total: float             # N (or sum of weights in the weighted case)
+    name: str = "vocab"
+
+    @property
+    def n_min(self) -> float:
+        nz = self.counts[self.counts > 0]
+        return float(nz.min()) if nz.size else 0.0
+
+    @property
+    def n_max(self) -> float:
+        return float(self.counts.max()) if self.counts.size else 0.0
+
+    def dispersion(self) -> float:
+        """Parameter heat dispersion n_max / n_min (paper §2)."""
+        nmin = self.n_min
+        return float("inf") if nmin == 0 else self.n_max / nmin
+
+    def correction(self) -> Array:
+        return heat_correction_factors(self.counts, self.total)
+
+    def coverage(self) -> float:
+        """Fraction of features involved by at least one client."""
+        return float((self.counts > 0).mean())

@@ -1,0 +1,44 @@
+"""Conditioning analysis utilities (paper §4, Theorems 1-2).
+
+FedSubAvg is a static diagonal preconditioner ``D = diag(N/n_m)``; optimizing
+``f`` with FedSubAvg approximates GD on ``f_hat(Xh) = f(D^{1/2} Xh)``, whose
+Hessian is ``D^{1/2} H D^{1/2}``. These helpers measure both condition numbers
+on small problems so the theorems can be verified empirically (tests +
+``benchmarks/bench_conditioning.py``).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def condition_number(h: jax.Array, eps: float = 0.0) -> float:
+    """kappa(H) = sigma_max / sigma_min via SVD (H need not be PSD)."""
+    s = jnp.linalg.svd(h, compute_uv=False)
+    smin = jnp.maximum(s[-1], eps)
+    return float(s[0] / smin)
+
+
+def preconditioned_hessian(h: jax.Array, counts, total: float) -> jax.Array:
+    """D^{1/2} H D^{1/2} with D = diag(total / counts); zero-count rows get 0."""
+    counts = jnp.asarray(counts, jnp.float32)
+    d_half = jnp.where(counts > 0, jnp.sqrt(total / jnp.maximum(counts, 1.0)), 0.0)
+    return h * d_half[:, None] * d_half[None, :]
+
+
+def hessian_of(loss: Callable, x: jax.Array) -> jax.Array:
+    return jax.hessian(loss)(x)
+
+
+def measured_dispersion_bound(h: jax.Array, counts, rho2: float) -> float:
+    """Theorem-1 floor: kappa(H) >= n_max (rho1 - alpha(rho1+rho2)) / (n_min rho2).
+
+    Returns n_max/n_min, the Theta() driver of the bound, for comparison
+    against the measured condition number.
+    """
+    c = np.asarray(counts, dtype=np.float64)
+    nz = c[c > 0]
+    return float(nz.max() / nz.min()) if nz.size else float("inf")

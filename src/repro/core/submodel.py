@@ -1,0 +1,74 @@
+"""Submodel extraction and alignment (paper §2, "Model Structure and Submodel").
+
+A client's submodel is the dense layers plus the embedding rows for its local
+feature ids. These helpers implement the download/upload key-value view:
+
+    download:  rows = table[ids]                      (gather)
+    upload:    table_update[ids] += row_updates       (scatter-add, aligned)
+
+Index sets are fixed-size padded arrays (jit-friendly); padding uses id = -1
+which gathers row 0 but is masked out of scatters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class IndexSet(NamedTuple):
+    ids: Array      # (max_ids,) int32, padded with -1
+    mask: Array     # (max_ids,) float32 1.0 for real ids
+
+
+def index_set_from_tokens(tokens: Array, max_ids: int) -> IndexSet:
+    """Client-side S(i) extraction: unique feature ids in the local data.
+
+    jnp.unique is not jittable with dynamic size, so we use the standard
+    fixed-size trick: sort + compare-neighbours, then pack valid uniques
+    leftwards with a scatter over their rank.
+    """
+    flat = jnp.sort(tokens.reshape(-1))
+    first = jnp.concatenate([jnp.ones((1,), bool), flat[1:] != flat[:-1]])
+    rank = jnp.cumsum(first) - 1                       # position among uniques
+    ids = jnp.full((max_ids,), -1, dtype=jnp.int32)
+    ok = first & (rank < max_ids)
+    ids = ids.at[jnp.where(ok, rank, max_ids)].set(
+        jnp.where(ok, flat.astype(jnp.int32), -1), mode="drop"
+    )
+    mask = (ids >= 0).astype(jnp.float32)
+    return IndexSet(ids=ids, mask=mask)
+
+
+def gather_rows(table: Array, index_set: IndexSet) -> Array:
+    """Download step: fetch the submodel's embedding rows (padding -> zeros)."""
+    rows = table[jnp.maximum(index_set.ids, 0)]
+    return rows * index_set.mask[:, None].astype(rows.dtype)
+
+
+def scatter_row_updates(num_rows: int, index_set: IndexSet, row_updates: Array) -> Array:
+    """Upload step: align row updates back into full-table coordinates."""
+    upd = row_updates * index_set.mask[:, None].astype(row_updates.dtype)
+    out = jnp.zeros((num_rows, row_updates.shape[-1]), dtype=row_updates.dtype)
+    return out.at[jnp.maximum(index_set.ids, 0)].add(upd, mode="drop") * 1.0
+
+
+def involvement_matrix(ids_batch: Array, num_rows: int) -> Array:
+    """(K, num_rows) 0/1: which cohort client involves which row."""
+
+    def one(ids):
+        v = jnp.zeros((num_rows,), jnp.float32)
+        return v.at[jnp.maximum(ids, 0)].max(jnp.where(ids >= 0, 1.0, 0.0), mode="drop")
+
+    return jax.vmap(one)(ids_batch)
+
+
+def count_token_rows(tokens: Array, num_rows: int) -> Array:
+    """Per-row token occurrence counts for a batch (not heat; used by kernels)."""
+    flat = tokens.reshape(-1)
+    out = jnp.zeros((num_rows,), jnp.float32)
+    return out.at[jnp.maximum(flat, 0)].add(jnp.where(flat >= 0, 1.0, 0.0), mode="drop")

@@ -1,0 +1,9 @@
+from repro.data.synthetic import (  # noqa: F401
+    FederatedDataset,
+    make_movielens_like,
+    make_sent140_like,
+    make_amazon_like,
+    make_lm_federated,
+    DATASETS,
+)
+from repro.data.batching import sample_cohort_batch, pooled_batches  # noqa: F401

@@ -1,0 +1,47 @@
+"""Cohort batching: turn a FederatedDataset + sampled client ids into the
+stacked minibatch tensors the jitted round step consumes.
+
+For a round with K clients, I local iterations and local batch B, the cohort
+batch has leaves (K, I, B, ...): client k's I minibatches sampled (with
+replacement, as in the paper's mini-batch SGD) from its local data.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import FederatedDataset
+
+
+def sample_cohort_batch(ds: FederatedDataset, client_ids: np.ndarray,
+                        local_iters: int, local_batch: int,
+                        rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    k = len(client_ids)
+    out = {key: [] for key in ds.client_data}
+    out["sample_mask"] = []
+    for c in client_ids:
+        n = int(ds.sample_counts[c])
+        idx = rng.integers(0, max(n, 1), size=(local_iters, local_batch))
+        for key, arr in ds.client_data.items():
+            out[key].append(arr[c][idx])
+        out["sample_mask"].append(np.ones((local_iters, local_batch), np.float32)
+                                  * (n > 0))
+    return {key: np.stack(v) for key, v in out.items()}
+
+
+def pooled_batches(ds: FederatedDataset, iters: int, batch: int,
+                   rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    """CentralSGD batches: sample from the pooled training set (I, B, ...)."""
+    # flatten valid samples
+    valid = []
+    for c in range(ds.num_clients):
+        n = int(ds.sample_counts[c])
+        valid.extend((c, j) for j in range(n))
+    valid = np.array(valid)
+    pick = valid[rng.integers(0, len(valid), size=iters * batch)]
+    out = {}
+    for key, arr in ds.client_data.items():
+        out[key] = arr[pick[:, 0], pick[:, 1]].reshape(iters, batch, *arr.shape[2:])
+    out["sample_mask"] = np.ones((iters, batch), np.float32)
+    return out

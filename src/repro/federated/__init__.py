@@ -1,0 +1,3 @@
+from repro.federated.client import make_local_trainer  # noqa: F401
+from repro.federated.server import FederatedTrainer  # noqa: F401
+from repro.federated.simulation import heat_spec_from_axes, make_round_step  # noqa: F401

@@ -1,0 +1,52 @@
+"""Client-side local training (Algorithm 1 lines 12-18).
+
+A client downloads the (sub)model, runs ``I`` iterations of mini-batch SGD
+and uploads the delta. Submodel semantics are automatic under autodiff: rows
+of feature-keyed tables the client never touches get exactly-zero gradient,
+so its delta is supported on S(i) — the paper's "the local gradient of
+X_{S\\S(i)} will always be zero".
+
+Algorithm hooks:
+    fedprox  — adds (mu/2)||x - x_global||^2 to the local objective
+    scaffold — paper's App. D.2 server-side approximation needs no client state
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.pytree import tree_add, tree_dot, tree_scale, tree_sub
+from repro.configs.base import FedConfig
+
+
+def make_local_trainer(loss_fn: Callable, cfg: FedConfig) -> Callable:
+    """Returns local_train(global_params, client_batches) -> delta.
+
+    ``client_batches`` leaves are (I, B, ...): the client's I minibatches.
+    """
+    prox = cfg.prox_mu if cfg.algorithm == "fedprox" else 0.0
+
+    def local_train(global_params, client_batches):
+        def objective(p, batch):
+            l = loss_fn(p, batch)
+            if prox > 0.0:
+                diff = tree_sub(p, global_params)
+                l = l + 0.5 * prox * tree_dot(diff, diff)
+            return l
+
+        def step(p, batch):
+            g = jax.grad(objective)(p, batch)
+            return tree_add(p, tree_scale(g, -cfg.lr)), None
+
+        p_final, _ = lax.scan(step, global_params, client_batches)
+        return tree_sub(p_final, global_params)
+
+    return local_train
+
+
+def cohort_deltas(local_train: Callable, global_params, cohort_batches):
+    """vmap local training over the cohort; leaves (K, I, B, ...) -> (K, ...)."""
+    return jax.vmap(local_train, in_axes=(None, 0))(global_params, cohort_batches)

@@ -1,0 +1,34 @@
+"""Evaluation metrics: binary accuracy and AUC (rank statistic, as the paper
+plots test AUC for the CTR tasks)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def auc(labels: np.ndarray, scores: np.ndarray) -> float:
+    """Mann-Whitney AUC; 0.5 when degenerate."""
+    labels = np.asarray(labels).astype(bool)
+    scores = np.asarray(scores, dtype=np.float64)
+    pos, neg = scores[labels], scores[~labels]
+    if len(pos) == 0 or len(neg) == 0:
+        return 0.5
+    order = np.argsort(np.concatenate([pos, neg]), kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(order) + 1)
+    # average ranks for ties
+    allv = np.concatenate([pos, neg])
+    sortv = allv[order]
+    i = 0
+    while i < len(sortv):
+        j = i
+        while j + 1 < len(sortv) and sortv[j + 1] == sortv[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = ranks[order[i:j + 1]].mean()
+        i = j + 1
+    r_pos = ranks[: len(pos)].sum()
+    return float((r_pos - len(pos) * (len(pos) + 1) / 2) / (len(pos) * len(neg)))
+
+
+def accuracy(labels: np.ndarray, scores: np.ndarray) -> float:
+    return float(((scores > 0) == (np.asarray(labels) > 0.5)).mean())

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+heat_scatter    -- FedSubAvg's fused aggregate+correct embedding update
+flash_attention -- causal GQA flash attention (+ sliding window)
+flash_decode    -- single-token decode against long KV caches
+
+Validated in interpret mode on CPU against repro.kernels.ref oracles.
+"""
+from repro.kernels.ops import flash_attention, flash_decode, heat_scatter  # noqa: F401

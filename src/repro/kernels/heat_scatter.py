@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused FedSubAvg embedding-update aggregation.
+
+The paper's server-side hot path: cohort token-level embedding gradients
+(T, D) with token ids (T,) must be (a) scatter-added into vocab rows and
+(b) scaled by the heat correction ``N / n_v`` (Algorithm 1 line 9).
+
+GPU implementations scatter with atomics; the TPU-native form is a blocked
+one-hot matmul — for each (vocab_tile x token_tile) grid cell, build the
+(V_BLK, T_BLK) one-hot match matrix in VREGs and accumulate
+``one_hot @ grads_block`` on the MXU into the VMEM-resident output tile. The
+heat scaling fuses into the final token-block iteration, so the corrected
+update never round-trips through HBM uncorrected.
+
+Grid: (vocab_tiles, token_tiles); token dim is the TPU-sequential minor grid
+axis, so accumulation into ``out_ref`` across token tiles is well-defined.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_V_BLK = 512
+DEFAULT_T_BLK = 1024
+
+
+def _kernel(ids_ref, grads_ref, heat_ref, out_ref, *, total: float, v_blk: int,
+            t_blk: int, nt: int):
+    iv = pl.program_id(0)
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]                                   # (T_BLK,)
+    base = iv * v_blk
+    rows = base + jax.lax.broadcasted_iota(jnp.int32, (v_blk, t_blk), 0)
+    onehot = (rows == ids[None, :]).astype(jnp.float32)  # (V_BLK, T_BLK)
+    grads = grads_ref[...].astype(jnp.float32)           # (T_BLK, D)
+    out_ref[...] += jnp.dot(onehot, grads, preferred_element_type=jnp.float32)
+
+    @pl.when(it == nt - 1)
+    def _finalize():
+        heat = heat_ref[...].astype(jnp.float32)         # (V_BLK,)
+        factor = jnp.where(heat > 0, total / jnp.maximum(heat, 1.0), 0.0)
+        out_ref[...] *= factor[:, None]
+
+
+def heat_scatter(ids, grads, heat, total: float, vocab: int, *,
+                 v_blk: int = DEFAULT_V_BLK, t_blk: int = DEFAULT_T_BLK,
+                 interpret: bool = True):
+    """ids: (T,) int32 (-1 pads); grads: (T, D); heat: (vocab,).
+
+    Returns the corrected dense update (vocab, D) float32.
+    """
+    t, d = grads.shape
+    v_blk = min(v_blk, vocab)
+    t_blk = min(t_blk, t)
+    assert vocab % v_blk == 0, (vocab, v_blk)
+    assert t % t_blk == 0, (t, t_blk)
+    nv, nt = vocab // v_blk, t // t_blk
+
+    # padding ids (-1) match no row in any tile, so they drop out naturally
+    return pl.pallas_call(
+        functools.partial(_kernel, total=float(total), v_blk=v_blk, t_blk=t_blk, nt=nt),
+        grid=(nv, nt),
+        in_specs=[
+            pl.BlockSpec((t_blk,), lambda iv, it: (it,)),
+            pl.BlockSpec((t_blk, d), lambda iv, it: (it, 0)),
+            pl.BlockSpec((v_blk,), lambda iv, it: (iv,)),
+        ],
+        out_specs=pl.BlockSpec((v_blk, d), lambda iv, it: (iv, 0)),
+        out_shape=jax.ShapeDtypeStruct((vocab, d), jnp.float32),
+        interpret=interpret,
+    )(ids, grads, heat)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here is the mathematical definition the kernels must match
+bit-for-bit (up to accumulation-order fp tolerance); tests sweep shapes and
+dtypes against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import decode_attention as _decode_attention
+from repro.models.layers import mea_attention as _mea_attention
+
+
+def heat_scatter_ref(ids, grads, heat, total: float, vocab: int):
+    """FedSubAvg embedding aggregation: scatter-add token grads into vocab rows
+    and scale row v by total/heat[v] (0 where heat[v] == 0).
+
+    ids: (T,) int32 in [0, vocab) (-1 = padding); grads: (T, D).
+    Returns (vocab, D) float32.
+    """
+    d = grads.shape[-1]
+    valid = (ids >= 0).astype(grads.dtype)
+    out = jnp.zeros((vocab, d), jnp.float32)
+    out = out.at[jnp.maximum(ids, 0)].add((grads * valid[:, None]).astype(jnp.float32),
+                                          mode="drop")
+    safe = jnp.maximum(heat, 1.0)
+    factor = jnp.where(heat > 0, total / safe, 0.0)
+    return out * factor[:, None]
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). GQA, optional sliding window."""
+    return _mea_attention(q, k, v, causal=causal, window=window,
+                          query_chunk=min(q.shape[1], 512),
+                          kv_chunk=min(k.shape[1], 512))
+
+
+def flash_decode_ref(q, k_cache, v_cache, k_positions, q_position, *, window=0):
+    """q: (B, H, hd); caches: (B, KV, S, hd)."""
+    return _decode_attention(q, k_cache, v_cache, k_positions, q_position,
+                             window=window)

@@ -1,0 +1,164 @@
+"""Optimized-HLO analysis: collective inventory with loop-aware multipliers.
+
+``compiled.cost_analysis()`` gives FLOPs/bytes but no per-collective detail,
+and it counts while-loop bodies ONCE (verified empirically: a 10-iteration
+scan of a 128x128 matmul reports ~1 matmul of FLOPs). This module parses the
+optimized HLO text into its computation graph, finds every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+incl. async start forms), and multiplies ops inside while bodies by the
+loop's trip count when XLA recorded one (``known_trip_count``/``trip_count``).
+Unresolvable trips are reported with multiplier 1 and flagged so the roofline
+layer can apply model-structure corrections (layer counts, chunk counts).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in a string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    op: str
+    computation: str
+    out_bytes: int
+    multiplier: int
+    resolved: bool
+
+
+@dataclass
+class HloReport:
+    collectives: List[CollectiveOp] = field(default_factory=list)
+    unresolved_loops: int = 0
+
+    def total_bytes(self) -> int:
+        return sum(c.out_bytes * c.multiplier for c in self.collectives)
+
+    def by_op(self) -> Dict[str, int]:
+        out: Dict[str, int] = defaultdict(int)
+        for c in self.collectives:
+            out[c.op] += c.out_bytes * c.multiplier
+        return dict(out)
+
+    def summary(self) -> Dict:
+        return {
+            "total_collective_bytes": self.total_bytes(),
+            "by_op": self.by_op(),
+            "num_ops": len(self.collectives),
+            "unresolved_loops": self.unresolved_loops,
+        }
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        # computation headers look like `%name (args...) -> type {` (args may
+        # contain nested parens for tuples); instruction lines contain " = "
+        m = None
+        if " = " not in stripped:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$", stripped)
+        if m and not stripped.startswith("ROOT"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(stripped)
+    return comps
+
+
+_CALLEE_RE = re.compile(
+    r"(?:body|to_apply|calls)=%?([\w\.\-]+)"
+    r"|branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)|trip_count[=:"\s]+(\d+)')
+
+
+def analyze_hlo(text: str, entry_hint: Optional[str] = None) -> HloReport:
+    comps = _split_computations(text)
+    # find entry computation name
+    entry = entry_hint
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+    if m:
+        entry = m.group(1)
+    if entry not in comps:
+        # fall back: the computation containing no callers
+        entry = next(iter(comps)) if comps else None
+
+    report = HloReport()
+    if entry is None:
+        return report
+
+    # walk the call graph propagating multipliers
+    seen: Dict[str, int] = {}
+
+    def walk(name: str, mult: int, resolved: bool):
+        if name not in comps:
+            return
+        key = name
+        if key in seen and seen[key] >= mult:
+            return
+        seen[key] = mult
+        for line in comps[name]:
+            for col in _COLLECTIVES:
+                if re.search(rf"\b{col}(?:-start)?\(", line):
+                    # output shape: text before " = " holds result shape
+                    head = line.split(" = ")[-1] if " = " in line else line
+                    shape_part = head.split(col)[0]
+                    report.collectives.append(CollectiveOp(
+                        op=col, computation=name,
+                        out_bytes=_shape_bytes(shape_part),
+                        multiplier=mult, resolved=resolved))
+                    break
+            is_while = re.search(r"\bwhile\(", line) is not None
+            trip = None
+            if is_while:
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1) or tm.group(2))
+            for cm in _CALLEE_RE.finditer(line):
+                if cm.group(1):
+                    callees = [cm.group(1)]
+                else:
+                    callees = [c.strip().lstrip("%") for c in cm.group(2).split(",")]
+                for callee in callees:
+                    if is_while:
+                        if trip is None:
+                            report.unresolved_loops += 1
+                            walk(callee, mult, False)
+                        else:
+                            walk(callee, mult * trip, resolved)
+                    else:
+                        walk(callee, mult, resolved)
+
+    walk(entry, 1, True)
+    return report

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A v5e pod here is 256 chips as (data=16, model=16); the multi-pod config is
+2 pods = 512 chips with a leading "pod" axis that extends data parallelism
+across the inter-pod links (DCN in practice; the dry-run only needs the axis
+to shard). Defined as functions so importing this module never touches jax
+device state — the dry-run sets XLA_FLAGS *before* any jax initialisation.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over the real host devices (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+HW = {
+    # TPU v5e per-chip constants used by the roofline analysis
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bandwidth": 819e9,        # B/s
+    "ici_bandwidth": 50e9,         # B/s per link
+    "hbm_bytes": 16 * 2**30,
+}

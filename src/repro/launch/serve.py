@@ -1,0 +1,75 @@
+"""Serving launcher: batched prefill + decode loop for any architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral_8x22b \
+        --scale tiny --batch 4 --prompt 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import SCALES
+from repro.models import build_model
+from repro.sharding.context import set_rules
+from repro.sharding.rules import make_rules
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral_8x22b")
+    ap.add_argument("--scale", default="tiny", choices=list(SCALES))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if SCALES[args.scale]:
+        over = dict(SCALES[args.scale])
+        if cfg.family == "ssm":
+            over.pop("d_ff", None)
+        cfg = cfg.replace(**over)
+
+    mesh = make_host_mesh()
+    set_rules(mesh, make_rules("decode"))
+
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    b = args.batch
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (b, args.prompt),
+                                          0, cfg.vocab_size)}
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = 0.02 * jnp.ones((b, cfg.encoder_seq, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+    if cfg.frontend == "vision_patches":
+        batch["patch_embeds"] = 0.02 * jnp.ones((b, cfg.num_patches, cfg.d_model),
+                                                jnp.dtype(cfg.dtype))
+    if cfg.mrope:
+        batch["mrope_pos"] = jnp.broadcast_to(jnp.arange(args.prompt),
+                                              (3, b, args.prompt)).astype(jnp.int32)
+
+    cache = api.init_cache(b, args.prompt + args.gen)
+    logits, cache = jax.jit(api.prefill)(params, batch, cache)
+    decode = jax.jit(api.decode_step)
+    t0 = time.time()
+    toks = []
+    for i in range(args.gen):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        db = {"tokens": nxt}
+        if cfg.mrope:
+            db["mrope_pos"] = jnp.full((3, b, 1), args.prompt + i, jnp.int32)
+        logits, cache = decode(params, cache, db)
+        toks.append(nxt)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={b} gen={args.gen} "
+          f"{dt/args.gen*1e3:.1f} ms/token ({b*args.gen/dt:.1f} tok/s)")
+    print("sample:", jnp.stack(toks, 1)[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Sharding assembly for dry-run / launch entry points.
+
+Turns (mesh, rules, abstract values) into NamedSharding trees / sharded
+ShapeDtypeStructs for parameters, batches, and the per-family cache types.
+Non-divisible dimensions fall back to replication (e.g. whisper's 51866
+vocab, the 1500-frame cross-attn cache, batch=1 in long_500k).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import KVCache
+from repro.models.whisper import WhisperCache
+from repro.models.xlstm_model import XLSTMCache
+from repro.models.zamba import ZambaCache
+from repro.sharding.context import spec_for_axes
+from repro.sharding.logical import Param, is_param
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def _fit_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop partitioning on dims the shape cannot divide (replicate instead)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    fixed = []
+    for dim, names in zip(shape, parts):
+        if names is not None and dim % _axis_size(mesh, names) != 0:
+            names = None
+        fixed.append(names)
+    return P(*fixed)
+
+
+def sharded_sds(mesh: Mesh, value, spec: P) -> jax.ShapeDtypeStruct:
+    spec = _fit_spec(mesh, spec, value.shape)
+    return jax.ShapeDtypeStruct(value.shape, value.dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def shard_params_sds(mesh: Mesh, rules: Dict, boxed_abstract) -> Any:
+    """Boxed abstract params -> boxed SDS with shardings attached."""
+
+    def one(p):
+        if not is_param(p):
+            return sharded_sds(mesh, p, P())
+        spec = spec_for_axes(p.axes, rules)
+        return Param(sharded_sds(mesh, p.value, spec), p.axes)
+
+    return jax.tree.map(one, boxed_abstract, is_leaf=is_param)
+
+
+def batch_spec_for(key: str, ndim: int, batch_axes) -> P:
+    if key.startswith("heat_vocab"):
+        return P("model")
+    if key.startswith("heat_"):
+        return P(None)
+    if key == "mrope_pos":                       # (3, B, S)
+        return P(None, batch_axes, *([None] * (ndim - 2)))
+    # tokens/labels/mask/frames/patch_embeds: batch-major
+    return P(batch_axes, *([None] * (ndim - 1)))
+
+
+def shard_batch_sds(mesh: Mesh, rules: Dict, batch_specs: Dict) -> Dict:
+    batch_axes = rules.get("batch")
+    if batch_axes is not None and len(batch_axes) == 1:
+        batch_axes = batch_axes[0]
+    elif batch_axes is not None:
+        batch_axes = tuple(batch_axes)
+    out = {}
+    for k, v in batch_specs.items():
+        out[k] = sharded_sds(mesh, v, batch_spec_for(k, len(v.shape), batch_axes))
+    return out
+
+
+def shard_cache_sds(mesh: Mesh, rules: Dict, cache) -> Any:
+    """Cache tree -> SDS tree with shardings. Handles every cache family."""
+    batch_axes = rules.get("batch")
+    ba = batch_axes[0] if (batch_axes and len(batch_axes) == 1) else \
+        (tuple(batch_axes) if batch_axes else None)
+    kv_seq = rules.get("kv_seq")
+    kv_seq = kv_seq[0] if kv_seq else None
+
+    def kv_spec(x):      # (L/sites, B, KV, S, hd)
+        return sharded_sds(mesh, x, P(None, ba, None, kv_seq, None))
+
+    if isinstance(cache, KVCache):
+        return KVCache(kv_spec(cache.k), kv_spec(cache.v),
+                       sharded_sds(mesh, cache.pos, P()))
+    if isinstance(cache, WhisperCache):
+        return WhisperCache(kv_spec(cache.k), kv_spec(cache.v),
+                            kv_spec(cache.ck), kv_spec(cache.cv),
+                            sharded_sds(mesh, cache.pos, P()))
+    if isinstance(cache, ZambaCache):
+        return ZambaCache(
+            sharded_sds(mesh, cache.ssm_state, P(None, ba, "model", None, None)),
+            sharded_sds(mesh, cache.conv_state, P(None, ba, None, "model")),
+            kv_spec(cache.k), kv_spec(cache.v),
+            sharded_sds(mesh, cache.pos, P()),
+        )
+    if isinstance(cache, XLSTMCache):
+        def st(x, spec):
+            return sharded_sds(mesh, x, spec)
+        m_states = tuple(
+            type(s)(st(s.c, P(None, ba, None, "model", None)),
+                    st(s.n, P(None, ba, None, "model")),
+                    st(s.m, P(None, ba, None)))
+            for s in cache.m_states)
+        s_states = tuple(
+            type(s)(st(s.c, P(None, ba, "model")), st(s.n, P(None, ba, "model")),
+                    st(s.h, P(None, ba, "model")), st(s.m, P(None, ba, "model")))
+            for s in cache.s_states)
+        return XLSTMCache(m_states, s_states, sharded_sds(mesh, cache.pos, P()))
+    raise TypeError(type(cache))

@@ -1,0 +1,136 @@
+"""Uniform model API over the zoo.
+
+``build_model(cfg)`` returns a ``ModelApi`` whose functions have identical
+signatures across families, so the federated runtime, the serving path and
+the dry-run treat every architecture the same way:
+
+    loss(params, batch)                    -> scalar        (train shapes)
+    prefill(params, batch, cache)          -> (logits, cache)
+    decode_step(params, cache, batch)      -> (logits, cache)
+    input_specs(shape_name)                -> batch dict of ShapeDtypeStruct
+
+``abstract_params()`` builds the parameter tree as ShapeDtypeStructs — the
+only way a 123B config exists on this host.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models import xlstm_model as XM
+from repro.models import zamba as Z
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[[Array], Any]
+    abstract_params: Callable[[], Any]
+    loss: Callable[[Any, Dict], Array]
+    prefill: Callable[[Any, Dict, Any], Any]
+    decode_step: Callable[[Any, Any, Dict], Any]
+    init_cache: Callable[..., Any]
+    input_specs: Callable[[str], Dict]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _common_specs(cfg: ModelConfig, sc: ShapeConfig, kind: str) -> Dict:
+    b, s = sc.global_batch, sc.seq_len
+    emb_dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, Any] = {}
+    if kind == "decode":
+        specs["tokens"] = _sds((b,), jnp.int32)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    if kind == "train":
+        specs["labels"] = _sds((b, s), jnp.int32)
+        specs["mask"] = _sds((b, s), jnp.float32)
+    if cfg.frontend == "vision_patches" and kind != "decode":
+        specs["patch_embeds"] = _sds((b, cfg.num_patches, cfg.d_model), emb_dt)
+    if cfg.frontend == "audio_frames":
+        specs["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), emb_dt)
+    if cfg.mrope:
+        seq = 1 if kind == "decode" else s
+        specs["mrope_pos"] = _sds((3, b, seq), jnp.int32)
+    if kind == "train":
+        # static heat statistics consumed by the FedSubAvg correction
+        specs["heat_vocab"] = _sds((cfg.vocab_size,), jnp.float32)
+        if cfg.is_moe:
+            specs["heat_expert"] = _sds((cfg.num_experts,), jnp.float32)
+    return specs
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        make, loss = T.make_params, T.loss_fn
+        init_cache = lambda b, s, abstract=False: T.init_cache(cfg, b, s, abstract)
+
+        def prefill(params, batch, cache):
+            return T.prefill(cfg, params, batch["tokens"], cache,
+                             patch_embeds=batch.get("patch_embeds"),
+                             mrope_pos=batch.get("mrope_pos"))
+
+        def decode_step(params, cache, batch):
+            return T.decode_step(cfg, params, cache, batch["tokens"],
+                                 mrope_pos=batch.get("mrope_pos"))
+
+    elif fam == "hybrid":
+        make, loss = Z.make_params, Z.loss_fn
+        init_cache = lambda b, s, abstract=False: Z.init_cache(cfg, b, s, abstract)
+
+        def prefill(params, batch, cache):
+            return Z.prefill(cfg, params, batch["tokens"], cache)
+
+        def decode_step(params, cache, batch):
+            return Z.decode_step(cfg, params, cache, batch["tokens"])
+
+    elif fam == "ssm":
+        make, loss = XM.make_params, XM.loss_fn
+        init_cache = lambda b, s, abstract=False: XM.init_cache(cfg, b, s, abstract)
+
+        def prefill(params, batch, cache):
+            return XM.prefill(cfg, params, batch["tokens"], cache)
+
+        def decode_step(params, cache, batch):
+            return XM.decode_step(cfg, params, cache, batch["tokens"])
+
+    elif fam == "audio":
+        make, loss = W.make_params, W.loss_fn
+        init_cache = lambda b, s, abstract=False: W.init_cache(cfg, b, s, abstract)
+
+        def prefill(params, batch, cache):
+            return W.prefill(cfg, params, batch["tokens"], batch["frames"], cache)
+
+        def decode_step(params, cache, batch):
+            return W.decode_step(cfg, params, cache, batch["tokens"])
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def input_specs(shape_name: str) -> Dict:
+        sc = SHAPES[shape_name]
+        return _common_specs(cfg, sc, sc.kind)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda rng: make(cfg, rng=rng, abstract=False),
+        abstract_params=lambda: make(cfg, rng=None, abstract=True),
+        loss=lambda params, batch: loss(cfg, params, batch),
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        input_specs=input_specs,
+    )

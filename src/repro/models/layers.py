@@ -1,0 +1,426 @@
+"""Shared neural building blocks for the model zoo.
+
+Everything here is pure-jnp and shape-polymorphic; attention is the chunked
+memory-efficient (online-softmax) formulation that doubles as the oracle for
+the Pallas flash kernels. Parameter construction uses ``ParamFactory`` so that
+every weight carries its logical sharding axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding.context import constrain
+from repro.sharding.logical import ParamFactory
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms / projections
+# ---------------------------------------------------------------------------
+
+
+def make_rmsnorm(pf: ParamFactory, d: int, stack: int = 0):
+    return {"scale": pf((d,), ("embed",), init="ones", dtype=jnp.float32, stack=stack)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-5) -> Array:
+    """QK-norm: rmsnorm over the head_dim axis (qwen3)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * lax.rsqrt(var + eps)) * scale).astype(x.dtype)
+
+
+def make_linear(pf: ParamFactory, d_in: int, d_out: int, axes: Tuple, bias: bool = False,
+                stack: int = 0):
+    p = {"w": pf((d_in, d_out), axes, init="fan_in", stack=stack)}
+    if bias:
+        p["b"] = pf((d_out,), (axes[-1],), init="zeros", stack=stack)
+    return p
+
+
+def linear(p, x) -> Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., seq, n_heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float, sections: Tuple[int, ...]) -> Array:
+    """Qwen2-VL multi-dimensional RoPE.
+
+    ``positions3``: (3, ..., seq) — temporal/height/width position ids. The
+    head_dim/2 frequency slots are partitioned into ``sections`` (t, h, w);
+    each slot takes its angle from the corresponding position stream.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                               # (hd/2,)
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=hd // 2)
+    # angles per stream: (3, ..., seq, hd/2); select each slot's stream
+    angles_all = positions3[..., None].astype(jnp.float32) * freqs
+    sel = jax.nn.one_hot(sec_ids, 3, axis=0, dtype=jnp.float32)  # (3, hd/2)
+    sel = sel.reshape((3,) + (1,) * (angles_all.ndim - 2) + (hd // 2,))
+    angles = (angles_all * sel).sum(axis=0)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    """Whisper-style fixed sinusoidal position embeddings."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient attention (online softmax) — the Pallas kernel oracle
+# ---------------------------------------------------------------------------
+
+
+def _chunk_scan(q, k, v, q_positions, k_positions, causal, window, scale,
+                k_limit=None):
+    """One q-chunk against all kv chunks with a running (m, l, acc)."""
+    bq, h, cq, hd = q.shape
+    num_kv = k.shape[2]
+
+    def body(carry, kv_chunk):
+        m, l, acc = carry
+        kc, vc, kpos = kv_chunk
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kc, preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((cq, kc.shape[2]), bool)
+        if k_limit is not None:
+            mask &= (kpos[None, :] < k_limit)
+        if causal:
+            mask &= kpos[None, :] <= q_positions[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > q_positions[:, None] - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        correction = jnp.exp(m - m_new)
+        l_new = l * correction + p.sum(axis=-1)
+        acc_new = acc * correction[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc, preferred_element_type=jnp.float32
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((bq, h, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, h, cq), jnp.float32)
+    acc0 = jnp.zeros((bq, h, cq, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, acc0), (k, v, k_positions))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def mea_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    query_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Array:
+    """Chunked flash attention in pure jnp.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H a multiple of KV (GQA).
+    ``q_offset``: absolute position of q[0] (prefill continuation / decode).
+    Memory is O(chunk^2) instead of O(S^2) — this is what lets the 88-layer
+    x 4k-seq train configs fit, and it is bit-matched by the Pallas kernel.
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    groups = h // kvh
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    cq = min(query_chunk, sq)
+    ck = min(kv_chunk, sk)
+    # pad ragged sequence lengths up to the chunk grid; padded kv positions
+    # are pushed past every real query so the causal mask removes them, and
+    # padded query rows are sliced off the output
+    sq_pad = (-sq) % cq
+    sk_pad = (-sk) % ck
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0)))
+    if sk_pad:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+    sq_full, sk_full = sq + sq_pad, sk + sk_pad
+    nq, nk = sq_full // cq, sk_full // ck
+
+    # (B, H, S, hd) layout, GQA via repeat of kv heads
+    qh = q.transpose(0, 2, 1, 3)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), groups, axis=1)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), groups, axis=1)
+
+    kh = kh.reshape(b, h, nk, ck, hd).transpose(2, 0, 1, 3, 4)   # (nk, B, H, ck, hd)
+    vh = vh.reshape(b, h, nk, ck, hd).transpose(2, 0, 1, 3, 4)
+    kpos = (jnp.arange(sk_full)).reshape(nk, ck)
+    k_limit = sk if sk_pad else None
+
+    def per_q_chunk(iq):
+        qc = lax.dynamic_slice_in_dim(qh, iq * cq, cq, axis=2)
+        qpos = q_offset + iq * cq + jnp.arange(cq)
+        return _chunk_scan(qc, kh, vh, qpos, kpos, causal, window, scale, k_limit)
+
+    # checkpoint per q-chunk: the backward otherwise stacks every chunk's
+    # probability matrix (full S^2 scores in f32); rematerialising per chunk
+    # caps the attention backward working set at one (cq x ck) tile
+    per_q_chunk = jax.checkpoint(per_q_chunk, prevent_cse=False)
+    out = lax.map(per_q_chunk, jnp.arange(nq))                   # (nq, B, H, cq, hd)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq_full, h, hd)
+    if sq_pad:
+        out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0, **_):
+    """Quadratic reference (small shapes only)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qh = q.reshape(b, sq, kvh, h // kvh, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh, k, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(hd)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, hd)
+
+
+def decode_attention(q, k_cache, v_cache, k_positions, q_position, *, window: int = 0) -> Array:
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q: (B, H, hd); caches: (B, KV, S, hd); k_positions: (S,) absolute positions
+    of each cache slot (-1 for empty). Pure jnp; the sharded flash-decode path
+    wraps this per-shard with an LSE merge (repro.models.decode).
+    """
+    b, h, hd = q.shape
+    kvh = k_cache.shape[1]
+    qh = q.reshape(b, kvh, h // kvh, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qh, k_cache, preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(hd)
+    valid = (k_positions >= 0) & (k_positions <= q_position)
+    if window > 0:
+        valid &= k_positions > q_position - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked KV cache.
+
+    k, v: (L, B, KV, S, hd). ``S`` is the full max length for dense attention
+    or the window size for SWA (ring buffer). ``pos``: scalar int32, number of
+    tokens already written.
+    """
+
+    k: Array
+    v: Array
+    pos: Array
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[3]
+
+
+def make_kv_cache(num_layers, batch, kv_heads, capacity, head_dim, dtype=jnp.bfloat16,
+                  abstract=False) -> KVCache:
+    shape = (num_layers, batch, kv_heads, capacity, head_dim)
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, dtype)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return KVCache(arr, arr, pos)
+    z = jnp.zeros(shape, dtype)
+    return KVCache(z, z, jnp.zeros((), jnp.int32))
+
+
+def cache_slot_positions(pos: Array, capacity: int, ring: bool) -> Array:
+    """Absolute position held by each cache slot (-1 if empty)."""
+    idx = jnp.arange(capacity)
+    if not ring:
+        return jnp.where(idx < pos, idx, -1)
+    # ring: slot i holds position p = last write to that slot
+    p = pos - 1 - ((pos - 1 - idx) % capacity)
+    return jnp.where((p >= 0) & (p < pos), p, -1)
+
+
+def cache_write(k_layer: Array, v_layer: Array, pos: Array, k_new: Array, v_new: Array,
+                ring: bool) -> Tuple[Array, Array]:
+    """Write one token's K/V (B, KV, hd) at position ``pos`` (mod cap if ring).
+
+    Implemented as a predicated elementwise select on the sequence axis
+    rather than dynamic_update_slice: a DUS at a traced offset on a SHARDED
+    seq axis triggers SPMD "involuntary full rematerialization" (the cache is
+    replicated per device, ~17 GiB/layer at deepseek decode_32k scale). The
+    select shards elementwise and updates in place under buffer donation.
+    """
+    cap = k_layer.shape[2]
+    slot = (pos % cap) if ring else pos
+    hit = (jnp.arange(cap) == slot)[None, None, :, None]
+    k_layer = jnp.where(hit, k_new[:, :, None].astype(k_layer.dtype), k_layer)
+    v_layer = jnp.where(hit, v_new[:, :, None].astype(v_layer.dtype), v_layer)
+    return k_layer, v_layer
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP + MoE
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(pf: ParamFactory, d: int, ff: int, stack: int = 0):
+    return {
+        "wi": pf((d, ff), ("embed", "ffn"), stack=stack),
+        "wg": pf((d, ff), ("embed", "ffn"), stack=stack),
+        "wo": pf((ff, d), ("ffn", "embed"), stack=stack),
+    }
+
+
+def mlp(p, x) -> Array:
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    return h @ p["wo"]
+
+
+def make_moe(pf: ParamFactory, d: int, ff: int, num_experts: int, stack: int = 0):
+    return {
+        "router": pf((d, num_experts), ("embed", "experts"), stack=stack),
+        "wi": pf((num_experts, d, ff), ("experts", "embed", "ffn"), stack=stack),
+        "wg": pf((num_experts, d, ff), ("experts", "embed", "ffn"), stack=stack),
+        "wo": pf((num_experts, ff, d), ("experts", "ffn", "embed"), stack=stack),
+    }
+
+
+class MoEStats(NamedTuple):
+    aux_loss: Array          # load-balance loss (Switch-style)
+    expert_tokens: Array     # (E,) tokens routed per expert (pre-capacity)
+
+
+def moe(p, x, *, num_experts: int, top_k: int, capacity_factor: float,
+        deterministic_capacity: int = 0, token_chunk: int = 0) -> Tuple[Array, MoEStats]:
+    """Dropping MoE with scatter-based dispatch (TPU-friendly, no (T,E,C) one-hot).
+
+    x: (B, S, d). Tokens pick top-k experts; each expert processes at most
+    C = ceil(k*T*cf/E) tokens per (B*S) block; overflow tokens are dropped
+    (their combine weight contribution is zero), matching the standard
+    capacity-based TPU MoE formulation.
+
+    ``token_chunk``: process tokens in chunks of this many (per batch row
+    group) through a scanned dispatch — the (E, C, d) buffers then scale with
+    the chunk, not the full sequence (capacity becomes per-chunk; same
+    dropping policy at finer granularity). This is the §Perf fix for the
+    prefill-scale dispatch-buffer blowup.
+    """
+    b, s, d = x.shape
+    if token_chunk and b * s > token_chunk and (b * s) % token_chunk == 0:
+        nc = (b * s) // token_chunk
+        chunks = x.reshape(nc, token_chunk, d)
+
+        def one(xc):
+            y, stats = moe(p, xc[None], num_experts=num_experts, top_k=top_k,
+                           capacity_factor=capacity_factor,
+                           deterministic_capacity=deterministic_capacity)
+            return y[0], stats
+
+        ys, stats = lax.map(one, chunks)
+        out = ys.reshape(b, s, d)
+        return out, MoEStats(stats.aux_loss.mean(), stats.expert_tokens.sum(0))
+    t = b * s
+    xt = x.reshape(t, d)
+    e = num_experts
+
+    logits = (xt @ p["router"]).astype(jnp.float32)              # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = lax.top_k(probs, top_k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch/Mixtral): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                       # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32)
+    fe = onehot_top1.mean(axis=0)
+    aux = e * jnp.sum(fe * me)
+
+    cap = deterministic_capacity or int(max(1, capacity_factor * top_k * t / e))
+
+    # flatten (token, k) assignments
+    flat_exp = expert_ids.reshape(-1)                             # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+
+    # position of each assignment within its expert, via cumsum over one-hot
+    onehot = jax.nn.one_hot(flat_exp, e, dtype=jnp.int32)         # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+    keep = pos_in_expert < cap
+    expert_tokens = onehot.sum(axis=0)
+
+    # dispatch: (E, C, d) buffer
+    safe_pos = jnp.where(keep, pos_in_expert, 0)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_exp, safe_pos].add(
+        jnp.where(keep, 1.0, 0.0)[:, None].astype(x.dtype) * xt[flat_tok], mode="drop"
+    )
+
+    # expert computation, batched einsum over experts
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wi"]
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])                    # (E, C, d)
+
+    # combine: gather back and weight
+    gathered = y[flat_exp, safe_pos]                              # (T*k, d)
+    weighted = gathered * (flat_gate * keep).astype(y.dtype)[:, None]
+    out = jnp.zeros((t, d), y.dtype).at[flat_tok].add(weighted)
+    return out.reshape(b, s, d), MoEStats(aux, expert_tokens)

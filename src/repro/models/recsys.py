@@ -1,0 +1,167 @@
+"""The paper's evaluation models: LR (MovieLens rating), LSTM (Sent140
+sentiment), DIN (Amazon/Alibaba CTR).
+
+These are the models FedSubAvg was originally validated on — small, sparse-
+embedding-dominated, exactly the hot/cold-feature regime. Each exposes the
+same (make_params, loss_fn, predict_fn) surface; feature-keyed leaves carry
+the "vocab" logical axis so the heat machinery applies unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.logical import ParamFactory, unbox
+
+Array = jax.Array
+
+
+def _bce(logit, label):
+    return jnp.maximum(logit, 0) - logit * label + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+
+
+# ---------------------------------------------------------------------------
+# LR over sparse one-hot features (MovieLens rating classification)
+# ---------------------------------------------------------------------------
+
+
+def make_lr_params(num_features: int, rng=None, abstract: bool = False):
+    pf = ParamFactory(rng=rng, abstract=abstract, dtype=jnp.float32)
+    return {
+        "w": pf((num_features, 1), ("vocab", "embed"), init="zeros", dtype=jnp.float32),
+        "b": pf((1,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def lr_logits(params, feature_ids: Array) -> Array:
+    """feature_ids: (B, F) int32 active feature ids (-1 = padding)."""
+    p = unbox(params)
+    w = p["w"][..., 0]
+    valid = (feature_ids >= 0).astype(jnp.float32)
+    vals = w[jnp.maximum(feature_ids, 0)] * valid
+    return vals.sum(-1) + p["b"][0]
+
+
+def lr_loss(params, batch: Dict) -> Array:
+    logit = lr_logits(params, batch["features"])
+    per = _bce(logit, batch["label"].astype(jnp.float32))
+    m = batch.get("sample_mask", jnp.ones_like(per))
+    return (per * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Two-layer LSTM classifier (Sent140)
+# ---------------------------------------------------------------------------
+
+
+def make_lstm_params(vocab: int, emb_dim: int = 25, hidden: int = 100,
+                     layers: int = 2, rng=None, abstract: bool = False):
+    pf = ParamFactory(rng=rng, abstract=abstract, dtype=jnp.float32)
+    cells = []
+    for i in range(layers):
+        d_in = emb_dim if i == 0 else hidden
+        cells.append({
+            "wx": pf((d_in, 4 * hidden), ("embed", "ffn"), dtype=jnp.float32),
+            "wh": pf((hidden, 4 * hidden), (None, "ffn"), dtype=jnp.float32),
+            "b": pf((4 * hidden,), ("ffn",), init="zeros", dtype=jnp.float32),
+        })
+    return {
+        "embedding": pf((vocab, emb_dim), ("vocab", "embed"), init="normal", dtype=jnp.float32),
+        "cells": tuple(cells),
+        "head_w": pf((hidden, 1), (None, None), dtype=jnp.float32),
+        "head_b": pf((1,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def _lstm_layer(cell, xs, mask):
+    """xs: (B, S, d_in); mask: (B, S). Standard LSTM, masked steps carry state."""
+    b, s, _ = xs.shape
+    hdim = cell["wh"].shape[0]
+
+    def step(carry, inp):
+        h, c = carry
+        x_t, m_t = inp
+        z = x_t @ cell["wx"] + h @ cell["wh"] + cell["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+        keep = m_t[:, None]
+        return (h_new * keep + h * (1 - keep), c_new * keep + c * (1 - keep)), h_new
+
+    init = (jnp.zeros((b, hdim)), jnp.zeros((b, hdim)))
+    (h, _), hs = lax.scan(step, init, (xs.transpose(1, 0, 2), mask.T))
+    return h, hs.transpose(1, 0, 2)
+
+
+def lstm_logits(params, tokens: Array, mask: Array) -> Array:
+    p = unbox(params)
+    x = p["embedding"][jnp.maximum(tokens, 0)] * (tokens >= 0)[..., None]
+    for cell in p["cells"]:
+        h, x = _lstm_layer(cell, x, mask)
+    return (h @ p["head_w"])[:, 0] + p["head_b"][0]
+
+
+def lstm_loss(params, batch: Dict) -> Array:
+    mask = (batch["tokens"] >= 0).astype(jnp.float32)
+    logit = lstm_logits(params, batch["tokens"], mask)
+    per = _bce(logit, batch["label"].astype(jnp.float32))
+    m = batch.get("sample_mask", jnp.ones_like(per))
+    return (per * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# DIN (Deep Interest Network) for CTR prediction
+# ---------------------------------------------------------------------------
+
+
+def make_din_params(num_items: int, emb_dim: int = 18, hidden: int = 36,
+                    rng=None, abstract: bool = False):
+    pf = ParamFactory(rng=rng, abstract=abstract, dtype=jnp.float32)
+    return {
+        "item_emb": pf((num_items, emb_dim), ("vocab", "embed"), init="normal",
+                       dtype=jnp.float32),
+        # attention unit over (hist, target, hist*target, hist-target)
+        "att_w1": pf((4 * emb_dim, hidden), (None, None), dtype=jnp.float32),
+        "att_b1": pf((hidden,), (None,), init="zeros", dtype=jnp.float32),
+        "att_w2": pf((hidden, 1), (None, None), dtype=jnp.float32),
+        # output MLP over [pooled_hist, target, pooled*target]
+        "mlp_w1": pf((3 * emb_dim, hidden), (None, None), dtype=jnp.float32),
+        "mlp_b1": pf((hidden,), (None,), init="zeros", dtype=jnp.float32),
+        "mlp_w2": pf((hidden, 1), (None, None), dtype=jnp.float32),
+        "mlp_b2": pf((1,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def din_logits(params, hist: Array, target: Array) -> Array:
+    """hist: (B, H) item ids (-1 pad); target: (B,) item id."""
+    p = unbox(params)
+    emb = p["item_emb"]
+    hmask = (hist >= 0).astype(jnp.float32)
+    he = emb[jnp.maximum(hist, 0)] * hmask[..., None]            # (B,H,e)
+    te = emb[target]                                             # (B,e)
+    tb = jnp.broadcast_to(te[:, None], he.shape)
+    att_in = jnp.concatenate([he, tb, he * tb, he - tb], axis=-1)
+    a = jax.nn.relu(att_in @ p["att_w1"] + p["att_b1"]) @ p["att_w2"]
+    a = a[..., 0] + (hmask - 1.0) * 1e9                          # mask pads
+    w = jax.nn.softmax(a, axis=-1) * (hmask.sum(-1, keepdims=True) > 0)
+    pooled = jnp.einsum("bh,bhe->be", w, he)
+    feat = jnp.concatenate([pooled, te, pooled * te], axis=-1)
+    h = jax.nn.relu(feat @ p["mlp_w1"] + p["mlp_b1"])
+    return (h @ p["mlp_w2"])[:, 0] + p["mlp_b2"][0]
+
+
+def din_loss(params, batch: Dict) -> Array:
+    logit = din_logits(params, batch["hist"], batch["target"])
+    per = _bce(logit, batch["label"].astype(jnp.float32))
+    m = batch.get("sample_mask", jnp.ones_like(per))
+    return (per * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+PAPER_MODELS = {
+    "movielens_lr": (make_lr_params, lr_loss),
+    "sent140_lstm": (make_lstm_params, lstm_loss),
+    "din_ctr": (make_din_params, din_loss),
+}

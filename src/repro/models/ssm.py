@@ -1,0 +1,181 @@
+"""Mamba2 blocks via the chunked SSD (state-space duality) formulation.
+
+The selective SSM recurrence per head h with scalar decay:
+
+    S_t = a_t * S_{t-1} + dt_t * x_t (outer) B_t        S in R^{p x n}
+    y_t = S_t C_t + D * x_t
+
+is computed in chunks: within-chunk terms form a decay-masked quadratic
+(attention-like) matmul — MXU-friendly — while cross-chunk terms carry the
+running state through a ``lax.scan``. Decode is the O(1) single-step update.
+This is the TPU-native adaptation: the CUDA kernel's warp-parallel scan
+becomes chunked matmuls sized for the MXU (128-aligned chunk length).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.logical import ParamFactory
+
+Array = jax.Array
+
+
+def make_mamba2_params(pf: ParamFactory, cfg: ModelConfig, stack: int = 0):
+    d = cfg.d_model
+    e = cfg.ssm_expand
+    di = e * d                        # inner dim
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    p_dim = di // h                   # head dim
+    conv_dim = di + 2 * n             # x, B, C go through the depthwise conv
+    return {
+        "norm": L.make_rmsnorm(pf, d, stack=stack),
+        "in_proj": pf((d, 2 * di + 2 * n + h), ("embed", "ffn"), stack=stack),
+        "conv_w": pf((cfg.ssm_conv_width, conv_dim), ("conv", "ffn"), stack=stack),
+        "conv_b": pf((conv_dim,), ("ffn",), init="zeros", stack=stack),
+        "a_log": pf((h,), (None,), init="ssm_a", dtype=jnp.float32, stack=stack),
+        "dt_bias": pf((h,), (None,), init="zeros", dtype=jnp.float32, stack=stack),
+        "d_skip": pf((h,), (None,), init="ones", dtype=jnp.float32, stack=stack),
+        "out_norm": L.make_rmsnorm(pf, di, stack=stack),
+        "out_proj": pf((di, d), ("ffn", "embed"), stack=stack),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state: Optional[Array] = None):
+    """Depthwise causal conv over seq. xbc: (B, S, C); w: (W, C).
+
+    ``state``: (B, W-1, C) trailing context from previous tokens (decode) —
+    returns (out, new_state).
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (width - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)                   # (B, S+W-1, C)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(width))
+    out = jax.nn.silu(out + b.astype(out.dtype))
+    new_state = full[:, -(width - 1):]
+    return out, new_state
+
+
+class SSDState(NamedTuple):
+    state: Array        # (B, H, p, n)
+    conv: Array         # (B, W-1, conv_dim)
+
+
+def ssd_chunked(x, a_log_dt, b_mat, c_mat, chunk: int,
+                initial_state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Chunked scan. x: (B,S,H,p); a_log_dt: (B,S,H) = log decay per step
+    (negative); b_mat, c_mat: (B,S,N). Returns (y, final_state (B,H,p,n))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        # zero-padded tail: a=0 (decay 1, state preserved) and B=0 (no input),
+        # so the final state is exact; padded outputs are sliced off
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log_dt = jnp.pad(a_log_dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // c
+
+    xr = x.reshape(bsz, nc, c, h, p).transpose(1, 0, 2, 3, 4)           # (nc,B,c,H,p)
+    ar = a_log_dt.reshape(bsz, nc, c, h).transpose(1, 0, 2, 3)          # (nc,B,c,H)
+    br = b_mat.reshape(bsz, nc, c, n).transpose(1, 0, 2, 3)
+    cr = c_mat.reshape(bsz, nc, c, n).transpose(1, 0, 2, 3)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def body(state, inp):
+        xc, ac, bc, cc = inp
+        cum = jnp.cumsum(ac, axis=1)                                    # (B,c,H)
+        total = cum[:, -1]                                              # (B,H)
+        # within-chunk: decay(i,j) = exp(cum_i - cum_j), j <= i. Mask BEFORE
+        # the exp: exp of the (large positive) upper triangle would be inf and
+        # poison the backward pass with 0*inf = NaN cotangents.
+        dec = cum[:, :, None, :] - cum[:, None, :, :]                   # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.exp(jnp.where(tri[None, :, :, None], dec, -1e30))
+        scores = jnp.einsum("bin,bjn->bij", cc, bc,
+                            preferred_element_type=jnp.float32)          # (B,c,c)
+        w = scores[..., None] * dmat                                     # (B,c,c,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xc.astype(jnp.float32))
+        # cross-chunk: y_i += C_i . (exp(cum_i) * state)
+        y_inter = jnp.einsum("bin,bhpn->bihp", cc, state) * \
+            jnp.exp(cum)[..., None]
+        # state update: state' = exp(total) * state + sum_j exp(total-cum_j) B_j x_j
+        carry_dec = jnp.exp(total[:, None] - cum)                        # (B,c,H)
+        contrib = jnp.einsum("bjn,bjhp,bjh->bhpn", bc, xc.astype(jnp.float32), carry_dec)
+        new_state = jnp.exp(total)[:, :, None, None] * state + contrib
+        return new_state, (y_intra + y_inter)
+
+    final_state, ys = lax.scan(body, initial_state, (xr, ar, br, cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    if pad:
+        y = y[:, :s_orig]
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_block(cfg: ModelConfig, mp, x, *, chunk: int = 256,
+                 state: Optional[SSDState] = None, single_step: bool = False):
+    """Full Mamba2 mixer. x: (B, S, d). Returns (out, new_state)."""
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    p_dim = di // h
+    bsz, s, _ = x.shape
+
+    zxbcdt = x @ mp["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    conv_state = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, mp["conv_w"], mp["conv_b"], conv_state)
+    xs = xbc[..., :di].reshape(bsz, s, h, p_dim)
+    b_mat = xbc[..., di:di + n]
+    c_mat = xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"])         # (B,S,H)
+    a = -jnp.exp(mp["a_log"])                                            # (H,) negative
+    a_log_dt = a * dt                                                    # log decay
+    x_in = xs * dt[..., None].astype(xs.dtype)
+
+    if single_step:
+        # O(1) recurrence for decode: S' = exp(a dt) S + dt x (outer) B
+        prev = state.state if state is not None else jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+        decay = jnp.exp(a_log_dt[:, 0])                                  # (B,H)
+        contrib = jnp.einsum("bn,bhp->bhpn", b_mat[:, 0].astype(jnp.float32),
+                             x_in[:, 0].astype(jnp.float32))
+        new_s = decay[..., None, None] * prev + contrib
+        y = jnp.einsum("bhpn,bn->bhp", new_s, c_mat[:, 0].astype(jnp.float32))
+        y = y[:, None].transpose(0, 1, 2, 3)                             # (B,1,H,p)
+        y = y.reshape(bsz, 1, h, p_dim)
+    else:
+        prev = state.state if state is not None else None
+        y, new_s = ssd_chunked(x_in, a_log_dt, b_mat.astype(jnp.float32),
+                               c_mat.astype(jnp.float32), chunk, prev)
+
+    y = y + xs * mp["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(bsz, s if not single_step else 1, di)
+    y = L.rmsnorm(mp["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ mp["out_proj"]
+    return out.astype(x.dtype), SSDState(new_s.astype(jnp.float32), new_conv)

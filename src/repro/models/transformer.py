@@ -1,0 +1,330 @@
+"""Decoder-only transformer covering the dense / MoE / VLM assigned archs.
+
+One parameterised implementation serves mixtral-8x22b, llama4-maverick,
+mistral-large-123b, qwen3-32b, qwen2.5-14b, deepseek-67b and qwen2-vl-7b:
+GQA (+ optional qk_norm / qkv bias / sliding window), gated MLP or dropping
+MoE, RoPE or M-RoPE, and early-fusion patch embeddings for the VLM/llama4
+frontend carve-out.
+
+Layers are ``lax.scan``'d over stacked parameters (compile-time sanity for
+56-95 layer configs) with ``jax.checkpoint`` on the layer body for training.
+The LM loss is computed in sequence chunks against the vocab-sharded head so
+full (B, S, V) logits are never materialised.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.context import constrain
+from repro.sharding.logical import ParamFactory, unbox
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def make_params(cfg: ModelConfig, rng: Optional[Array] = None, abstract: bool = False):
+    pf = ParamFactory(rng=rng, abstract=abstract, dtype=jnp.dtype(cfg.dtype))
+    d, hd = cfg.d_model, cfg.head_dim
+    nl = cfg.num_layers
+    q_dim = cfg.num_heads * hd
+    kv_dim = cfg.num_kv_heads * hd
+
+    attn = {
+        "norm": L.make_rmsnorm(pf, d, stack=nl),
+        "wq": L.make_linear(pf, d, q_dim, ("embed", "heads"), bias=cfg.qkv_bias, stack=nl),
+        "wk": L.make_linear(pf, d, kv_dim, ("embed", "kv"), bias=cfg.qkv_bias, stack=nl),
+        "wv": L.make_linear(pf, d, kv_dim, ("embed", "kv"), bias=cfg.qkv_bias, stack=nl),
+        "wo": L.make_linear(pf, q_dim, d, ("heads", "embed"), stack=nl),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = pf((hd,), (None,), init="ones", dtype=jnp.float32, stack=nl)
+        attn["k_norm"] = pf((hd,), (None,), init="ones", dtype=jnp.float32, stack=nl)
+
+    if cfg.is_moe:
+        ffn = L.make_moe(pf, d, cfg.d_ff, cfg.num_experts, stack=nl)
+    else:
+        ffn = L.make_mlp(pf, d, cfg.d_ff, stack=nl)
+
+    params = {
+        "embedding": pf((cfg.vocab_size, d), ("vocab", "embed"), init="normal"),
+        "layers": {"attn": attn, "ffn_norm": L.make_rmsnorm(pf, d, stack=nl), "ffn": ffn},
+        "final_norm": L.make_rmsnorm(pf, d),
+        "lm_head": pf((d, cfg.vocab_size), ("embed", "vocab")),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention block (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg: ModelConfig, ap, x, positions, mrope_pos=None):
+    b = x.shape[0]
+    s = x.shape[1]
+    q = L.linear(ap["wq"], x).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = L.linear(ap["wk"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = L.linear(ap["wv"], x).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.head_rmsnorm(ap["q_norm"], q, cfg.norm_eps)
+        k = L.head_rmsnorm(ap["k_norm"], k, cfg.norm_eps)
+    if cfg.mrope and mrope_pos is not None:
+        q = L.apply_mrope(q, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, mrope_pos, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    # pin attention activation layouts: either cleanly head-sharded (when the
+    # head count divides the model axis) or replicated — never partial-head
+    q = constrain(q, ("batch", None, "heads_act", None))
+    k = constrain(k, ("batch", None, "kv_act", None))
+    v = constrain(v, ("batch", None, "kv_act", None))
+    return q, k, v
+
+
+def attention_block(cfg: ModelConfig, ap, x, positions, mrope_pos=None):
+    """Full-sequence (train / prefill) attention. Returns (out, (k, v))."""
+    q, k, v = _project_qkv(cfg, ap, x, positions, mrope_pos)
+    if cfg.attn_impl == "naive":
+        o = L.naive_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    else:
+        o = L.mea_attention(
+            q, k, v, causal=True, window=cfg.sliding_window,
+            query_chunk=cfg.query_chunk, kv_chunk=cfg.kv_chunk,
+        )
+    b, s = x.shape[:2]
+    out = L.linear(ap["wo"], o.reshape(b, s, cfg.num_heads * cfg.head_dim))
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / early fusion
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens, patch_embeds=None):
+    emb = params["embedding"]
+    x = emb[tokens] * jnp.asarray(jnp.sqrt(cfg.d_model), emb.dtype)
+    if patch_embeds is not None and cfg.num_patches > 0:
+        # early fusion: the first num_patches positions carry modality embeds
+        p = patch_embeds.shape[1]
+        pos_is_patch = (jnp.arange(x.shape[1]) < p)[None, :, None]
+        padded = jnp.zeros_like(x).at[:, :p].set(patch_embeds.astype(x.dtype))
+        x = jnp.where(pos_is_patch, padded, x)
+    return constrain(x, ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+class ForwardOut(NamedTuple):
+    hidden: Array            # (B, S, d) final-norm'd hidden states
+    aux_loss: Array          # MoE load-balance aux (0 for dense)
+    kv: Optional[Tuple]      # stacked (L, B, KV, S, hd) when collect_kv
+
+
+def forward(cfg: ModelConfig, params, tokens, *, patch_embeds=None, mrope_pos=None,
+            positions=None, collect_kv: bool = False, remat: bool = True) -> ForwardOut:
+    p = unbox(params)
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(cfg, p, tokens, patch_embeds)
+
+    def layer(x, lp):
+        h, kv = attention_block(cfg, lp["attn"], L.rmsnorm(lp["attn"]["norm"], x, cfg.norm_eps),
+                                positions, mrope_pos)
+        x = constrain(x + h, ("batch", None, None))
+        hn = L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            f, stats = L.moe(lp["ffn"], hn, num_experts=cfg.num_experts,
+                             top_k=cfg.experts_per_token,
+                             capacity_factor=cfg.moe_capacity_factor,
+                             token_chunk=cfg.moe_token_chunk)
+            aux = stats.aux_loss
+        else:
+            f = L.mlp(lp["ffn"], hn)
+            aux = jnp.zeros((), jnp.float32)
+        x = constrain(x + f, ("batch", None, None))
+        if collect_kv:
+            # cache layout: seq-sharded over the model axis from the moment of
+            # collection, so the stacked (L,B,S,KV,hd) tensor never exists
+            # replicated per device
+            kv = tuple(constrain(t, ("batch", "kv_seq", None, None)) for t in kv)
+            ys = (aux, kv)
+        else:
+            ys = (aux, None)
+        return x, ys
+
+    body = jax.checkpoint(layer, prevent_cse=False) if remat else layer
+    g = cfg.remat_groups
+    if remat and g > 1 and cfg.num_layers % g == 0 and not collect_kv:
+        # two-level remat: outer scan over G groups (saves G carries), inner
+        # scan over L/G layers inside a checkpointed group body (its stack is
+        # rematerialised during the group's backward). Residual footprint
+        # ~ (G + L/G) activations instead of L.
+        per = cfg.num_layers // g
+        grouped = jax.tree.map(lambda a: a.reshape((g, per) + a.shape[1:]), p["layers"])
+
+        def group(x, gp):
+            x, (aux, _) = lax.scan(body, x, gp)
+            return x, aux
+
+        group = jax.checkpoint(group, prevent_cse=False)
+        x, aux_all = lax.scan(group, x, grouped)
+        aux_all = aux_all.reshape(-1)
+        kvs = None
+    else:
+        x, (aux_all, kvs) = lax.scan(body, x, p["layers"])
+    hidden = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    return ForwardOut(hidden, aux_all.mean(), kvs)
+
+
+def chunked_xent(cfg: ModelConfig, params, hidden, targets, mask, chunk: int = 512):
+    """Next-token cross-entropy in seq chunks against the vocab-sharded head.
+
+    Never materialises (B, S, V) logits: per chunk (B, c, V) is constrained to
+    the model axis on V, so each device holds (B, c, V/16).
+    """
+    p = unbox(params)
+    head = p["lm_head"]
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    n = s // c
+    assert s % c == 0
+
+    def one(i):
+        h = lax.dynamic_slice_in_dim(hidden, i * c, c, axis=1)
+        t = lax.dynamic_slice_in_dim(targets, i * c, c, axis=1)
+        m = lax.dynamic_slice_in_dim(mask, i * c, c, axis=1)
+        logits = constrain((h @ head).astype(jnp.float32), ("batch", None, "vocab"))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return ((lse - gold) * m).sum(), m.sum()
+
+    losses, counts = lax.map(one, jnp.arange(n))
+    return losses.sum() / jnp.maximum(counts.sum(), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = True):
+    """Causal LM loss (mean over cohort tokens) + MoE aux."""
+    tokens = batch["tokens"]
+    targets = batch.get("labels", jnp.pad(tokens[:, 1:], ((0, 0), (0, 1))))
+    mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+    out = forward(cfg, params, tokens,
+                  patch_embeds=batch.get("patch_embeds"),
+                  mrope_pos=batch.get("mrope_pos"),
+                  remat=remat)
+    ce = chunked_xent(cfg, params, out.hidden, targets, mask)
+    return ce + cfg.router_aux_weight * out.aux_loss
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, abstract: bool = False) -> L.KVCache:
+    cap = min(cfg.sliding_window, max_seq) if cfg.sliding_window > 0 else max_seq
+    return L.make_kv_cache(cfg.num_layers, batch, cfg.num_kv_heads, cap, cfg.head_dim,
+                           dtype=jnp.dtype(cfg.dtype), abstract=abstract)
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache: L.KVCache, *, patch_embeds=None,
+            mrope_pos=None):
+    """Run the prompt, fill the cache, return last-token logits."""
+    p = unbox(params)
+    out = forward(cfg, params, tokens, patch_embeds=patch_embeds, mrope_pos=mrope_pos,
+                  collect_kv=True, remat=False)
+    k, v = out.kv                                   # (L, B, S, KV, hd)
+    k = k.transpose(0, 1, 3, 2, 4)                  # -> (L, B, KV, S, hd)
+    v = v.transpose(0, 1, 3, 2, 4)
+    s = tokens.shape[1]
+    cap = cache.capacity
+    if cfg.sliding_window > 0 and s > cap:
+        # ring semantics: keep the last `cap` tokens at their mod-cap slots
+        k, v = k[:, :, :, -cap:], v[:, :, :, -cap:]
+        shift = s % cap
+        k = jnp.roll(k, shift, axis=3)
+        v = jnp.roll(v, shift, axis=3)
+        newk = constrain(k.astype(cache.k.dtype), ("layers", "batch", "kv_heads", "kv_seq", None))
+        newv = constrain(v.astype(cache.v.dtype), ("layers", "batch", "kv_heads", "kv_seq", None))
+    else:
+        newk = lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=3)
+        newv = lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=3)
+        newk = constrain(newk, ("layers", "batch", "kv_heads", "kv_seq", None))
+        newv = constrain(newv, ("layers", "batch", "kv_heads", "kv_seq", None))
+    logits = (out.hidden[:, -1] @ p["lm_head"]).astype(jnp.float32)
+    logits = constrain(logits, ("batch", "vocab"))
+    new_cache = L.KVCache(newk, newv, jnp.asarray(s, jnp.int32))
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: L.KVCache, tokens, *, mrope_pos=None):
+    """One decode step: tokens (B,), cache position = cache.pos."""
+    p = unbox(params)
+    b = tokens.shape[0]
+    pos = cache.pos
+    ring = cfg.sliding_window > 0
+    positions = jnp.broadcast_to(pos, (b, 1))
+    x = embed_tokens(cfg, p, tokens[:, None])
+    slot_pos = L.cache_slot_positions(pos + 1, cache.capacity, ring)  # incl. current
+
+    def layer_body(x, lp, k_layer, v_layer):
+        ap = lp["attn"]
+        h = L.rmsnorm(ap["norm"], x, cfg.norm_eps)
+        if cfg.mrope and mrope_pos is not None:
+            q, k, v = _project_qkv(cfg, ap, h, positions, mrope_pos)
+        else:
+            q, k, v = _project_qkv(cfg, ap, h, positions)
+        k_layer, v_layer = L.cache_write(k_layer, v_layer, pos, k[:, 0], v[:, 0], ring)
+        o = L.decode_attention(q[:, 0], k_layer, v_layer, slot_pos, pos,
+                               window=cfg.sliding_window)
+        h = L.linear(ap["wo"], o.reshape(b, 1, -1)[:, 0])[:, None]
+        x = x + h
+        hn = L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            # decode is drop-free: with a single token per sequence the whole
+            # assignment set fits (capacity = B*k), keeping decode bit-stable
+            # regardless of routing skew
+            f, _ = L.moe(lp["ffn"], hn, num_experts=cfg.num_experts,
+                         top_k=cfg.experts_per_token,
+                         capacity_factor=cfg.moe_capacity_factor,
+                         deterministic_capacity=b * cfg.experts_per_token)
+        else:
+            f = L.mlp(lp["ffn"], hn)
+        x = x + f
+        return x, k_layer, v_layer
+
+    # fori_loop with the cache in the carry: while-loop carries alias their
+    # buffers across iterations, so the (L,B,KV,S,hd) stacks are updated in
+    # place instead of living twice as scan xs + ys (a full extra KV cache
+    # per step at decode_32k scale — see EXPERIMENTS.md §Perf pair 2)
+    def body(i, carry):
+        x, k_all, v_all = carry
+        lp = jax.tree.map(lambda a: a[i], p["layers"])
+        x, k_layer, v_layer = layer_body(x, lp, k_all[i], v_all[i])
+        k_all = lax.dynamic_update_index_in_dim(k_all, k_layer, i, 0)
+        v_all = lax.dynamic_update_index_in_dim(v_all, v_layer, i, 0)
+        return x, k_all, v_all
+
+    x, nk, nv = lax.fori_loop(0, cfg.num_layers, body, (x, cache.k, cache.v))
+    nk = constrain(nk, ("layers", "batch", "kv_heads", "kv_seq", None))
+    nv = constrain(nv, ("layers", "batch", "kv_heads", "kv_seq", None))
+    hidden = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = (hidden[:, 0] @ p["lm_head"]).astype(jnp.float32)
+    logits = constrain(logits, ("batch", "vocab"))
+    return logits, L.KVCache(nk, nv, pos + 1)

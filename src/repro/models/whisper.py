@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder (transformer backbone only).
+
+The mel/conv frontend is stubbed per the assignment carve-out: the encoder
+consumes precomputed frame embeddings (B, enc_seq, d). Decoder: causal self-
+attention + cross-attention to the encoder output. Serving caches both the
+self-attn KV (grows) and the cross-attn KV (computed once at prefill).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding.context import constrain
+from repro.sharding.logical import ParamFactory, unbox
+
+Array = jax.Array
+
+
+def make_params(cfg: ModelConfig, rng=None, abstract: bool = False):
+    pf = ParamFactory(rng=rng, abstract=abstract, dtype=jnp.dtype(cfg.dtype))
+    d = cfg.d_model
+    q_dim = cfg.num_heads * cfg.head_dim
+    kv_dim = cfg.num_kv_heads * cfg.head_dim
+
+    def attn_params(stack):
+        return {
+            "norm": L.make_rmsnorm(pf, d, stack=stack),
+            "wq": L.make_linear(pf, d, q_dim, ("embed", "heads"), bias=True, stack=stack),
+            "wk": L.make_linear(pf, d, kv_dim, ("embed", "kv"), stack=stack),
+            "wv": L.make_linear(pf, d, kv_dim, ("embed", "kv"), bias=True, stack=stack),
+            "wo": L.make_linear(pf, q_dim, d, ("heads", "embed"), bias=True, stack=stack),
+        }
+
+    ne, nd = cfg.encoder_layers, cfg.num_layers
+    return {
+        "encoder": {
+            "attn": attn_params(ne),
+            "ffn_norm": L.make_rmsnorm(pf, d, stack=ne),
+            "ffn": L.make_mlp(pf, d, cfg.d_ff, stack=ne),
+        },
+        "encoder_norm": L.make_rmsnorm(pf, d),
+        "decoder": {
+            "self_attn": attn_params(nd),
+            "cross_attn": attn_params(nd),
+            "ffn_norm": L.make_rmsnorm(pf, d, stack=nd),
+            "ffn": L.make_mlp(pf, d, cfg.d_ff, stack=nd),
+        },
+        "embedding": pf((cfg.vocab_size, d), ("vocab", "embed"), init="normal"),
+        "final_norm": L.make_rmsnorm(pf, d),
+        "lm_head": pf((d, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+def _mha(cfg, ap, xq, xkv, *, causal, q_offset=0):
+    b, sq = xq.shape[:2]
+    skv = xkv.shape[1]
+    q = L.linear(ap["wq"], xq).reshape(b, sq, cfg.num_heads, cfg.head_dim)
+    k = L.linear(ap["wk"], xkv).reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    v = L.linear(ap["wv"], xkv).reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    q = constrain(q, ("batch", None, "heads_act", None))
+    k = constrain(k, ("batch", None, "kv_act", None))
+    v = constrain(v, ("batch", None, "kv_act", None))
+    o = L.mea_attention(q, k, v, causal=causal, q_offset=q_offset,
+                        query_chunk=cfg.query_chunk, kv_chunk=cfg.kv_chunk)
+    return L.linear(ap["wo"], o.reshape(b, sq, -1)), (k, v)
+
+
+def encode(cfg: ModelConfig, params, frames) -> Array:
+    """frames: (B, enc_seq, d) precomputed frame embeddings (frontend stub)."""
+    p = unbox(params)
+    b, s, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + L.sinusoidal_positions(s, d).astype(cfg.dtype)
+    x = constrain(x, ("batch", None, None))
+
+    def layer(x, lp):
+        h, _ = _mha(cfg, lp["attn"], L.rmsnorm(lp["attn"]["norm"], x, cfg.norm_eps),
+                    L.rmsnorm(lp["attn"]["norm"], x, cfg.norm_eps), causal=False)
+        x = x + h
+        x = x + L.mlp(lp["ffn"], L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps))
+        return constrain(x, ("batch", None, None)), None
+
+    x, _ = lax.scan(jax.checkpoint(layer, prevent_cse=False), x, p["encoder"])
+    return L.rmsnorm(p["encoder_norm"], x, cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, remat=True,
+                 collect_kv=False):
+    p = unbox(params)
+    b, s = tokens.shape
+    x = p["embedding"][tokens] * jnp.asarray(jnp.sqrt(cfg.d_model), jnp.dtype(cfg.dtype))
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    x = constrain(x, ("batch", None, None))
+
+    def layer(x, lp):
+        h, self_kv = _mha(cfg, lp["self_attn"],
+                          L.rmsnorm(lp["self_attn"]["norm"], x, cfg.norm_eps),
+                          L.rmsnorm(lp["self_attn"]["norm"], x, cfg.norm_eps), causal=True)
+        x = x + h
+        h, cross_kv = _mha(cfg, lp["cross_attn"],
+                           L.rmsnorm(lp["cross_attn"]["norm"], x, cfg.norm_eps),
+                           enc_out, causal=False)
+        x = x + h
+        x = x + L.mlp(lp["ffn"], L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps))
+        if collect_kv:
+            self_kv = tuple(constrain(t, ("batch", "kv_seq", None, None)) for t in self_kv)
+            cross_kv = tuple(constrain(t, ("batch", None, None, None)) for t in cross_kv)
+            ys = (self_kv, cross_kv)
+        else:
+            ys = None
+        return constrain(x, ("batch", None, None)), ys
+
+    body = jax.checkpoint(layer, prevent_cse=False) if remat else layer
+    x, kvs = lax.scan(body, x, p["decoder"])
+    return L.rmsnorm(p["final_norm"], x, cfg.norm_eps), kvs
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = True):
+    tokens = batch["tokens"]
+    targets = batch.get("labels", jnp.pad(tokens[:, 1:], ((0, 0), (0, 1))))
+    mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+    enc_out = encode(cfg, params, batch["frames"])
+    hidden, _ = decode_train(cfg, params, tokens, enc_out, remat=remat)
+    return T.chunked_xent(cfg, params, hidden, targets, mask)
+
+
+class WhisperCache(NamedTuple):
+    k: Array            # (L, B, KV, S, hd) decoder self-attn
+    v: Array
+    ck: Array           # (L, B, KV, enc_seq, hd) cross-attn (static post-prefill)
+    cv: Array
+    pos: Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, abstract: bool = False) -> WhisperCache:
+    dt = jnp.dtype(cfg.dtype)
+    nl = cfg.num_layers
+    s_shape = (nl, batch, cfg.num_kv_heads, max_seq, cfg.head_dim)
+    c_shape = (nl, batch, cfg.num_kv_heads, cfg.encoder_seq, cfg.head_dim)
+    if abstract:
+        return WhisperCache(jax.ShapeDtypeStruct(s_shape, dt), jax.ShapeDtypeStruct(s_shape, dt),
+                            jax.ShapeDtypeStruct(c_shape, dt), jax.ShapeDtypeStruct(c_shape, dt),
+                            jax.ShapeDtypeStruct((), jnp.int32))
+    z = jnp.zeros(s_shape, dt)
+    c = jnp.zeros(c_shape, dt)
+    return WhisperCache(z, z, c, c, jnp.zeros((), jnp.int32))
+
+
+def prefill(cfg: ModelConfig, params, tokens, frames, cache: WhisperCache):
+    p = unbox(params)
+    enc_out = encode(cfg, params, frames)
+    hidden, kvs = decode_train(cfg, params, tokens, enc_out, remat=False, collect_kv=True)
+    (sk, sv), (ck, cv) = kvs
+    sk = sk.transpose(0, 1, 3, 2, 4)
+    sv = sv.transpose(0, 1, 3, 2, 4)
+    ck = ck.transpose(0, 1, 3, 2, 4)
+    cv = cv.transpose(0, 1, 3, 2, 4)
+    nk = lax.dynamic_update_slice_in_dim(cache.k, sk.astype(cache.k.dtype), 0, axis=3)
+    nv = lax.dynamic_update_slice_in_dim(cache.v, sv.astype(cache.v.dtype), 0, axis=3)
+    logits = (hidden[:, -1] @ p["lm_head"]).astype(jnp.float32)
+    return logits, WhisperCache(nk, nv, ck.astype(cache.ck.dtype), cv.astype(cache.cv.dtype),
+                                jnp.asarray(tokens.shape[1], jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, cache: WhisperCache, tokens):
+    p = unbox(params)
+    b = tokens.shape[0]
+    pos = cache.pos
+    x = p["embedding"][tokens[:, None]] * jnp.asarray(jnp.sqrt(cfg.d_model), jnp.dtype(cfg.dtype))
+    # sinusoidal position for this step
+    pos_emb = L.sinusoidal_positions(cache.k.shape[3], cfg.d_model)
+    x = x + lax.dynamic_slice_in_dim(pos_emb, pos, 1, axis=0)[None].astype(x.dtype)
+    slot_pos = L.cache_slot_positions(pos + 1, cache.k.shape[3], ring=False)
+    enc_pos = jnp.arange(cfg.encoder_seq)
+
+    def layer(carry, inp):
+        x = carry
+        lp, kc, vc, ckc, cvc = inp
+        ap = lp["self_attn"]
+        h = L.rmsnorm(ap["norm"], x, cfg.norm_eps)
+        q = L.linear(ap["wq"], h).reshape(b, 1, cfg.num_heads, cfg.head_dim)
+        k = L.linear(ap["wk"], h).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+        v = L.linear(ap["wv"], h).reshape(b, 1, cfg.num_kv_heads, cfg.head_dim)
+        kc, vc = L.cache_write(kc, vc, pos, k[:, 0], v[:, 0], ring=False)
+        o = L.decode_attention(q[:, 0], kc, vc, slot_pos, pos)
+        x = x + L.linear(ap["wo"], o.reshape(b, -1))[:, None]
+        cp = lp["cross_attn"]
+        h = L.rmsnorm(cp["norm"], x, cfg.norm_eps)
+        q = L.linear(cp["wq"], h).reshape(b, 1, cfg.num_heads, cfg.head_dim)
+        o = L.decode_attention(q[:, 0], ckc, cvc, enc_pos, jnp.asarray(cfg.encoder_seq, jnp.int32))
+        x = x + L.linear(cp["wo"], o.reshape(b, -1))[:, None]
+        x = x + L.mlp(lp["ffn"], L.rmsnorm(lp["ffn_norm"], x, cfg.norm_eps))
+        return x, (kc, vc)
+
+    x, (nk, nv) = lax.scan(layer, x, (p["decoder"], cache.k, cache.v, cache.ck, cache.cv))
+    hidden = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = (hidden[:, 0] @ p["lm_head"]).astype(jnp.float32)
+    return logits, WhisperCache(nk, nv, cache.ck, cache.cv, pos + 1)

@@ -1,0 +1,243 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunk-parallel) and sLSTM (scalar,
+sequential scan with exponential gating + stabilizer state). [arXiv:2405.04517]
+
+TPU adaptation: the mLSTM recurrence
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+is a gated linear attention; we compute it chunk-parallel exactly like the
+Mamba2 SSD path (decay-masked quadratic within chunks, scanned state across
+chunks) with the gate products tracked in log space for stability. sLSTM is
+inherently sequential (the stabilizer max is non-associative) -> lax.scan over
+time with block-diagonal recurrent weights per head.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.logical import ParamFactory
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def make_mlstm_params(pf: ParamFactory, cfg: ModelConfig, stack: int = 0):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.ssm_heads
+    hd = di // h
+    return {
+        "norm": L.make_rmsnorm(pf, d, stack=stack),
+        "up_z": pf((d, di), ("embed", "ffn"), stack=stack),
+        "up_x": pf((d, di), ("embed", "ffn"), stack=stack),
+        "wq": pf((di, di), (None, "heads"), stack=stack),
+        "wk": pf((di, di), (None, "heads"), stack=stack),
+        "wv": pf((di, di), (None, "heads"), stack=stack),
+        "w_i": pf((di, h), ("ffn", None), stack=stack),       # input gate (per head)
+        "w_f": pf((di, h), ("ffn", None), stack=stack),       # forget gate
+        "b_i": pf((h,), (None,), init="zeros", dtype=jnp.float32, stack=stack),
+        "b_f": pf((h,), (None,), init="ones", dtype=jnp.float32, stack=stack),
+        "out_norm": L.make_rmsnorm(pf, di, stack=stack),
+        "down": pf((di, d), ("ffn", "embed"), stack=stack),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: Array       # (B, H, hd, hd)  matrix memory
+    n: Array       # (B, H, hd)      normalizer
+    m: Array       # (B, H)          stabilizer (log-space running max)
+
+
+def mlstm_cell_chunked(q, k, v, log_i, log_f, chunk: int,
+                       state: Optional[MLSTMState] = None) -> Tuple[Array, MLSTMState]:
+    """Chunk-parallel mLSTM. q,k,v: (B,S,H,hd); log_i, log_f: (B,S,H).
+
+    Exact log-space formulation: weight of (key j -> query i) is
+    exp(log_i_j + sum_{j<t<=i} log_f_t - m_i) with a per-position stabilizer
+    m_i = max(running max of candidate log weights). We use the standard
+    chunkwise derivation (within-chunk quadratic + carried state).
+    """
+    bsz, s, h, hd = q.shape
+    c = min(chunk, s)
+    nc = s // c
+    assert s % c == 0
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def resh(x):
+        return x.reshape(bsz, nc, c, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    qr, kr, vr = resh(q), resh(k), resh(v)
+    lir, lfr = resh(log_i), resh(log_f)
+
+    if state is None:
+        c0 = jnp.zeros((bsz, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((bsz, h, hd), jnp.float32)
+        m0 = jnp.full((bsz, h), -1e30, jnp.float32)
+        state = MLSTMState(c0, n0, m0)
+
+    def body(carry, inp):
+        cmat, nvec, m_prev = carry
+        qc, kc, vc, lic, lfc = inp
+        fcum = jnp.cumsum(lfc, axis=1)                       # (B,c,H)
+        ftot = fcum[:, -1]
+        # log weight of in-chunk key j for query i: li_j + fcum_i - fcum_j
+        lw = lic[:, None, :, :] + fcum[:, :, None, :] - fcum[:, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        lw = jnp.where(tri[None, :, :, None], lw, -1e30)     # (B,i,j,H)
+        # carried-state log weight for query i: m_prev + fcum_i
+        lw_state = m_prev[:, None] + fcum                    # (B,c,H)
+        m_i = jnp.maximum(lw.max(axis=2), lw_state)          # (B,c,H)
+        m_i = jnp.maximum(m_i, -1e30)
+        w = jnp.exp(lw - m_i[:, :, None, :])                 # (B,i,j,H)
+        scores = jnp.einsum("bihd,bjhd->bijh", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32)) * scale
+        num_intra = jnp.einsum("bijh,bijh,bjhd->bihd", scores, w, vc.astype(jnp.float32))
+        den_intra = jnp.einsum("bijh,bijh->bih", w, scores)
+        w_state = jnp.exp(lw_state - m_i)                    # (B,c,H)
+        q_state = jnp.einsum("bihd,bhde->bihe", qc.astype(jnp.float32), cmat) * scale
+        num_inter = q_state * w_state[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qc.astype(jnp.float32), nvec) * scale * w_state
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        hout = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update in the new stabilizer frame m_new = m_prev + ftot vs max li
+        m_new = jnp.maximum(m_prev + ftot, (lic + ftot[:, None] - fcum).max(axis=1))
+        carry_w = jnp.exp(m_prev + ftot - m_new)             # (B,H)
+        key_w = jnp.exp(lic + ftot[:, None] - fcum - m_new[:, None])   # (B,c,H)
+        cmat_new = carry_w[..., None, None] * cmat + jnp.einsum(
+            "bjhd,bjh,bjhe->bhde", kc.astype(jnp.float32), key_w, vc.astype(jnp.float32))
+        nvec_new = carry_w[..., None] * nvec + jnp.einsum(
+            "bjhd,bjh->bhd", kc.astype(jnp.float32), key_w)
+        return (cmat_new, nvec_new, m_new), hout
+
+    (cm, nv, mm), hs = lax.scan(body, tuple(state), (qr, kr, vr, lir, lfr))
+    hout = hs.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, hd)
+    return hout.astype(q.dtype), MLSTMState(cm, nv, mm)
+
+
+def mlstm_cell_step(q, k, v, log_i, log_f, state: MLSTMState) -> Tuple[Array, MLSTMState]:
+    """O(1) decode step. q,k,v: (B,H,hd); log_i/log_f: (B,H)."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(hd)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    kf, vf, qf = (x.astype(jnp.float32) for x in (k, v, q))
+    c_new = f_s[..., None, None] * state.c + i_s[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = f_s[..., None] * state.n + i_s[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new) * scale
+    den = jnp.einsum("bhd,bhd->bh", qf, n_new) * scale
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return h.astype(q.dtype), MLSTMState(c_new, n_new, m_new)
+
+
+def mlstm_block(cfg: ModelConfig, mp, x, *, chunk: int = 256,
+                state: Optional[MLSTMState] = None, single_step: bool = False):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.ssm_heads
+    hd = di // h
+    bsz, s, _ = x.shape
+
+    z = jax.nn.silu(x @ mp["up_z"])
+    u = x @ mp["up_x"]
+    q = (u @ mp["wq"]).reshape(bsz, s, h, hd)
+    k = (u @ mp["wk"]).reshape(bsz, s, h, hd)
+    v = (u @ mp["wv"]).reshape(bsz, s, h, hd)
+    log_i = (u @ mp["w_i"]).astype(jnp.float32) + mp["b_i"]
+    log_f = jax.nn.log_sigmoid((u @ mp["w_f"]).astype(jnp.float32) + mp["b_f"])
+
+    if single_step:
+        assert state is not None
+        hout, new_state = mlstm_cell_step(q[:, 0], k[:, 0], v[:, 0],
+                                          log_i[:, 0], log_f[:, 0], state)
+        hout = hout[:, None]
+    else:
+        hout, new_state = mlstm_cell_chunked(q, k, v, log_i, log_f, chunk, state)
+
+    y = L.rmsnorm(mp["out_norm"], hout.reshape(bsz, -1, di) * z, cfg.norm_eps)
+    return (y @ mp["down"]).astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def make_slstm_params(pf: ParamFactory, cfg: ModelConfig, stack: int = 0):
+    d = cfg.d_model
+    h = cfg.ssm_heads
+    hd = d // h
+    return {
+        "norm": L.make_rmsnorm(pf, d, stack=stack),
+        "w_in": pf((d, 4 * d), ("embed", "ffn"), stack=stack),     # z,i,f,o pre-acts
+        "r": pf((h, hd, 4 * hd), (None, None, None), stack=stack),  # block-diag recurrent
+        "b": pf((4 * d,), ("ffn",), init="zeros", dtype=jnp.float32, stack=stack),
+        "out_norm": L.make_rmsnorm(pf, d, stack=stack),
+        "up": pf((d, 2 * d), ("embed", "ffn"), stack=stack),
+        "down": pf((d, d), ("ffn", "embed"), stack=stack),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: Array    # (B, d) cell
+    n: Array    # (B, d) normalizer
+    h: Array    # (B, d) hidden
+    m: Array    # (B, d) stabilizer
+
+
+def slstm_scan(cfg: ModelConfig, sp, x, state: Optional[SLSTMState] = None,
+               unroll: int = 1):
+    """x: (B, S, d) -> (B, S, d). Sequential over S (non-associative update)."""
+    d = cfg.d_model
+    h_heads = cfg.ssm_heads
+    hd = d // h_heads
+    bsz, s, _ = x.shape
+    pre_all = (x @ sp["w_in"]).astype(jnp.float32) + sp["b"]       # (B,S,4d)
+
+    if state is None:
+        z = jnp.zeros((bsz, d), jnp.float32)
+        state = SLSTMState(z, z, z, jnp.full((bsz, d), -1e30))
+
+    def step(st, pre_t):
+        rh = jnp.einsum("bhx,hxy->bhy", st.h.reshape(bsz, h_heads, hd),
+                        sp["r"].astype(jnp.float32)).reshape(bsz, 4 * d)
+        pre = pre_t + rh
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + st.m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + st.m - m_new)
+        c_new = f_s * st.c + i_s * zt
+        n_new = f_s * st.n + i_s
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+    new_state, hs = lax.scan(step, state, pre_all.transpose(1, 0, 2), unroll=unroll)
+    return hs.transpose(1, 0, 2).astype(x.dtype), new_state
+
+
+def slstm_block(cfg: ModelConfig, sp, x, *, state: Optional[SLSTMState] = None,
+                single_step: bool = False):
+    bsz, s, d = x.shape
+    xin = L.rmsnorm(sp["norm"], x, cfg.norm_eps)
+    hs, new_state = slstm_scan(cfg, sp, xin, state)
+    hs = L.rmsnorm(sp["out_norm"], hs, cfg.norm_eps)
+    # post-up/down projection (paper's post-up-proj sLSTM block, expand 2)
+    a, b = jnp.split(hs @ sp["up"], 2, axis=-1)
+    y = (jax.nn.gelu(a) * b) @ sp["down"]
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,154 @@
+"""Full xLSTM language model: pattern of mLSTM / sLSTM blocks.
+
+Consecutive runs of the same block type are grouped and ``lax.scan``'d over
+stacked parameters (the pattern is static config), so a 24-layer [7:1] model
+compiles as a handful of scans.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import xlstm as X
+from repro.sharding.context import constrain
+from repro.sharding.logical import ParamFactory, unbox
+
+Array = jax.Array
+
+
+def pattern_runs(pattern) -> List[Tuple[str, int]]:
+    runs = []
+    for b in pattern:
+        if runs and runs[-1][0] == b:
+            runs[-1] = (b, runs[-1][1] + 1)
+        else:
+            runs.append((b, 1))
+    return runs
+
+
+def make_params(cfg: ModelConfig, rng=None, abstract: bool = False):
+    pf = ParamFactory(rng=rng, abstract=abstract, dtype=jnp.dtype(cfg.dtype))
+    runs = pattern_runs(cfg.block_pattern)
+    blocks = []
+    for kind, n in runs:
+        if kind == "m":
+            blocks.append(("m", X.make_mlstm_params(pf, cfg, stack=n)))
+        else:
+            blocks.append(("s", X.make_slstm_params(pf, cfg, stack=n)))
+    return {
+        "embedding": pf((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="normal"),
+        "runs": tuple(dict([bp]) for bp in blocks),   # ({'m': params} | {'s': params}, ...)
+        "final_norm": L.make_rmsnorm(pf, cfg.d_model),
+        "lm_head": pf((cfg.d_model, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+class XLSTMCache(NamedTuple):
+    m_states: Tuple            # per m-run: stacked MLSTMState
+    s_states: Tuple            # per s-run: stacked SLSTMState
+    pos: Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, abstract: bool = False) -> XLSTMCache:
+    runs = pattern_runs(cfg.block_pattern)
+    di = cfg.ssm_expand * cfg.d_model
+    h = cfg.ssm_heads
+    hd_m = di // h
+    d = cfg.d_model
+
+    def mk(shape, dtype=jnp.float32):
+        return jax.ShapeDtypeStruct(shape, dtype) if abstract else jnp.zeros(shape, dtype)
+
+    m_states, s_states = [], []
+    for kind, n in runs:
+        if kind == "m":
+            m_states.append(X.MLSTMState(
+                mk((n, batch, h, hd_m, hd_m)), mk((n, batch, h, hd_m)), mk((n, batch, h))))
+        else:
+            s_states.append(X.SLSTMState(
+                mk((n, batch, d)), mk((n, batch, d)), mk((n, batch, d)), mk((n, batch, d))))
+    return XLSTMCache(tuple(m_states), tuple(s_states), mk((), jnp.int32))
+
+
+def _run_layers(cfg, run_params, kind, x, states=None, single_step=False, remat=True):
+    """Scan a homogeneous run of stacked blocks; returns (x, stacked new states)."""
+
+    def layer(x, inp):
+        lp, st = inp
+        if kind == "m":
+            h, new = X.mlstm_block(cfg, lp, L.rmsnorm(lp["norm"], x, cfg.norm_eps),
+                                   chunk=min(cfg.query_chunk, 256),
+                                   state=st, single_step=single_step)
+        else:
+            h, new = X.slstm_block(cfg, lp, x, state=st, single_step=single_step)
+        return constrain(x + h, ("batch", None, None)), new
+
+    body = jax.checkpoint(layer, prevent_cse=False) if (remat and not single_step) else layer
+    if states is None:
+        n = jax.tree.leaves(run_params)[0].shape[0]
+        b = x.shape[0]
+        di = cfg.ssm_expand * cfg.d_model
+        h = cfg.ssm_heads
+        if kind == "m":
+            states = X.MLSTMState(
+                jnp.zeros((n, b, h, di // h, di // h), jnp.float32),
+                jnp.zeros((n, b, h, di // h), jnp.float32),
+                jnp.full((n, b, h), -1e30, jnp.float32))
+        else:
+            d = cfg.d_model
+            z = jnp.zeros((n, b, d), jnp.float32)
+            states = X.SLSTMState(z, z, z, jnp.full((n, b, d), -1e30, jnp.float32))
+    x, new_states = lax.scan(layer if single_step else body, x, (run_params, states))
+    return x, new_states
+
+
+def forward(cfg: ModelConfig, params, tokens, *, remat: bool = True,
+            cache: Optional[XLSTMCache] = None, single_step: bool = False):
+    p = unbox(params)
+    runs = pattern_runs(cfg.block_pattern)
+    x = T.embed_tokens(cfg, p, tokens)
+    mi = si = 0
+    new_m, new_s = [], []
+    for (kind, _), rp in zip(runs, p["runs"]):
+        run_params = rp[kind]
+        if kind == "m":
+            st = cache.m_states[mi] if cache is not None else None
+            x, ns = _run_layers(cfg, run_params, "m", x, st, single_step, remat)
+            new_m.append(ns)
+            mi += 1
+        else:
+            st = cache.s_states[si] if cache is not None else None
+            x, ns = _run_layers(cfg, run_params, "s", x, st, single_step, remat)
+            new_s.append(ns)
+            si += 1
+    hidden = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    return hidden, (tuple(new_m), tuple(new_s))
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = True):
+    tokens = batch["tokens"]
+    targets = batch.get("labels", jnp.pad(tokens[:, 1:], ((0, 0), (0, 1))))
+    mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+    hidden, _ = forward(cfg, params, tokens, remat=remat)
+    return T.chunked_xent(cfg, params, hidden, targets, mask)
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache: XLSTMCache):
+    p = unbox(params)
+    hidden, (nm, ns) = forward(cfg, params, tokens, remat=False, cache=cache)
+    logits = (hidden[:, -1] @ p["lm_head"]).astype(jnp.float32)
+    return logits, XLSTMCache(nm, ns, jnp.asarray(tokens.shape[1], jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, cache: XLSTMCache, tokens):
+    p = unbox(params)
+    hidden, (nm, ns) = forward(cfg, params, tokens[:, None], remat=False,
+                               cache=cache, single_step=True)
+    logits = (hidden[:, 0] @ p["lm_head"]).astype(jnp.float32)
+    return logits, XLSTMCache(nm, ns, cache.pos + 1)

@@ -1,0 +1,197 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block applied
+every ``attn_every`` layers (the shared-transformer design of [arXiv:2411.15242]).
+
+The shared block has a single parameter set reused at every insertion point,
+but each insertion point keeps its own KV cache during decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.sharding.context import constrain
+from repro.sharding.logical import ParamFactory, unbox
+
+Array = jax.Array
+
+
+def make_params(cfg: ModelConfig, rng=None, abstract: bool = False):
+    pf = ParamFactory(rng=rng, abstract=abstract, dtype=jnp.dtype(cfg.dtype))
+    d = cfg.d_model
+    nl = cfg.num_layers
+    q_dim = cfg.num_heads * cfg.head_dim
+    kv_dim = cfg.num_kv_heads * cfg.head_dim
+    shared_attn = {
+        "norm": L.make_rmsnorm(pf, d),
+        "wq": L.make_linear(pf, d, q_dim, ("embed", "heads")),
+        "wk": L.make_linear(pf, d, kv_dim, ("embed", "kv")),
+        "wv": L.make_linear(pf, d, kv_dim, ("embed", "kv")),
+        "wo": L.make_linear(pf, q_dim, d, ("heads", "embed")),
+        "ffn_norm": L.make_rmsnorm(pf, d),
+        "ffn": L.make_mlp(pf, d, cfg.d_ff),
+    }
+    return {
+        "embedding": pf((cfg.vocab_size, d), ("vocab", "embed"), init="normal"),
+        "mamba": S.make_mamba2_params(pf, cfg, stack=nl),
+        "shared_attn": shared_attn,
+        "final_norm": L.make_rmsnorm(pf, d),
+        "lm_head": pf((d, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+def num_attn_sites(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.attn_every
+
+
+class ZambaCache(NamedTuple):
+    ssm_state: Array      # (L, B, H, p, n)
+    conv_state: Array     # (L, B, W-1, conv_dim)
+    k: Array              # (sites, B, KV, S, hd)
+    v: Array
+    pos: Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, abstract: bool = False) -> ZambaCache:
+    di = cfg.ssm_expand * cfg.d_model
+    p_dim = di // cfg.ssm_heads
+    conv_dim = di + 2 * cfg.ssm_state
+    sites = num_attn_sites(cfg)
+    shapes = {
+        "ssm_state": ((cfg.num_layers, batch, cfg.ssm_heads, p_dim, cfg.ssm_state), jnp.float32),
+        "conv_state": ((cfg.num_layers, batch, cfg.ssm_conv_width - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "k": ((sites, batch, cfg.num_kv_heads, max_seq, cfg.head_dim), jnp.dtype(cfg.dtype)),
+        "v": ((sites, batch, cfg.num_kv_heads, max_seq, cfg.head_dim), jnp.dtype(cfg.dtype)),
+        "pos": ((), jnp.int32),
+    }
+    if abstract:
+        vals = {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+    else:
+        vals = {k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()}
+    return ZambaCache(**vals)
+
+
+def _shared_attn_apply(cfg: ModelConfig, sp, x, positions):
+    h, kv = T.attention_block(cfg, sp, L.rmsnorm(sp["norm"], x, cfg.norm_eps), positions)
+    x = x + h
+    x = x + L.mlp(sp["ffn"], L.rmsnorm(sp["ffn_norm"], x, cfg.norm_eps))
+    return x, kv
+
+
+def forward(cfg: ModelConfig, params, tokens, *, remat: bool = True,
+            collect_cache: bool = False, positions=None):
+    p = unbox(params)
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = T.embed_tokens(cfg, p, tokens)
+    k = cfg.attn_every
+    sp = p["shared_attn"]
+
+    def layer(carry, inp):
+        x = carry
+        idx, mp = inp
+        h, st = S.mamba2_block(cfg, mp, L.rmsnorm(mp["norm"], x, cfg.norm_eps),
+                               chunk=min(cfg.query_chunk, 256))
+        x = constrain(x + h, ("batch", None, None))
+
+        def with_attn(x):
+            y, kv = _shared_attn_apply(cfg, sp, x, positions)
+            return y, kv
+
+        def without(x):
+            zkv = (jnp.zeros((b, s, cfg.num_kv_heads, cfg.head_dim), x.dtype),) * 2
+            return x, zkv
+
+        x, kv = lax.cond((idx + 1) % k == 0, with_attn, without, x)
+        if collect_cache:
+            kv = tuple(constrain(t, ("batch", "kv_seq", None, None)) for t in kv)
+            ys = (st, kv)
+        else:
+            ys = None
+        return x, ys
+
+    body = jax.checkpoint(layer, prevent_cse=False) if remat else layer
+    idxs = jnp.arange(cfg.num_layers)
+    x, ys = lax.scan(body, x, (idxs, p["mamba"]))
+    hidden = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    return hidden, ys
+
+
+def loss_fn(cfg: ModelConfig, params, batch, remat: bool = True):
+    tokens = batch["tokens"]
+    targets = batch.get("labels", jnp.pad(tokens[:, 1:], ((0, 0), (0, 1))))
+    mask = batch.get("mask", jnp.ones_like(tokens, jnp.float32))
+    hidden, _ = forward(cfg, params, tokens, remat=remat)
+    return T.chunked_xent(cfg, params, hidden, targets, mask)
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache: ZambaCache):
+    p = unbox(params)
+    b, s = tokens.shape
+    hidden, ys = forward(cfg, params, tokens, remat=False, collect_cache=True)
+    states, kvs = ys
+    kk, vv = kvs                                       # (L, B, S, KV, hd) incl. zeros
+    site_idx = jnp.arange(cfg.attn_every - 1, cfg.num_layers, cfg.attn_every)
+    kk = kk[site_idx].transpose(0, 1, 3, 2, 4)         # (sites, B, KV, S, hd)
+    vv = vv[site_idx].transpose(0, 1, 3, 2, 4)
+    newk = lax.dynamic_update_slice_in_dim(cache.k, kk.astype(cache.k.dtype), 0, axis=3)
+    newv = lax.dynamic_update_slice_in_dim(cache.v, vv.astype(cache.v.dtype), 0, axis=3)
+    logits = (hidden[:, -1] @ p["lm_head"]).astype(jnp.float32)
+    new_cache = ZambaCache(states.state, states.conv, newk, newv, jnp.asarray(s, jnp.int32))
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache: ZambaCache, tokens):
+    p = unbox(params)
+    b = tokens.shape[0]
+    pos = cache.pos
+    x = T.embed_tokens(cfg, p, tokens[:, None])
+    k_every = cfg.attn_every
+    sp = p["shared_attn"]
+    positions = jnp.broadcast_to(pos, (b, 1))
+    slot_pos = L.cache_slot_positions(pos + 1, cache.k.shape[3], ring=False)
+
+    def site_attend(x, kc, vc):
+        ap = sp
+        h = L.rmsnorm(ap["norm"], x, cfg.norm_eps)
+        q, k, v = T._project_qkv(cfg, ap, h, positions)
+        kc, vc = L.cache_write(kc, vc, pos, k[:, 0], v[:, 0], ring=False)
+        o = L.decode_attention(q[:, 0], kc, vc, slot_pos, pos)
+        x = x + L.linear(ap["wo"], o.reshape(b, -1))[:, None]
+        x = x + L.mlp(ap["ffn"], L.rmsnorm(ap["ffn_norm"], x, cfg.norm_eps))
+        return x, kc, vc
+
+    def layer(carry, inp):
+        x, kall, vall = carry
+        idx, mp, sst, cst = inp
+        h, st = S.mamba2_block(cfg, mp, L.rmsnorm(mp["norm"], x, cfg.norm_eps),
+                               state=S.SSDState(sst, cst), single_step=True)
+        x = x + h
+        site = (idx + 1) // k_every - 1
+
+        def with_attn(args):
+            x, kall, vall = args
+            kc = kall[jnp.maximum(site, 0)]
+            vc = vall[jnp.maximum(site, 0)]
+            x, kc, vc = site_attend(x, kc, vc)
+            kall = lax.dynamic_update_index_in_dim(kall, kc, jnp.maximum(site, 0), 0)
+            vall = lax.dynamic_update_index_in_dim(vall, vc, jnp.maximum(site, 0), 0)
+            return x, kall, vall
+
+        carry_out = lax.cond((idx + 1) % k_every == 0, with_attn,
+                             lambda a: a, (x, kall, vall))
+        return carry_out, (st.state, st.conv)
+
+    idxs = jnp.arange(cfg.num_layers)
+    (x, nk, nv), (nss, ncs) = lax.scan(
+        layer, (x, cache.k, cache.v), (idxs, p["mamba"], cache.ssm_state, cache.conv_state))
+    hidden = L.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = (hidden[:, 0] @ p["lm_head"]).astype(jnp.float32)
+    return logits, ZambaCache(nss, ncs, nk, nv, pos + 1)

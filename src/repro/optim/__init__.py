@@ -1,0 +1,1 @@
+from repro.optim.optimizers import sgd, adam, Optimizer  # noqa: F401

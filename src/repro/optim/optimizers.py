@@ -1,0 +1,48 @@
+"""Minimal functional optimizers (no optax in the container)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_zeros_like
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]   # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    if momentum == 0.0:
+        return Optimizer(
+            init=lambda p: (),
+            update=lambda g, s, p: (jax.tree.map(lambda x: -lr * x, g), s),
+        )
+
+    def update(g, s, p):
+        s = jax.tree.map(lambda m, x: momentum * m + x, s, g)
+        return jax.tree.map(lambda m: -lr * m, s), s
+
+    return Optimizer(init=tree_zeros_like, update=update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(p):
+        return (tree_zeros_like(p), tree_zeros_like(p), jnp.zeros((), jnp.int32))
+
+    def update(g, s, p):
+        m, v, t = s
+        t = t + 1
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        tf = t.astype(jnp.float32)
+        up = jax.tree.map(
+            lambda m_, v_: -lr * (m_ / (1 - b1**tf)) / (jnp.sqrt(v_ / (1 - b2**tf)) + eps),
+            m, v)
+        return up, (m, v, t)
+
+    return Optimizer(init=init, update=update)

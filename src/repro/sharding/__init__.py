@@ -1,0 +1,20 @@
+from repro.sharding.logical import (  # noqa: F401
+    Param,
+    ParamFactory,
+    axes_tree,
+    boxed_like,
+    unbox,
+)
+from repro.sharding.context import (  # noqa: F401
+    constrain,
+    get_rules,
+    set_rules,
+    clear_rules,
+    sharding_for_axes,
+    param_shardings,
+)
+from repro.sharding.rules import (  # noqa: F401
+    DECODE_RULES,
+    TRAIN_RULES,
+    make_rules,
+)

@@ -1,0 +1,76 @@
+"""Mesh/rules context threading for model code.
+
+Model code never mentions mesh axes directly; it calls ``constrain(x, logical)``
+with logical axis names. The launcher installs (mesh, rules) here; on CPU
+tests nothing is installed and ``constrain`` is the identity — the same model
+code runs in unit tests and in the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.logical import Param, axes_tree, is_param
+
+_state = threading.local()
+
+
+def set_rules(mesh: Mesh, rules: Dict[str, Optional[Tuple[str, ...]]]):
+    _state.mesh = mesh
+    _state.rules = rules
+
+
+def clear_rules():
+    _state.mesh = None
+    _state.rules = None
+
+
+def get_rules():
+    mesh = getattr(_state, "mesh", None)
+    rules = getattr(_state, "rules", None)
+    return mesh, rules
+
+
+def spec_for_axes(axes, rules) -> P:
+    parts = []
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        if m is None:
+            parts.append(None)
+        elif len(m) == 1:
+            parts.append(m[0])
+        else:
+            parts.append(tuple(m))
+    return P(*parts)
+
+
+def sharding_for_axes(axes) -> Optional[NamedSharding]:
+    mesh, rules = get_rules()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for_axes(axes, rules))
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint by logical axis names (identity off-mesh)."""
+    s = sharding_for_axes(logical_axes)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def param_shardings(boxed_tree):
+    """NamedSharding tree for a boxed parameter tree (for jit in_shardings)."""
+    mesh, rules = get_rules()
+    if mesh is None:
+        raise RuntimeError("no mesh installed; call set_rules() first")
+
+    def one(p):
+        if is_param(p):
+            return NamedSharding(mesh, spec_for_axes(p.axes, rules))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, boxed_tree, is_leaf=is_param)

@@ -1,0 +1,118 @@
+"""Logical-axis-annotated parameters.
+
+``Param`` is a transparent pytree box pairing an array (or ShapeDtypeStruct in
+abstract mode) with a tuple of logical axis names — the single source of truth
+consumed by (a) the sharding rules that turn logical axes into mesh
+``PartitionSpec``s and (b) the FedSubAvg ``HeatSpec`` that finds feature-keyed
+leaves ("vocab", "experts").
+
+Because Param registers its axes as pytree aux data, trees of Params flow
+through jit/grad/optimizers unchanged: gradients come back boxed with the same
+axes, so heat correction and sharding never need a second bookkeeping tree.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AxisNames = Tuple[Optional[str], ...]
+
+
+class Param:
+    """Array + logical axis names; transparent single-child pytree node."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: AxisNames):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+
+def _param_flatten(p: Param):
+    return (p.value,), p.axes
+
+
+def _param_unflatten(axes, children):
+    return Param(children[0], axes)
+
+
+jax.tree_util.register_pytree_node(Param, _param_flatten, _param_unflatten)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unbox(tree):
+    """Strip Param boxes -> plain array tree (used at apply-fn entry)."""
+    return jax.tree.map(lambda p: p.value if is_param(p) else p, tree, is_leaf=is_param)
+
+
+def axes_tree(tree):
+    """Extract the logical-axes tree (leaves: tuples of axis names)."""
+    return jax.tree.map(lambda p: p.axes if is_param(p) else None, tree, is_leaf=is_param)
+
+
+def boxed_like(values, boxed_template):
+    """Re-box a plain value tree using the axes of a boxed template."""
+    return jax.tree.map(
+        lambda v, p: Param(v, p.axes) if is_param(p) else v,
+        values,
+        boxed_template,
+        is_leaf=lambda x: x is None,
+    )
+
+
+class ParamFactory:
+    """Creates initialized or abstract parameters with logical axes.
+
+    ``abstract=True`` produces ``jax.ShapeDtypeStruct`` leaves — no device
+    allocation, which is how the dry-run instantiates 100B+ configurations on
+    a 35 GB host.
+    """
+
+    def __init__(self, rng: Optional[jax.Array] = None, abstract: bool = False,
+                 dtype=jnp.bfloat16):
+        self.rng = rng
+        self.abstract = abstract
+        self.dtype = dtype
+        self._count = 0
+
+    def _next_rng(self):
+        self._count += 1
+        return jax.random.fold_in(self.rng, self._count)
+
+    def __call__(self, shape, axes: AxisNames, init: str = "fan_in",
+                 dtype=None, stack: int = 0) -> Param:
+        """``stack`` > 0 prepends a scan-stacked layer dimension (axis "layers")."""
+        dtype = dtype or self.dtype
+        if stack:
+            shape = (stack,) + tuple(shape)
+            axes = ("layers",) + tuple(axes)
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), dtype), axes)
+        if init == "zeros":
+            v = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, dtype)
+        elif init == "normal":
+            v = (0.02 * jax.random.normal(self._next_rng(), shape, jnp.float32)).astype(dtype)
+        elif init == "fan_in":
+            fan = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / np.sqrt(max(fan, 1))
+            v = (std * jax.random.normal(self._next_rng(), shape, jnp.float32)).astype(dtype)
+        elif init == "ssm_a":
+            # mamba2 A_log init: log of uniform [1, 16]
+            u = jax.random.uniform(self._next_rng(), shape, jnp.float32, 1.0, 16.0)
+            v = jnp.log(u).astype(jnp.float32)  # keep fp32 for stability
+        else:
+            raise ValueError(init)
+        return Param(v, axes)

@@ -1,0 +1,54 @@
+"""Logical axis -> mesh axis rules per workload kind.
+
+Baseline layout (single pod, mesh ("data","model"); multi-pod prepends "pod"):
+
+    batch/clients   -> ("pod","data")     cohort / request parallelism
+    vocab rows      -> "model"            the paper's huge embedding layer
+    ffn hidden      -> "model"            Megatron-style MLP TP
+    fused q heads   -> "model"
+    fused kv dim    -> "model"            (fused KV*head_dim is divisible by 16)
+    experts         -> None (TP baseline) | "model" (expert-parallel variant)
+    kv cache seq    -> "model" (decode)   flash-decode seq sharding
+    everything else -> replicated
+
+Rules are plain dicts so perf iterations can swap entries and re-lower.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+MeshAxes = Optional[Tuple[str, ...]]
+
+
+def make_rules(kind: str, multi_pod: bool = False, expert_parallel: bool = False,
+               seq_shard_decode: bool = True) -> Dict[str, MeshAxes]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    rules: Dict[str, MeshAxes] = {
+        "batch": batch,
+        "clients": batch,
+        "vocab": ("model",),
+        # expert parallelism moves the model axis to the expert dim; each
+        # expert's FFN then lives intact on one shard group
+        "ffn": None if expert_parallel else ("model",),
+        "heads": ("model",),       # fused H*head_dim projection columns
+        "kv": ("model",),          # fused KV*head_dim projection columns
+        "embed": None,
+        "layers": None,
+        "state": None,
+        "conv": None,
+        "experts": ("model",) if expert_parallel else None,
+        # attention ACTIVATION head axes: set to ("model",) per-arch by the
+        # launcher when num_heads divides the model axis; otherwise heads stay
+        # replicated in activations (partial-head sharding makes XLA contract
+        # over a sharded head_dim -> per-chunk all-reduces, see §Perf iter 7)
+        "heads_act": None,
+        "kv_act": None,
+        "seq": None,
+        "kv_seq": ("model",) if (kind in ("decode", "prefill") and seq_shard_decode) else None,
+        "kv_heads": None,           # cache head axis (8 heads % 16 != 0 -> replicated)
+    }
+    return rules
+
+
+TRAIN_RULES = make_rules("train")
+DECODE_RULES = make_rules("decode")

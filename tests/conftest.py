@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: deliberately NO XLA_FLAGS / device-count manipulation here — tests run
+# on the single real CPU device; only launch/dryrun.py requests 512 fake
+# devices (in its own process).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,76 @@
+"""The paper's core identity (§3.2): after the N/n_m correction, the expected
+global update of parameter m equals the average of the local updates of the
+clients that involve m."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import HeatSpec, correct_update_tree, masked_cohort_mean
+from repro.core.heat import compute_heat_exact
+from repro.sharding.logical import Param, unbox
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 10_000))
+def test_expected_update_equals_submodel_average(seed):
+    """Enumerate all cohorts of size K: E_C[ (N/(n_m K)) sum_{i in C} d_i,m ]
+    == (1/n_m) sum_{i: m in S(i)} d_i,m   (Alg. 1's expectation identity)."""
+    rng = np.random.default_rng(seed)
+    n, m = 5, 7
+    involved = (rng.random((n, m)) < 0.6)
+    involved[:, 0] = True                      # a hot feature
+    involved[0, :] = True                      # ensure non-empty submodels
+    deltas = rng.normal(size=(n, m)) * involved
+    counts = involved.sum(axis=0)
+
+    from itertools import combinations
+    k = 3
+    cohorts = list(combinations(range(n), k))
+    # FedSubAvg expected update
+    agg = np.zeros(m)
+    for c in cohorts:
+        cohort_sum = deltas[list(c)].sum(axis=0)
+        agg += (n / (np.maximum(counts, 1) * k)) * cohort_sum
+    agg /= len(cohorts)
+    # average of involving clients' updates
+    want = deltas.sum(axis=0) / np.maximum(counts, 1)
+    np.testing.assert_allclose(agg, want, rtol=1e-9, atol=1e-12)
+
+
+def test_correct_update_tree_plain_and_boxed():
+    spec = HeatSpec({"emb": ("vocab", 0), "head": ("vocab", 1), "w": None})
+    upd_plain = {
+        "emb": jnp.ones((4, 2)),
+        "head": jnp.ones((2, 4)),
+        "w": jnp.ones((3,)),
+    }
+    counts = {"vocab": jnp.array([8.0, 4.0, 2.0, 0.0])}
+    out = correct_update_tree(upd_plain, spec, counts, 8.0)
+    np.testing.assert_allclose(out["emb"][:, 0], [1, 2, 4, 0])
+    np.testing.assert_allclose(out["head"][0], [1, 2, 4, 0])
+    np.testing.assert_allclose(out["w"], 1.0)
+
+    boxed = {
+        "emb": Param(jnp.ones((4, 2)), ("vocab", "embed")),
+        "head": Param(jnp.ones((2, 4)), ("embed", "vocab")),
+        "w": Param(jnp.ones((3,)), (None,)),
+    }
+    outb = correct_update_tree(boxed, spec, counts, 8.0)
+    np.testing.assert_allclose(unbox(outb)["emb"][:, 0], [1, 2, 4, 0])
+    assert outb["emb"].axes == ("vocab", "embed")
+
+
+def test_unknown_space_passes_through():
+    spec = HeatSpec({"e": ("expert", 0)})
+    out = correct_update_tree({"e": jnp.ones((2, 2))}, spec, {}, 4.0)
+    np.testing.assert_allclose(out["e"], 1.0)
+
+
+def test_masked_cohort_mean():
+    deltas = {"t": jnp.asarray([[1.0, 2.0], [3.0, 6.0]])[..., None]}
+    inv = jnp.asarray([[1.0, 1.0], [1.0, 0.0]])
+    out = masked_cohort_mean(deltas, inv)
+    np.testing.assert_allclose(out["t"][:, 0], [2.0, 2.0])

@@ -1,0 +1,25 @@
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.sharding.logical import unbox
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_smoke_config("qwen3_32b")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(3))
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, params, step=7, extra={"arch": cfg.name})
+    restored = load_checkpoint(path, params)
+    for a, b in zip(jax.tree.leaves(unbox(params)), jax.tree.leaves(unbox(restored))):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    import json
+    meta = json.load(open(path + ".meta.json"))
+    assert meta["step"] == 7
+    assert meta["extra"]["arch"] == cfg.name

@@ -1,0 +1,60 @@
+"""Heat statistics + private estimation (paper §2, App. F)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.heat import (HeatStats, client_indicator, compute_heat_exact,
+                             estimate_heat_randomized_response,
+                             estimate_heat_secure_agg, heat_correction_factors)
+
+
+def test_client_indicator_basic():
+    v = client_indicator(np.array([0, 2, 2, 5, -1, 99]), 6)
+    assert v.tolist() == [1, 0, 1, 0, 0, 1]
+
+
+def test_exact_heat_counts_clients_not_occurrences():
+    # one client using a feature many times still counts once
+    c = compute_heat_exact([np.array([1, 1, 1]), np.array([1, 2])], 3)
+    assert c.tolist() == [0.0, 2.0, 1.0]
+
+
+def test_weighted_heat():
+    c = compute_heat_exact([np.array([0]), np.array([0, 1])], 2, weights=[3.0, 5.0])
+    assert c.tolist() == [8.0, 5.0]
+
+
+def test_secure_agg_is_exact(rng):
+    ind = (rng.random((12, 40)) < 0.3).astype(np.int64)
+    est = estimate_heat_secure_agg(ind, rng)
+    np.testing.assert_array_equal(est, ind.sum(axis=0))
+
+
+@settings(deadline=None, max_examples=20)
+@given(p=st.floats(0.01, 0.45), seed=st.integers(0, 1000))
+def test_randomized_response_unbiased(p, seed):
+    # With many clients sharing the same indicator pattern, the estimator
+    # should concentrate near the true counts (unbiasedness + LLN).
+    rng = np.random.default_rng(seed)
+    base = (rng.random((1, 50)) < 0.4).astype(np.int64)
+    n = 4000
+    ind = np.tile(base, (n, 1))
+    est = estimate_heat_randomized_response(ind, p, rng)
+    true = ind.sum(axis=0)
+    # std of estimator ~ sqrt(n p (1-p)) / (1-2p)
+    tol = 6 * np.sqrt(n * p * (1 - p)) / (1 - 2 * p)
+    assert np.all(np.abs(est - true) < tol)
+
+
+def test_correction_factors_zero_rows():
+    f = heat_correction_factors(jnp.array([0.0, 1.0, 5.0]), 10.0)
+    assert f[0] == 0.0 and f[1] == 10.0 and f[2] == 2.0
+
+
+def test_heat_stats_dispersion():
+    h = HeatStats(counts=np.array([0.0, 2.0, 100.0]), total=100.0)
+    assert h.dispersion() == 50.0
+    assert h.n_min == 2.0 and h.n_max == 100.0
+    assert h.coverage() == pytest.approx(2 / 3)

@@ -1,0 +1,116 @@
+"""Per-kernel oracle sweeps: shapes x dtypes against repro.kernels.ref."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# heat_scatter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,d,v,v_blk,t_blk", [
+    (256, 8, 64, 16, 64),
+    (1024, 32, 128, 128, 256),
+    (512, 16, 512, 512, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_heat_scatter_sweep(rng, t, d, v, v_blk, t_blk, dtype):
+    ids = jnp.asarray(rng.integers(-1, v, t), jnp.int32)
+    grads = jnp.asarray(rng.normal(0, 1, (t, d))).astype(dtype)
+    heat = jnp.asarray(rng.integers(0, 9, v), jnp.float32)
+    out = ops.heat_scatter(ids, grads, heat, 100.0, v, v_blk=v_blk, t_blk=t_blk)
+    want = ref.heat_scatter_ref(ids, grads, heat, 100.0, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-2, atol=1e-2)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 10_000), v=st.sampled_from([32, 64, 96]),
+       t=st.sampled_from([64, 128]))
+def test_heat_scatter_property(seed, v, t):
+    """Scatter-sum + scale == dense one-hot matmul, any shape combo."""
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, v, t), jnp.int32)
+    grads = jnp.asarray(rng.normal(0, 1, (t, 8)), jnp.float32)
+    heat = jnp.asarray(rng.integers(1, 5, v), jnp.float32)
+    out = ops.heat_scatter(ids, grads, heat, float(v), v, v_blk=32, t_blk=32)
+    onehot = jax.nn.one_hot(ids, v, dtype=jnp.float32).T
+    want = (onehot @ grads) * (v / heat)[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,blk", [
+    (1, 128, 4, 4, 32, 64),     # MHA
+    (2, 256, 8, 2, 16, 64),     # GQA 4x
+    (1, 192, 6, 3, 64, 64),     # ragged-ish heads
+])
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, b, s, h, kv, hd, blk, window, dtype):
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, hd))).astype(dtype)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, kv, hd))).astype(dtype)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, kv, hd))).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window, blk_q=blk, blk_k=blk)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               **_tol(dtype))
+
+
+def test_flash_attention_non_causal(rng):
+    q = jnp.asarray(rng.normal(0, 1, (1, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 128, 4, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 128, 4, 32)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, blk_q=64, blk_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,kv,hd,s,blk", [
+    (2, 8, 4, 32, 256, 64),
+    (1, 4, 4, 64, 512, 128),
+    (3, 6, 2, 16, 128, 128),
+])
+@pytest.mark.parametrize("window", [0, 100])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(rng, b, h, kv, hd, s, blk, window, dtype):
+    kc = jnp.asarray(rng.normal(0, 1, (b, kv, s, hd))).astype(dtype)
+    vc = jnp.asarray(rng.normal(0, 1, (b, kv, s, hd))).astype(dtype)
+    q = jnp.asarray(rng.normal(0, 1, (b, h, hd))).astype(dtype)
+    fill = int(0.8 * s)
+    kpos = jnp.where(jnp.arange(s) < fill, jnp.arange(s), -1)
+    out = ops.flash_decode(q, kc, vc, kpos, fill - 1, window=window, blk_s=blk)
+    want = ref.flash_decode_ref(q, kc, vc, kpos, fill - 1, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               **_tol(dtype))
+
+
+def test_flash_decode_ring_buffer_positions(rng):
+    """Ring cache: slot positions wrap; kernel must mask by position value."""
+    from repro.models.layers import cache_slot_positions
+    s, written = 64, 100
+    kpos = cache_slot_positions(jnp.asarray(written), s, ring=True)
+    kc = jnp.asarray(rng.normal(0, 1, (1, 2, s, 16)), jnp.float32)
+    vc = jnp.asarray(rng.normal(0, 1, (1, 2, s, 16)), jnp.float32)
+    q = jnp.asarray(rng.normal(0, 1, (1, 4, 16)), jnp.float32)
+    out = ops.flash_decode(q, kc, vc, kpos, written - 1, window=s, blk_s=32)
+    want = ref.flash_decode_ref(q, kc, vc, kpos, written - 1, window=s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)

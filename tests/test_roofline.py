@@ -1,0 +1,78 @@
+"""Roofline analytics validation.
+
+``cost_analysis`` counts loop bodies once (verified below), so the roofline
+uses analytic FLOP totals. With num_layers=1 and a single attention/loss
+chunk there are no multi-trip loops, so HLO and analytic counts must agree —
+that pins the analytic calculator to ground truth.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.roofline import analytic_flops_for
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+
+def test_cost_analysis_counts_loop_body_once():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((64, 64))
+    flops_scan = jax.jit(f).lower(x, w).compile().cost_analysis()["flops"]
+    flops_once = jax.jit(lambda x, w: x @ w).lower(x, w).compile().cost_analysis()["flops"]
+    assert flops_scan < 2 * flops_once  # NOT ~10x: body counted once
+
+
+@pytest.mark.parametrize("arch", ["mistral_large_123b", "qwen3_32b"])
+def test_analytic_flops_match_hlo_single_layer(arch):
+    """L=1, one attention chunk, one loss chunk -> HLO flops ~= analytic."""
+    cfg = get_smoke_config(arch).replace(num_layers=1, dtype="float32",
+                                         query_chunk=64, kv_chunk=64)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    b, s = 2, 64
+    batch = {"tokens": jnp.ones((b, s), jnp.int32),
+             "labels": jnp.ones((b, s), jnp.int32),
+             "mask": jnp.ones((b, s), jnp.float32)}
+    hlo = jax.jit(api.loss).lower(params, batch).compile().cost_analysis()["flops"]
+    af = analytic_flops_for(cfg, "prefill", b, s)   # forward-only loss
+    # loss() is forward only here (no grad), so compare to the prefill estimate
+    ratio = hlo / af["total"]
+    assert 0.5 < ratio < 2.0, (hlo, af)
+
+
+def test_hlo_collective_parser_loop_multiplier():
+    """Covered end-to-end in the dry-run; here: the text-level parser math."""
+    from repro.launch.hlo import analyze_hlo
+    fake = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ag = f32[8,8] all-gather(%x), replica_groups={}
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %w = (s32[], f32[8,8]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  %ar = f32[4,4] all-reduce(%y), to_apply=%add
+}
+"""
+    rep = analyze_hlo(fake)
+    by = rep.by_op()
+    assert by["all-gather"] == 8 * 8 * 4 * 7       # trip-multiplied
+    assert by["all-reduce"] == 4 * 4 * 4           # top level once
+    assert rep.unresolved_loops == 0
+
+
+def test_analytic_flops_moe_uses_active_params():
+    cfg = get_smoke_config("mixtral_8x22b")
+    dense_equiv = cfg.replace(num_experts=0, d_ff=cfg.d_ff * cfg.experts_per_token)
+    f_moe = analytic_flops_for(cfg, "decode", 8, 4096)["matmul"]
+    f_dense = analytic_flops_for(dense_equiv, "decode", 8, 4096)["matmul"]
+    # top-2 of 4 experts ~ dense with 2x d_ff (+ router); within 15%
+    assert abs(f_moe - f_dense) / f_dense < 0.15

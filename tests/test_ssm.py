@@ -1,0 +1,96 @@
+"""Recurrent-block equivalences: chunked (train) vs single-step (decode)
+forms must implement the same recurrence."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import ssm as S
+from repro.models import xlstm as X
+
+
+def test_ssd_chunked_matches_stepwise(rng):
+    b, s, h, p, n = 2, 32, 3, 8, 4
+    x = jnp.asarray(rng.normal(0, 1, (b, s, h, p)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.01, 1.0, (b, s, h)), jnp.float32)
+    bm = jnp.asarray(rng.normal(0, 1, (b, s, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(0, 1, (b, s, n)), jnp.float32)
+
+    y_chunk, st_chunk = S.ssd_chunked(x, a, bm, cm, chunk=8)
+
+    # stepwise reference
+    state = np.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        decay = np.exp(np.asarray(a[:, t]))                     # (b,h)
+        state = state * decay[..., None, None] + np.einsum(
+            "bn,bhp->bhpn", np.asarray(bm[:, t]), np.asarray(x[:, t]))
+        ys.append(np.einsum("bhpn,bn->bhp", state, np.asarray(cm[:, t])))
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_chunk), state, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_size_invariance(rng):
+    b, s, h, p, n = 1, 24, 2, 4, 4
+    x = jnp.asarray(rng.normal(0, 1, (b, s, h, p)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.01, 0.5, (b, s, h)), jnp.float32)
+    bm = jnp.asarray(rng.normal(0, 1, (b, s, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(0, 1, (b, s, n)), jnp.float32)
+    y1, s1 = S.ssd_chunked(x, a, bm, cm, chunk=4)
+    y2, s2 = S.ssd_chunked(x, a, bm, cm, chunk=24)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-5)
+
+
+def test_mamba2_block_decode_continuity(rng):
+    """Prefill on s tokens then 1 decode step == prefill on s+1 tokens."""
+    cfg = get_smoke_config("zamba2_1_2b").replace(dtype="float32")
+    from repro.sharding.logical import ParamFactory, unbox
+    pf = ParamFactory(rng=jax.random.PRNGKey(0), abstract=False, dtype=jnp.float32)
+    mp = unbox(S.make_mamba2_params(pf, cfg))
+    b, s = 1, 12
+    x = jnp.asarray(rng.normal(0, 0.1, (b, s + 1, cfg.d_model)), jnp.float32)
+    y_full, _ = S.mamba2_block(cfg, mp, x, chunk=4)
+    y_pre, st = S.mamba2_block(cfg, mp, x[:, :s], chunk=4)
+    y_step, _ = S.mamba2_block(cfg, mp, x[:, s:s + 1], state=st, single_step=True)
+    np.testing.assert_allclose(np.asarray(y_step[:, 0]), np.asarray(y_full[:, s]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mlstm_chunked_matches_step(rng):
+    b, s, h, hd = 1, 16, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    li = jnp.asarray(rng.normal(0, 1, (b, s, h)), jnp.float32)
+    lf = jnp.asarray(rng.normal(-0.5, 0.5, (b, s, h)), jnp.float32)
+
+    y_chunk, st_chunk = X.mlstm_cell_chunked(q, k, v, li, lf, chunk=4)
+
+    st = X.MLSTMState(jnp.zeros((b, h, hd, hd)), jnp.zeros((b, h, hd)),
+                      jnp.full((b, h), -1e30))
+    ys = []
+    for t in range(s):
+        y, st = X.mlstm_cell_step(q[:, t], k[:, t], v[:, t], li[:, t], lf[:, t], st)
+        ys.append(np.asarray(y))
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), y_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_chunk.c), np.asarray(st.c), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_slstm_state_continuity(rng):
+    cfg = get_smoke_config("xlstm_350m").replace(dtype="float32")
+    from repro.sharding.logical import ParamFactory, unbox
+    pf = ParamFactory(rng=jax.random.PRNGKey(0), abstract=False, dtype=jnp.float32)
+    sp = unbox(X.make_slstm_params(pf, cfg))
+    b, s = 2, 10
+    x = jnp.asarray(rng.normal(0, 0.5, (b, s + 4, cfg.d_model)), jnp.float32)
+    y_full, _ = X.slstm_scan(cfg, sp, x)
+    y_a, st = X.slstm_scan(cfg, sp, x[:, :s])
+    y_b, _ = X.slstm_scan(cfg, sp, x[:, s:], state=st)
+    np.testing.assert_allclose(np.asarray(y_b), np.asarray(y_full[:, s:]),
+                               rtol=1e-4, atol=1e-4)

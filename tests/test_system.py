@@ -1,0 +1,112 @@
+"""End-to-end system behaviour: federated LM training on the host device and
+the serving path, exercising the same code the pod dry-run lowers."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FedConfig, get_smoke_config
+from repro.data import make_lm_federated
+from repro.federated import make_round_step
+from repro.models import build_model
+from repro.sharding.logical import unbox
+
+
+def test_federated_lm_training_reduces_loss():
+    """A tiny decoder LM trained with FedSubAvg rounds (fedsgd mode) on a
+    Zipf-heat federated corpus: loss must drop substantially."""
+    cfg = get_smoke_config("qwen2_5_14b").replace(dtype="float32", vocab_size=512)
+    api = build_model(cfg)
+    ds = make_lm_federated(num_clients=64, vocab=cfg.vocab_size, seq_len=32,
+                           samples_per_client=2)
+    fed = FedConfig(num_clients=ds.num_clients, clients_per_round=8,
+                    lr=0.05, algorithm="fedsubavg")
+    params = api.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_round_step(api.loss, params, fed, mode="fedsgd"))
+    heat = jnp.asarray(ds.heat.counts, jnp.float32)
+    rng = np.random.default_rng(0)
+
+    losses = []
+    for r in range(40):
+        ids = rng.choice(ds.num_clients, size=8, replace=False)
+        toks = ds.client_data["tokens"][ids, rng.integers(0, 2, size=8)]
+        batch = {"tokens": jnp.asarray(toks), "heat_vocab": heat}
+        params, metrics = step(params, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 2.0, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_fedsubavg_vs_fedavg_on_lm():
+    """Heat correction accelerates the embedding-heavy LM too."""
+    cfg = get_smoke_config("qwen2_5_14b").replace(dtype="float32", vocab_size=512,
+                                                  num_layers=2)
+    api = build_model(cfg)
+    ds = make_lm_federated(num_clients=64, vocab=cfg.vocab_size, seq_len=32,
+                           samples_per_client=2, zipf_a=1.5)
+    heat = jnp.asarray(ds.heat.counts, jnp.float32)
+    rng_master = np.random.default_rng(1)
+    order = [rng_master.choice(ds.num_clients, size=8, replace=False) for _ in range(25)]
+
+    def run(correct):
+        fed = FedConfig(num_clients=ds.num_clients, clients_per_round=8, lr=0.05,
+                        algorithm="fedsubavg" if correct else "fedavg")
+        params = api.init(jax.random.PRNGKey(0))
+        step = jax.jit(make_round_step(api.loss, params, fed, mode="fedsgd",
+                                       correct=correct))
+        rng = np.random.default_rng(2)
+        loss = None
+        for ids in order:
+            toks = ds.client_data["tokens"][ids, rng.integers(0, 2, size=8)]
+            batch = {"tokens": jnp.asarray(toks), "heat_vocab": heat}
+            params, metrics = step(params, batch)
+            loss = float(metrics["loss"])
+        return loss
+
+    l_sub = run(True)
+    l_avg = run(False)
+    assert l_sub < l_avg, (l_sub, l_avg)
+
+
+def test_serve_path_greedy_decode():
+    """Prefill + N greedy decode steps produce a stable token stream."""
+    cfg = get_smoke_config("mixtral_8x22b").replace(dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    cache = api.init_cache(b, s + 8)
+    logits, cache = jax.jit(api.prefill)(params, {"tokens": toks}, cache)
+    decode = jax.jit(api.decode_step)
+    outs = []
+    for _ in range(8):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits, cache = decode(params, cache, {"tokens": nxt})
+        outs.append(nxt)
+        assert not bool(jnp.isnan(logits).any())
+    assert int(cache.pos) == s + 8
+    assert jnp.stack(outs).shape == (8, b)
+
+
+def test_heat_scatter_in_training_path(rng):
+    """The Pallas kernel reproduces the autodiff embedding update: sparse
+    token-grad scatter + heat scale == dense grad row scaling."""
+    from repro.kernels import ops
+    cfg = get_smoke_config("qwen3_32b").replace(dtype="float32", num_layers=2)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    b, s = 2, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    heat = jnp.asarray(rng.integers(1, 20, cfg.vocab_size), jnp.float32)
+    n = 100.0
+    factor = jnp.where(heat > 0, n / jnp.maximum(heat, 1.0), 0.0)
+
+    # the kernel consumes token-level grads (the VJP of the embedding gather);
+    # scatter(token_grads) * factor must equal the dense autodiff row update
+    tok_grads = jnp.asarray(rng.normal(0, 1, (b * s, cfg.d_model)), jnp.float32)
+    out = ops.heat_scatter(toks.reshape(-1), tok_grads, heat, n, cfg.vocab_size,
+                           v_blk=128, t_blk=64)
+    want = jnp.zeros((cfg.vocab_size, cfg.d_model)).at[toks.reshape(-1)].add(tok_grads)
+    want = want * factor[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
