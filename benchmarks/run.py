@@ -13,6 +13,7 @@ SUITES = (
     "benchmarks.bench_table1",
     "benchmarks.bench_conditioning",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_sparse",
     "benchmarks.bench_table2",
     "benchmarks.bench_table3",
     "benchmarks.bench_roofline",

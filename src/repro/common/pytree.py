@@ -45,3 +45,16 @@ def tree_bytes(a) -> int:
 
 def cast_tree(a, dtype):
     return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a)
+
+
+def tree_path_keys(path) -> tuple:
+    """``tree_flatten_with_path`` key path -> plain (key | index | name) tuple."""
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(p.key)
+        elif hasattr(p, "idx"):
+            out.append(p.idx)
+        else:
+            out.append(p.name)
+    return tuple(out)

@@ -188,6 +188,11 @@ class FedConfig:
     rr_flip_prob: float = 0.1        # randomized-response flip probability
     seed: int = 0
 
+    # --- sparse submodel update plane (repro.sparse) ---
+    sparse: bool = False             # row-sparse client deltas + sparse server agg
+    sparse_topk: int = 0             # >0: per-client top-k row sparsification
+    sparse_int8: bool = False        # int8 row payloads (unbiased stochastic round)
+
 
 # ---------------------------------------------------------------------------
 # Registry

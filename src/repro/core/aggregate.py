@@ -45,6 +45,22 @@ def _broadcast_factor(factors: Array, leaf: Array, row_axis: int) -> Array:
     return factors.reshape(shape)
 
 
+def correct_dense_leaf(leaf: Array, space, heat_counts: Dict[str, Array],
+                       total: float) -> Array:
+    """Broadcast ``N / n_m`` onto one dense leaf tagged ``(space, axis)``.
+
+    Identity for untagged leaves or spaces without stats. The single source
+    of the dense-broadcast correction — shared by ``correct_update_tree``
+    and the sparse plane's dense-leaf branches, so the two planes cannot
+    drift apart.
+    """
+    if space is None or space[0] not in heat_counts:
+        return leaf
+    name, axis = space
+    factors = heat_correction_factors(heat_counts[name], total).astype(leaf.dtype)
+    return leaf * _broadcast_factor(factors, leaf, axis)
+
+
 def correct_update_tree(
     update,
     heat_spec: HeatSpec,
@@ -63,14 +79,7 @@ def correct_update_tree(
     plain = unbox(update) if boxed else update
 
     def fix(leaf, space):
-        if space is None:
-            return leaf
-        name, axis = space
-        if name not in heat_counts:
-            return leaf          # no stats for this space -> factor 1
-        counts = heat_counts[name]
-        factors = heat_correction_factors(counts, total).astype(leaf.dtype)
-        return leaf * _broadcast_factor(factors, leaf, axis)
+        return correct_dense_leaf(leaf, space, heat_counts, total)
 
     out = jax.tree.map(fix, plain, heat_spec.leaf_spaces, is_leaf=lambda x: x is None)
     return boxed_like(out, update) if boxed else out

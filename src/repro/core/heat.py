@@ -68,12 +68,15 @@ def estimate_heat_secure_agg(indicators: np.ndarray, rng: Optional[np.random.Gen
     acc = np.zeros((m,), dtype=np.uint64)
     for i in range(n):
         vec = masked[i].copy()
-        # every client re-derives the same pair mask from a shared seed;
-        # here: seed = (min(i,j), max(i,j))
+        # every client re-derives the same pair mask from a shared seed:
+        # SeedSequence((min(i,j), max(i,j))) — a stable function of the pair,
+        # unlike Python's per-process-salted hash(), so runs reproduce
+        # bit-identically across processes
         for j in range(n):
             if j == i:
                 continue
-            pair_rng = np.random.default_rng(hash((min(i, j), max(i, j))) % (1 << 63))
+            pair_rng = np.random.default_rng(
+                np.random.SeedSequence((min(i, j), max(i, j))))
             mask = pair_rng.integers(0, modulus, size=m, dtype=np.uint64)
             if i < j:
                 vec = (vec + mask) % modulus

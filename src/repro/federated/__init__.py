@@ -1,3 +1,8 @@
 from repro.federated.client import make_local_trainer  # noqa: F401
+from repro.federated.metrics import comm_summary  # noqa: F401
 from repro.federated.server import FederatedTrainer  # noqa: F401
-from repro.federated.simulation import heat_spec_from_axes, make_round_step  # noqa: F401
+from repro.federated.simulation import (  # noqa: F401
+    heat_spec_from_axes,
+    make_round_step,
+    sparse_table_paths,
+)

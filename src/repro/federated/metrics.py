@@ -1,6 +1,9 @@
-"""Evaluation metrics: binary accuracy and AUC (rank statistic, as the paper
-plots test AUC for the CTR tasks)."""
+"""Evaluation metrics: binary accuracy, AUC (rank statistic, as the paper
+plots test AUC for the CTR tasks), and comm-cost summaries for the sparse
+submodel update plane."""
 from __future__ import annotations
+
+from typing import Dict, Sequence
 
 import numpy as np
 
@@ -32,3 +35,27 @@ def auc(labels: np.ndarray, scores: np.ndarray) -> float:
 
 def accuracy(labels: np.ndarray, scores: np.ndarray) -> float:
     return float(((scores > 0) == (np.asarray(labels) > 0.5)).mean())
+
+
+def comm_summary(comm_log: Sequence) -> Dict[str, float]:
+    """Totals over a list of ``repro.sparse.comm.CommStats`` rounds.
+
+    ``up_ratio`` / ``down_ratio`` are dense-baseline over sparse-plane bytes:
+    > 1 means the sparse plane saved wire traffic.
+    """
+    if not comm_log:
+        return {"rounds": 0, "bytes_up_sparse": 0.0, "bytes_up_dense": 0.0,
+                "bytes_down_sparse": 0.0, "bytes_down_dense": 0.0,
+                "mean_density": 1.0, "up_ratio": 1.0, "down_ratio": 1.0}
+    up_s = sum(c.bytes_up_sparse for c in comm_log)
+    up_d = sum(c.bytes_up_dense for c in comm_log)
+    dn_s = sum(c.bytes_down_sparse for c in comm_log)
+    dn_d = sum(c.bytes_down_dense for c in comm_log)
+    return {
+        "rounds": len(comm_log),
+        "bytes_up_sparse": up_s, "bytes_up_dense": up_d,
+        "bytes_down_sparse": dn_s, "bytes_down_dense": dn_d,
+        "mean_density": float(np.mean([c.density for c in comm_log])),
+        "up_ratio": up_d / max(up_s, 1.0),
+        "down_ratio": dn_d / max(dn_s, 1.0),
+    }

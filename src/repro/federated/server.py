@@ -16,17 +16,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import tree_add, tree_scale
+from repro.common.pytree import tree_add, tree_path_keys, tree_scale
 from repro.configs.base import FedConfig
 from repro.core.aggregate import HeatSpec
 from repro.core.algorithms import ServerState, make_server_algorithm
-from repro.core.heat import (HeatStats, estimate_heat_randomized_response,
-                             heat_correction_factors)
+from repro.core.heat import HeatStats, estimate_heat_randomized_response
 from repro.data.batching import pooled_batches, sample_cohort_batch
 from repro.data.synthetic import FederatedDataset
 from repro.federated.client import cohort_deltas, make_local_trainer
 from repro.federated.metrics import accuracy, auc
-from repro.federated.simulation import heat_spec_from_axes
+from repro.federated.simulation import heat_spec_from_axes, sparse_table_paths
+from repro.sharding.logical import boxed_like, unbox
+from repro.sparse.aggregate import apply_rowsparse, sparse_cohort_aggregate
+from repro.sparse.comm import CommStats, round_comm_stats
+from repro.sparse.compress import dequantize_rows, quantize_rows_int8, topk_rows
+from repro.sparse.encode import decode_delta_tree, encode_delta_tree
+from repro.sparse.rowsparse import is_rowsparse
 
 
 @dataclass
@@ -34,6 +39,10 @@ class RoundRecord:
     round: int
     train_loss: float
     test_metric: float
+    # comm accounting (sparse mode; zeros on the dense path)
+    bytes_up: float = 0.0            # cumulative sparse-plane uplink bytes
+    bytes_down: float = 0.0          # cumulative sparse-plane downlink bytes
+    density: float = 1.0             # mean per-client submodel density so far
 
 
 class FederatedTrainer:
@@ -55,15 +64,24 @@ class FederatedTrainer:
         heat_spec = heat_spec_from_axes(params)
         heat_counts = {"vocab": jnp.asarray(self.heat.counts, jnp.float32)}
         total = self.heat.total
+        self._heat_spec = heat_spec
+        self._heat_counts = heat_counts
         self.alg = make_server_algorithm(cfg, heat_spec=heat_spec,
                                          heat_counts=heat_counts, total=total)
         self.state = self.alg.init(params)
 
         if cfg.algorithm == "central":
             self._central_step = jax.jit(self._make_central_step())
+        elif cfg.sparse:
+            # jit caches one trace per sub_ids capacity (kept to O(log V)
+            # variants by the power-of-two rounding in _run_sparse_round)
+            self._sparse_step = jax.jit(self._make_sparse_round_step())
+            self._prepare_sparse_plane(params)
         else:
             self._round_step = jax.jit(self._make_round_step())
         self.history: List[RoundRecord] = []
+        self.comm_log: List[CommStats] = []
+        self._rounds_run = 0
 
     # ------------------------------------------------------------------
     def _resolve_heat(self, ds: FederatedDataset, cfg: FedConfig) -> HeatStats:
@@ -112,6 +130,111 @@ class FederatedTrainer:
 
         return round_step
 
+    # ------------------------------------------------------------------
+    # sparse submodel update plane (repro.sparse)
+    # ------------------------------------------------------------------
+    def _prepare_sparse_plane(self, params):
+        """Precompute static metadata for the row-sparse round path."""
+        plain = unbox(params)
+        sparse_paths = {p for p, _ in sparse_table_paths(self._heat_spec)}
+        dense_bytes = sparse_static = row_payload = 0.0
+        row_elems = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(plain)[0]:
+            nbytes = float(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+            dense_bytes += nbytes
+            if tree_path_keys(path) in sparse_paths:
+                row_payload += nbytes / leaf.shape[0]
+                row_elems += int(np.prod(leaf.shape)) // leaf.shape[0]
+            else:
+                sparse_static += nbytes
+        self._comm_meta = (dense_bytes, sparse_static, row_payload, row_elems)
+        keys = [self.ds.feature_key]
+        if self.ds.feature_key == "hist" and "target" in self.ds.client_data:
+            keys.append("target")
+        self._feature_batch_keys = keys
+
+    def _make_sparse_round_step(self):
+        cfg = self.cfg
+        local_train = make_local_trainer(self.loss_fn, cfg)
+        correct = cfg.algorithm == "fedsubavg"
+        sparse_apply = cfg.algorithm in ("fedavg", "fedprox", "fedsubavg")
+        eta = cfg.server_lr
+        base_key = jax.random.PRNGKey(cfg.seed + 17)
+
+        def round_step(state: ServerState, cohort_batch, sub_ids):
+            deltas = cohort_deltas(local_train, state.params, cohort_batch)
+            enc = encode_delta_tree(deltas, self._heat_spec, sub_ids)
+            if cfg.sparse_topk:
+                enc = jax.tree.map(
+                    lambda l: jax.vmap(lambda rs: topk_rows(rs, cfg.sparse_topk))(l)
+                    if is_rowsparse(l) else l, enc, is_leaf=is_rowsparse)
+            if cfg.sparse_int8:
+                key = jax.random.fold_in(base_key, state.rounds)
+                enc = jax.tree.map(
+                    lambda l: dequantize_rows(quantize_rows_int8(l, key))
+                    if is_rowsparse(l) else l, enc, is_leaf=is_rowsparse)
+            agg = sparse_cohort_aggregate(
+                enc, self._heat_spec, self._heat_counts, self.heat.total,
+                cfg.clients_per_round, correct=correct)
+            if sparse_apply:
+                # FedAvg/FedSubAvg server: scatter-add the union rows; the
+                # heat correction is already fused into the aggregate.
+                plain = unbox(state.params)
+
+                def ap(p, u):
+                    if is_rowsparse(u):
+                        return apply_rowsparse(p, u, eta)
+                    return p + (u * eta).astype(p.dtype)
+
+                new_plain = jax.tree.map(ap, plain, agg)
+                new_params = boxed_like(new_plain, state.params)
+                new_state = ServerState(new_params, state.opt, state.rounds + 1)
+            else:
+                # stateful server optimizers (scaffold/fedadam) consume the
+                # dense mean delta; densify once at the server boundary
+                dense = boxed_like(decode_delta_tree(agg), state.params)
+                new_state = self.alg.apply(state, dense)
+            first = jax.tree.map(lambda x: x[:, 0], cohort_batch)
+            loss = jax.vmap(lambda b: self.loss_fn(state.params, b))(first).mean()
+            return new_state, loss
+
+        return round_step
+
+    def _run_sparse_round(self) -> float:
+        cfg = self.cfg
+        ids = self.np_rng.choice(self.ds.num_clients, size=cfg.clients_per_round,
+                                 replace=False)
+        cohort = sample_cohort_batch(self.ds, ids, cfg.local_iters, cfg.local_batch,
+                                     self.np_rng)
+        feats = [np.asarray(cohort[k]).reshape(len(ids), -1)
+                 for k in self._feature_batch_keys]
+        per_client = [np.unique(np.concatenate([f[k_] for f in feats]))
+                      for k_ in range(len(ids))]
+        per_client = [u[u >= 0] for u in per_client]
+        valid_counts = np.array([len(u) for u in per_client])
+        # pow2 capacity bounds jit recompiles to O(log V) variants
+        capacity = 8
+        while capacity < valid_counts.max():
+            capacity *= 2
+        capacity = min(capacity, self.ds.num_features)
+        sub_ids = np.full((len(ids), capacity), -1, np.int32)
+        for k_, u in enumerate(per_client):
+            sub_ids[k_, : len(u)] = u
+        cohort = {k: jnp.asarray(v) for k, v in cohort.items()}
+        self.state, loss = self._sparse_step(self.state, cohort,
+                                             jnp.asarray(sub_ids))
+        # uplink: top-k keeps exactly min(k, valid) delta rows per client;
+        # downlink (the submodel download) and density stay at the full
+        # per-client feature counts
+        up_counts = (np.minimum(valid_counts, cfg.sparse_topk)
+                     if cfg.sparse_topk else valid_counts)
+        dense_bytes, sparse_static, row_payload, row_elems = self._comm_meta
+        self.comm_log.append(round_comm_stats(
+            self._rounds_run, dense_bytes, sparse_static, row_payload,
+            valid_counts, self.ds.num_features, int8=cfg.sparse_int8,
+            row_elems=row_elems, uplink_rows_per_client=up_counts))
+        return float(loss)
+
     def _make_central_step(self):
         def central_step(state: ServerState, batches):
             def step(p, batch):
@@ -126,6 +249,7 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
     def run_round(self) -> float:
         cfg = self.cfg
+        self._rounds_run += 1
         if cfg.algorithm == "central":
             batches = pooled_batches(self.ds, cfg.local_iters,
                                      cfg.local_batch * cfg.clients_per_round,
@@ -133,6 +257,8 @@ class FederatedTrainer:
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
             self.state, loss = self._central_step(self.state, batches)
             return float(loss)
+        if cfg.sparse:
+            return self._run_sparse_round()
         ids = self.np_rng.choice(self.ds.num_clients, size=cfg.clients_per_round,
                                  replace=False)
         cohort = sample_cohort_batch(self.ds, ids, cfg.local_iters, cfg.local_batch,
@@ -158,12 +284,23 @@ class FederatedTrainer:
             tot += float(self.loss_fn(self.state.params, b))
         return tot / num_batches
 
+    def comm_summary(self) -> Dict[str, float]:
+        """Aggregate comm accounting over all sparse rounds so far."""
+        from repro.federated.metrics import comm_summary
+        return comm_summary(self.comm_log)
+
     def run(self, rounds: int, eval_every: int = 10, verbose: bool = False):
         for r in range(rounds):
             loss = self.run_round()
             if (r + 1) % eval_every == 0 or r == rounds - 1:
                 metric = self.evaluate()
-                self.history.append(RoundRecord(r + 1, self.train_loss(), metric))
+                rec = RoundRecord(r + 1, self.train_loss(), metric)
+                if self.comm_log:
+                    s = self.comm_summary()
+                    rec.bytes_up = s["bytes_up_sparse"]
+                    rec.bytes_down = s["bytes_down_sparse"]
+                    rec.density = s["mean_density"]
+                self.history.append(rec)
                 if verbose:
                     print(f"[{self.cfg.algorithm}] round {r+1}: "
                           f"loss={self.history[-1].train_loss:.4f} "

@@ -25,11 +25,15 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.common.pytree import tree_add, tree_scale
+from repro.common.pytree import tree_add, tree_path_keys, tree_scale
 from repro.configs.base import FedConfig
-from repro.core.aggregate import HeatSpec, correct_update_tree
+from repro.core.aggregate import HeatSpec, correct_dense_leaf, correct_update_tree
 from repro.federated.client import cohort_deltas, make_local_trainer
-from repro.sharding.logical import axes_tree
+from repro.sharding.logical import axes_tree, boxed_like, unbox
+from repro.sparse.aggregate import heat_factor_at
+from repro.sparse.encode import (DEFAULT_SPARSE_SPACES, batch_union_ids,
+                                 sparse_eligible, submodel_value_and_grad)
+from repro.sparse.rowsparse import is_rowsparse
 
 
 def heat_spec_from_axes(boxed_params,
@@ -57,8 +61,24 @@ def heat_spec_from_axes(boxed_params,
     return HeatSpec(jax.tree.map(leaf_space, axes, is_leaf=is_axes))
 
 
+def _is_space(x) -> bool:
+    return x is None or (isinstance(x, tuple) and len(x) == 2
+                         and isinstance(x[0], str) and isinstance(x[1], int))
+
+
+def sparse_table_paths(heat_spec: HeatSpec, spaces=None):
+    """Paths of the leaves that ride the sparse plane (axis-0 feature tables)."""
+    if spaces is None:
+        spaces = DEFAULT_SPARSE_SPACES
+    flat, _ = jax.tree_util.tree_flatten_with_path(heat_spec.leaf_spaces,
+                                                   is_leaf=_is_space)
+    return [(tree_path_keys(path), space) for path, space in flat
+            if sparse_eligible(space, spaces)]
+
+
 def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
-                    mode: str = "fedsgd", correct: bool = True) -> Callable:
+                    mode: str = "fedsgd", correct: bool = True,
+                    feature_key: str = "tokens") -> Callable:
     """Build the jittable federated round step for pod-scale training.
 
     round_step(params, batch) -> (new_params, metrics)
@@ -124,6 +144,78 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
             new = jax.tree.map(lambda p, c: (p + c.astype(p.dtype) * cfg.server_lr),
                                params, corrected)
             return new, {"loss": loss}
+
+        return round_step
+
+    if mode == "sparse":
+        # fedsgd semantics on the sparse update plane: the feature-table
+        # update is computed, corrected, and applied in (ids, rows) form —
+        # the dense (V, D) delta never exists. Gather-before-backward (the
+        # submodel swap in repro.sparse.encode) is used when the model has a
+        # single axis-0 feature table, which covers the LM zoo; otherwise
+        # dense grads are encoded post-hoc (still exact: lookup-table grads
+        # are supported on the batch ids).
+        assert cfg.microbatches <= 1, "sparse mode composes with microbatches=1"
+        paths = sparse_table_paths(heat_spec)
+        if len(paths) != 1:
+            # one table <-> one feature key is what keeps this path exact:
+            # with several tables the single batch_union_ids could not cover
+            # every table's gradient support (FederatedTrainer's sparse path
+            # handles multi-key models; it derives ids per client host-side)
+            raise ValueError(
+                f"sparse mode supports exactly one axis-0 feature table, "
+                f"found {len(paths)}: {[p for p, _ in paths]}")
+        n_total = float(cfg.num_clients)
+        plain_template = unbox(boxed_params_template)
+        node = plain_template
+        for k in paths[0][0]:
+            node = node[k]
+        vocab = int(node.shape[0])
+
+        def round_step(params, batch):
+            heat = {k: v for k, v in batch.items() if k.startswith("heat_")}
+            data = {k: v for k, v in batch.items() if not k.startswith("heat_")}
+            tokens = data[feature_key]
+            if "labels" not in data and tokens.ndim == 2:
+                # pin CE targets to the ORIGINAL token ids before the
+                # submodel swap remaps them to row slots (every LM family's
+                # loss falls back to next-token targets from batch["tokens"])
+                data = {**data,
+                        "labels": jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))}
+            capacity = min(vocab, int(tokens.size))
+            capacity += (-capacity) % 8
+            ids = batch_union_ids(data, (feature_key,), capacity)
+            loss, grads = submodel_value_and_grad(
+                loss_fn, params, data, paths[0][0], (feature_key,), ids)
+
+            plain_params = unbox(params)
+            plain_grads = unbox(grads)
+
+            def apply_leaf(p, g, space):
+                if is_rowsparse(g):
+                    if correct:
+                        factor = heat_factor_at(heat[f"heat_{space[0]}"],
+                                                g.ids, n_total)
+                    else:
+                        factor = jnp.where(g.ids >= 0, 1.0, 0.0)
+                    bshape = factor.shape + (1,) * (g.rows.ndim - 1)
+                    rows = (g.rows.astype(jnp.float32)
+                            * factor.reshape(bshape) * (-cfg.lr) * cfg.server_lr)
+                    safe = jnp.where(g.ids >= 0, g.ids, g.num_rows)
+                    return p.at[safe].add(rows.astype(p.dtype), mode="drop")
+                delta = g.astype(jnp.float32) * (-cfg.lr)
+                if correct:
+                    counts = {k[len("heat_"):]: v for k, v in heat.items()}
+                    delta = correct_dense_leaf(delta, space, counts, n_total)
+                return p + delta.astype(p.dtype) * cfg.server_lr
+
+            new_plain = jax.tree.map(apply_leaf, plain_params, plain_grads,
+                                     heat_spec.leaf_spaces)
+            new = boxed_like(new_plain, params)
+            sub_rows = (ids >= 0).sum()
+            metrics = {"loss": loss, "sub_rows": sub_rows,
+                       "density": sub_rows / vocab}
+            return new, metrics
 
         return round_step
 

@@ -1,18 +1,27 @@
-"""Pallas TPU kernel: fused FedSubAvg embedding-update aggregation.
+"""Pallas TPU kernel: fused FedSubAvg row-sparse aggregation.
 
-The paper's server-side hot path: cohort token-level embedding gradients
-(T, D) with token ids (T,) must be (a) scatter-added into vocab rows and
-(b) scaled by the heat correction ``N / n_v`` (Algorithm 1 line 9).
+The paper's server-side hot path, generalised from token-level embedding
+gradients to arbitrary row-sparse deltas: rows ``(T, D)`` tagged with target
+ids ``(T,)`` must be (a) scatter-added into the ``(V, D)`` feature table and
+(b) scaled by ``scale * N / n_v`` — the cohort-mean factor and the heat
+correction (Algorithm 1 line 9) fused into one pass. Token gradients are the
+special case where ids repeat per occurrence; cohort row-sparse deltas are
+the case where ids repeat once per contributing client.
 
 GPU implementations scatter with atomics; the TPU-native form is a blocked
-one-hot matmul — for each (vocab_tile x token_tile) grid cell, build the
+one-hot matmul — for each (vocab_tile x row_tile) grid cell, build the
 (V_BLK, T_BLK) one-hot match matrix in VREGs and accumulate
-``one_hot @ grads_block`` on the MXU into the VMEM-resident output tile. The
-heat scaling fuses into the final token-block iteration, so the corrected
+``one_hot @ rows_block`` on the MXU into the VMEM-resident output tile. The
+fused scaling happens in the final row-block iteration, so the corrected
 update never round-trips through HBM uncorrected.
 
-Grid: (vocab_tiles, token_tiles); token dim is the TPU-sequential minor grid
-axis, so accumulation into ``out_ref`` across token tiles is well-defined.
+Grid: (vocab_tiles, row_tiles); the row dim is the TPU-sequential minor grid
+axis, so accumulation into ``out_ref`` across row tiles is well-defined (the
+vocab axis is embarrassingly parallel and marked as such for Mosaic).
+
+Backend selection happens at runtime: on TPU the kernel compiles for real
+(``interpret=False``); everywhere else it falls back to interpret mode,
+which executes the same kernel body and is the CI validation target.
 """
 from __future__ import annotations
 
@@ -26,8 +35,8 @@ DEFAULT_V_BLK = 512
 DEFAULT_T_BLK = 1024
 
 
-def _kernel(ids_ref, grads_ref, heat_ref, out_ref, *, total: float, v_blk: int,
-            t_blk: int, nt: int):
+def _kernel(ids_ref, rows_ref, heat_ref, out_ref, *, total: float, scale: float,
+            v_blk: int, t_blk: int, nt: int):
     iv = pl.program_id(0)
     it = pl.program_id(1)
 
@@ -37,35 +46,84 @@ def _kernel(ids_ref, grads_ref, heat_ref, out_ref, *, total: float, v_blk: int,
 
     ids = ids_ref[...]                                   # (T_BLK,)
     base = iv * v_blk
-    rows = base + jax.lax.broadcasted_iota(jnp.int32, (v_blk, t_blk), 0)
-    onehot = (rows == ids[None, :]).astype(jnp.float32)  # (V_BLK, T_BLK)
-    grads = grads_ref[...].astype(jnp.float32)           # (T_BLK, D)
-    out_ref[...] += jnp.dot(onehot, grads, preferred_element_type=jnp.float32)
+    vrows = base + jax.lax.broadcasted_iota(jnp.int32, (v_blk, t_blk), 0)
+    # padding ids (-1) are < 0 and match no vocab row in any tile
+    onehot = (vrows == ids[None, :]).astype(jnp.float32)  # (V_BLK, T_BLK)
+    rows = rows_ref[...].astype(jnp.float32)             # (T_BLK, D)
+    out_ref[...] += jnp.dot(onehot, rows, preferred_element_type=jnp.float32)
 
     @pl.when(it == nt - 1)
     def _finalize():
         heat = heat_ref[...].astype(jnp.float32)         # (V_BLK,)
-        factor = jnp.where(heat > 0, total / jnp.maximum(heat, 1.0), 0.0)
+        factor = jnp.where(heat > 0, scale * total / jnp.maximum(heat, 1.0), 0.0)
         out_ref[...] *= factor[:, None]
 
 
-def heat_scatter(ids, grads, heat, total: float, vocab: int, *,
-                 v_blk: int = DEFAULT_V_BLK, t_blk: int = DEFAULT_T_BLK,
-                 interpret: bool = True):
-    """ids: (T,) int32 (-1 pads); grads: (T, D); heat: (vocab,).
+def _pick_blk(dim: int, blk: int) -> int:
+    """Largest power-of-two block <= min(blk, dim)."""
+    b = 1
+    while b * 2 <= min(blk, dim):
+        b *= 2
+    return b
 
-    Returns the corrected dense update (vocab, D) float32.
+
+def on_tpu() -> bool:
+    """Single source of the runtime backend check for kernel dispatch."""
+    return jax.default_backend() == "tpu"
+
+
+def _tpu_compiler_params():
+    """Mosaic params for the compiled path; None when unavailable."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    except Exception:                                    # pragma: no cover
+        return None
+
+
+def rowsparse_scatter(ids, rows, heat, total: float, vocab: int, *,
+                      scale: float = 1.0, v_blk: int = DEFAULT_V_BLK,
+                      t_blk: int = DEFAULT_T_BLK, interpret=None):
+    """Fused scatter-add + FedSubAvg correction for row-sparse deltas.
+
+    ids: (T,) int32 target rows (-1 pads, dropped); rows: (T, D); heat:
+    (vocab,). Returns ``(vocab, D)`` float32 where row v holds
+    ``scale * total / heat[v] * sum_{t: ids[t]=v} rows[t]`` (0 if heat 0).
+
+    ``interpret=None`` selects the real compiled TPU path when running on
+    TPU and the interpreter elsewhere. Neither row count nor vocab need
+    align to the block sizes — rows are padded with ``-1`` ids (free: they
+    match nothing) and the vocab axis is padded with zero-heat rows (which
+    no id targets and the correction zeroes), then sliced off.
     """
-    t, d = grads.shape
-    v_blk = min(v_blk, vocab)
+    if interpret is None:
+        interpret = not on_tpu()
+    t, d = rows.shape
+    if t == 0:
+        # an empty grid would never run the kernel body (or its output init)
+        return jnp.zeros((vocab, d), jnp.float32)
+    v_blk = _pick_blk(vocab, v_blk)
     t_blk = min(t_blk, t)
-    assert vocab % v_blk == 0, (vocab, v_blk)
-    assert t % t_blk == 0, (t, t_blk)
-    nv, nt = vocab // v_blk, t // t_blk
+    pad = (-t) % t_blk
+    if pad:
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, ids.dtype)])
+        rows = jnp.concatenate([rows, jnp.zeros((pad, d), rows.dtype)])
+        t += pad
+    vpad = (-vocab) % v_blk
+    vocab_p = vocab + vpad
+    if vpad:
+        heat = jnp.concatenate([heat, jnp.zeros((vpad,), heat.dtype)])
+    nv, nt = vocab_p // v_blk, t // t_blk
 
-    # padding ids (-1) match no row in any tile, so they drop out naturally
+    kwargs = {}
+    if not interpret:
+        cp = _tpu_compiler_params()
+        if cp is not None:
+            kwargs["compiler_params"] = cp
     return pl.pallas_call(
-        functools.partial(_kernel, total=float(total), v_blk=v_blk, t_blk=t_blk, nt=nt),
+        functools.partial(_kernel, total=float(total), scale=float(scale),
+                          v_blk=v_blk, t_blk=t_blk, nt=nt),
         grid=(nv, nt),
         in_specs=[
             pl.BlockSpec((t_blk,), lambda iv, it: (it,)),
@@ -73,6 +131,21 @@ def heat_scatter(ids, grads, heat, total: float, vocab: int, *,
             pl.BlockSpec((v_blk,), lambda iv, it: (iv,)),
         ],
         out_specs=pl.BlockSpec((v_blk, d), lambda iv, it: (iv, 0)),
-        out_shape=jax.ShapeDtypeStruct((vocab, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((vocab_p, d), jnp.float32),
         interpret=interpret,
-    )(ids, grads, heat)
+        **kwargs,
+    )(ids, rows, heat)[:vocab]
+
+
+def heat_scatter(ids, grads, heat, total: float, vocab: int, *,
+                 v_blk: int = DEFAULT_V_BLK, t_blk: int = DEFAULT_T_BLK,
+                 interpret=None):
+    """Token-gradient aggregation (the original paper hot path).
+
+    ids: (T,) int32 token ids (-1 pads); grads: (T, D); heat: (vocab,).
+    Returns the corrected dense update (vocab, D) float32. Token grads are
+    row-sparse deltas with per-occurrence duplicate ids, so this is
+    ``rowsparse_scatter`` with ``scale=1``.
+    """
+    return rowsparse_scatter(ids, grads, heat, total, vocab, scale=1.0,
+                             v_blk=v_blk, t_blk=t_blk, interpret=interpret)

@@ -15,10 +15,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.heat_scatter import heat_scatter as _heat_scatter
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.heat_scatter import on_tpu as _on_tpu
+from repro.kernels.heat_scatter import rowsparse_scatter as _rowsparse_scatter
 
 
 @functools.partial(jax.jit, static_argnames=("total", "vocab", "v_blk", "t_blk"))
@@ -26,6 +24,15 @@ def heat_scatter(ids, grads, heat, total: float, vocab: int,
                  v_blk: int = 512, t_blk: int = 1024):
     return _heat_scatter(ids, grads, heat, total, vocab, v_blk=v_blk, t_blk=t_blk,
                          interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("total", "vocab", "scale", "v_blk", "t_blk"))
+def rowsparse_scatter(ids, rows, heat, total: float, vocab: int,
+                      scale: float = 1.0, v_blk: int = 512, t_blk: int = 1024):
+    """Fused cohort row-sparse aggregation + heat correction (see kernel)."""
+    return _rowsparse_scatter(ids, rows, heat, total, vocab, scale=scale,
+                              v_blk=v_blk, t_blk=t_blk, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k"))

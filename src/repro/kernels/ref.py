@@ -30,6 +30,13 @@ def heat_scatter_ref(ids, grads, heat, total: float, vocab: int):
     return out * factor[:, None]
 
 
+def rowsparse_scatter_ref(ids, rows, heat, total: float, vocab: int,
+                          scale: float = 1.0):
+    """Generalised row-sparse aggregation oracle: ``heat_scatter_ref`` with a
+    fused extra ``scale`` factor (the cohort 1/K mean)."""
+    return heat_scatter_ref(ids, rows, heat, total, vocab) * scale
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0):
     """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). GQA, optional sliding window."""
     return _mea_attention(q, k, v, causal=causal, window=window,

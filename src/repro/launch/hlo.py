@@ -29,6 +29,14 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jaxlib versions (dict vs [dict])."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _shape_bytes(text: str) -> int:
     """Sum byte sizes of every typed shape literal in a string."""
     total = 0

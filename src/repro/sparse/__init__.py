@@ -1,0 +1,36 @@
+"""Sparse submodel update plane (row-sparse deltas end-to-end).
+
+The dense FedAvg-style server materialises a (V, D) update per client; this
+package keeps every feature-keyed leaf in ``(ids, rows)`` form from client
+encoding through server aggregation to the parameter apply — the systems half
+of the paper's submodel story. See DESIGN.md for the architecture.
+"""
+from repro.sparse.rowsparse import (  # noqa: F401
+    PAD_ID,
+    RowSparse,
+    is_rowsparse,
+    remap_ids,
+    unique_ids_padded,
+)
+from repro.sparse.encode import (  # noqa: F401
+    DEFAULT_SPARSE_SPACES,
+    batch_union_ids,
+    decode_delta_tree,
+    encode_delta_tree,
+    sparse_eligible,
+    submodel_value_and_grad,
+)
+from repro.sparse.aggregate import (  # noqa: F401
+    aggregate_rowsparse,
+    aggregate_rowsparse_dense,
+    apply_rowsparse,
+    heat_factor_at,
+    sparse_cohort_aggregate,
+)
+from repro.sparse.compress import (  # noqa: F401
+    QuantRows,
+    dequantize_rows,
+    quantize_rows_int8,
+    topk_rows,
+)
+from repro.sparse.comm import CommStats, round_comm_stats, tree_wire_bytes  # noqa: F401

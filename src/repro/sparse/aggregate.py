@@ -1,0 +1,167 @@
+"""Server-side aggregation over row-sparse cohort updates.
+
+The FedSubAvg server step on the sparse plane is a segment-sum: every client
+contributes ``(ids_i, rows_i)``; the server sums rows landing on the same
+feature id, scales by ``1/K`` (cohort mean) and fuses the heat correction
+``N / n_m`` — one pass over the non-zeros, never touching cold rows.
+
+Two backends, selected at runtime:
+
+``jnp``     sort/searchsorted segment-sum into the cohort's union ids —
+            O(nnz) work, the right path on CPU and for sparse *output*
+            (the server keeps the update sparse end-to-end).
+``pallas``  the generalized ``rowsparse_scatter`` kernel (blocked one-hot
+            MXU matmul, ``repro.kernels.heat_scatter``) producing the dense
+            corrected update directly in VMEM tiles — the TPU path when the
+            server applies into a dense replicated table.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import HeatSpec, correct_dense_leaf
+from repro.sparse.encode import DEFAULT_SPARSE_SPACES
+from repro.sparse.rowsparse import RowSparse, is_rowsparse, remap_ids, unique_ids_padded
+
+Array = jax.Array
+
+
+def heat_factor_at(heat: Array, ids: Array, total: float,
+                   scale: float = 1.0) -> Array:
+    """Per-row ``scale * N / n_m`` gathered at ``ids`` (0 for cold/pad rows).
+
+    The single source of the FedSubAvg correction in gathered (row-sparse)
+    form — the dense-broadcast twin is ``heat_correction_factors``.
+    """
+    h = jnp.take(heat, jnp.maximum(ids, 0))
+    f = jnp.where(h > 0, float(total) / jnp.maximum(h, 1.0), 0.0)
+    return jnp.where(ids >= 0, f * float(scale), 0.0)
+
+
+#: dense-bitmap union is O(V) vectorised work and V bits of scratch — the
+#: fast path whenever the feature space fits comfortably in cache-adjacent
+#: memory; beyond this the O(T log T) sort path takes over.
+_BITMAP_MAX_ROWS = 1 << 22
+
+
+def _union_and_slots(flat_ids: Array, num_rows: int, cap: int, backend: str):
+    """(union ids (cap,), per-element slot (T,)) under either union backend.
+
+    ``bitmap``: mark touched rows in a (V,) bitmap, rank by cumsum, compact
+    with size-bounded ``nonzero`` — no sort, everything streams. ``sort``:
+    the generic O(T log T) path for huge feature spaces.
+    """
+    if backend == "auto":
+        backend = "bitmap" if num_rows <= _BITMAP_MAX_ROWS else "sort"
+    if backend == "bitmap":
+        safe = jnp.where(flat_ids >= 0, flat_ids, num_rows)
+        mark = jnp.zeros((num_rows,), bool).at[safe].set(True, mode="drop")
+        rank = jnp.cumsum(mark.astype(jnp.int32)) - 1
+        union = jnp.nonzero(mark, size=cap, fill_value=-1)[0].astype(jnp.int32)
+        pos = jnp.take(rank, jnp.minimum(safe, num_rows - 1))
+        pos = jnp.where(flat_ids >= 0, pos, cap)         # pads -> dropped
+        return union, pos
+    if backend == "sort":
+        union = unique_ids_padded(flat_ids, cap)
+        pos = remap_ids(flat_ids, union)
+        return union, jnp.where(flat_ids >= 0, pos, cap)
+    raise ValueError(backend)
+
+
+def aggregate_rowsparse(stacked: RowSparse, heat: Optional[Array] = None,
+                        total: float = 1.0, scale: float = 1.0,
+                        union_capacity: Optional[int] = None,
+                        union_backend: str = "auto") -> RowSparse:
+    """Segment-sum a stacked cohort ``RowSparse`` into its union-id rows.
+
+    ``stacked``: ids ``(K, R)``, rows ``(K, R, ...)``. Returns an unbatched
+    RowSparse on the cohort's union ids (capacity ``min(V, K*R)`` unless
+    given), rows scaled by ``scale`` and — when ``heat`` is provided — by the
+    fused FedSubAvg correction ``total / n_m``. O(K R D) on the payload plus
+    the union cost (bitmap: O(V) streamed; sort: O(K R log K R)); the dense
+    ``(V, D)`` update is never materialised.
+    """
+    k, r = stacked.ids.shape
+    cap = union_capacity or min(stacked.num_rows, k * r)
+    flat_ids = stacked.ids.reshape(-1)
+    flat_rows = stacked.rows.reshape((k * r,) + tuple(stacked.rows.shape[2:]))
+
+    union, pos = _union_and_slots(flat_ids, stacked.num_rows, cap, union_backend)
+    summed = jnp.zeros((cap,) + tuple(flat_rows.shape[1:]), jnp.float32)
+    summed = summed.at[pos].add(flat_rows.astype(jnp.float32), mode="drop")
+
+    if heat is not None:
+        factor = heat_factor_at(jnp.asarray(heat), union, total, scale)
+    else:
+        factor = jnp.where(union >= 0, float(scale), 0.0)
+    summed = summed * factor.reshape((cap,) + (1,) * (summed.ndim - 1))
+    return RowSparse(union, summed, stacked.num_rows)
+
+
+def aggregate_rowsparse_dense(stacked: RowSparse, heat: Array, total: float,
+                              scale: float = 1.0, backend: str = "auto") -> Array:
+    """Cohort aggregation to a *dense* corrected update ``(V, ...)``.
+
+    ``backend="pallas"`` routes through the fused ``rowsparse_scatter`` TPU
+    kernel (interpret-mode on CPU); ``"jnp"`` segment-sums into the union and
+    scatters once; ``"auto"`` picks pallas on TPU, jnp elsewhere.
+    """
+    if backend == "auto":
+        from repro.kernels.heat_scatter import on_tpu
+        backend = "pallas" if on_tpu() else "jnp"
+    if backend == "pallas":
+        from repro.kernels import ops
+        k, r = stacked.ids.shape
+        flat_ids = stacked.ids.reshape(-1)
+        rows = stacked.rows.reshape(k * r, -1)
+        out = ops.rowsparse_scatter(flat_ids, rows, jnp.asarray(heat, jnp.float32),
+                                    float(total), stacked.num_rows, scale=float(scale))
+        return out.reshape((stacked.num_rows,) + tuple(stacked.rows.shape[2:]))
+    if backend == "jnp":
+        return aggregate_rowsparse(stacked, heat, total, scale).to_dense()
+    raise ValueError(backend)
+
+
+def sparse_cohort_aggregate(updates, heat_spec: HeatSpec,
+                            heat_counts: Dict[str, Array], total: float,
+                            num_clients_in_cohort: int, correct: bool = True,
+                            spaces: Sequence[str] = DEFAULT_SPARSE_SPACES):
+    """Tree-level cohort aggregation mixing RowSparse and dense leaves.
+
+    ``updates``: per-client stack — RowSparse leaves carry ``(K, R)`` ids,
+    dense leaves are ``(K, ...)``. Returns the corrected cohort-mean update:
+    RowSparse union leaves for the sparse plane; dense leaves are cohort
+    means, with the broadcast heat correction applied to the ones that still
+    carry a feature space (e.g. an LM head with vocab on a trailing axis) —
+    exactly matching the dense server's ``correct_update_tree``.
+
+    With ``correct=False`` this is sparse FedAvg — identical execution path,
+    no heat scaling — so baselines stay comparable.
+    """
+    scale = 1.0 / float(num_clients_in_cohort)
+
+    def agg(leaf, space):
+        if is_rowsparse(leaf):
+            heat = None
+            if correct and space is not None and space[0] in heat_counts:
+                heat = heat_counts[space[0]]
+            return aggregate_rowsparse(leaf, heat, total, scale)
+        mean = leaf.mean(axis=0)
+        if correct:
+            mean = correct_dense_leaf(mean, space, heat_counts, total)
+        return mean
+
+    def is_leaf(x):
+        return x is None or is_rowsparse(x)
+
+    return jax.tree.map(agg, updates, heat_spec.leaf_spaces, is_leaf=is_leaf)
+
+
+def apply_rowsparse(table: Array, rs: RowSparse, scale: float = 1.0) -> Array:
+    """``table + scale * rs`` without densifying the update."""
+    safe = jnp.where(rs.ids >= 0, rs.ids, rs.num_rows)
+    add = (rs.rows * scale).astype(table.dtype)
+    return table.at[safe].add(add, mode="drop")

@@ -1,0 +1,130 @@
+"""Communication-cost accounting for federated rounds.
+
+FedSubAvg's systems win is bytes-on-wire: clients download and upload rows
+for their submodel only. This module prices a round in bytes — dense baseline
+vs the sparse plane, uplink (client -> server deltas) and downlink (server ->
+client submodels) — from static shapes plus the actual non-padding id counts,
+so the numbers are exact, not estimates.
+
+``CommStats`` per round is surfaced through ``FederatedTrainer.comm_log`` and
+summarised by ``repro.federated.metrics.comm_summary``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.sparse.compress import QuantRows
+from repro.sparse.rowsparse import RowSparse, is_rowsparse
+
+_ID_BYTES = 4          # int32 row ids
+_SCALE_BYTES = 4       # f32 per-row dequant scale
+
+
+@dataclass
+class CommStats:
+    """Bytes-on-wire for one federated round (cohort of ``clients``)."""
+
+    round: int
+    clients: int
+    bytes_up_dense: float        # dense baseline: every client ships (V, D)
+    bytes_up_sparse: float       # sparse plane: ids + touched rows (+ scales)
+    bytes_down_dense: float      # dense baseline: full model broadcast
+    bytes_down_sparse: float     # submodel download: touched rows + dense leaves
+    rows_total: int              # sum over clients of dense feature rows
+    rows_sent: int               # sum over clients of rows actually shipped
+
+    @property
+    def density(self) -> float:
+        return self.rows_sent / max(self.rows_total, 1)
+
+    @property
+    def up_ratio(self) -> float:
+        """Dense/sparse uplink compression factor (>1 means sparse wins)."""
+        return self.bytes_up_dense / max(self.bytes_up_sparse, 1.0)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "round": self.round, "clients": self.clients,
+            "bytes_up_dense": self.bytes_up_dense,
+            "bytes_up_sparse": self.bytes_up_sparse,
+            "bytes_down_dense": self.bytes_down_dense,
+            "bytes_down_sparse": self.bytes_down_sparse,
+            "density": self.density, "up_ratio": self.up_ratio,
+        }
+
+
+def _row_payload_bytes(shape: Sequence[int], itemsize: int) -> int:
+    """Bytes of one row of a (V, ...) leaf."""
+    n = 1
+    for d in shape[1:]:
+        n *= int(d)
+    return max(n, 1) * itemsize
+
+
+def leaf_wire_bytes(leaf: Any) -> float:
+    """On-wire bytes of one update leaf in its current representation."""
+    if isinstance(leaf, QuantRows):
+        valid = int(np.asarray((leaf.ids >= 0).sum()))
+        per_row = _row_payload_bytes((0,) + tuple(leaf.q.shape[leaf.ids.ndim:]), 1)
+        return valid * (_ID_BYTES + per_row + _SCALE_BYTES)
+    if is_rowsparse(leaf):
+        valid = int(np.asarray((leaf.ids >= 0).sum()))
+        per_row = _row_payload_bytes((0,) + tuple(leaf.rows.shape[leaf.ids.ndim:]),
+                                     np.dtype(leaf.rows.dtype).itemsize)
+        return valid * (_ID_BYTES + per_row)
+    arr = np.asarray(jax.tree.leaves(leaf)[0]) if not hasattr(leaf, "dtype") else leaf
+    return float(np.prod(arr.shape)) * np.dtype(arr.dtype).itemsize
+
+
+def tree_wire_bytes(tree: Any) -> float:
+    """Total on-wire bytes of an update tree (RowSparse/QuantRows aware)."""
+    total = 0.0
+    for leaf in jax.tree.leaves(
+            tree, is_leaf=lambda x: is_rowsparse(x) or isinstance(x, QuantRows)):
+        total += leaf_wire_bytes(leaf)
+    return total
+
+
+def round_comm_stats(rnd: int, dense_model_bytes: float,
+                     sparse_static_bytes: float, row_payload_bytes: float,
+                     valid_ids_per_client: np.ndarray, num_features: int,
+                     int8: bool = False, row_elems: Optional[int] = None,
+                     uplink_rows_per_client: Optional[np.ndarray] = None) -> CommStats:
+    """Price one round from host-side metadata (exact, no estimation).
+
+    ``dense_model_bytes``: full parameter tree size — the per-client payload
+    of the dense baseline in both directions. ``sparse_static_bytes``: the
+    dense (non-feature-keyed) leaves, which the sparse plane still ships
+    whole. ``row_payload_bytes``: bytes per feature row summed over the
+    sparse-plane tables; ``row_elems``: elements per row (for int8 pricing
+    at 1 byte/element regardless of the table dtype). ``valid_ids_per_client``:
+    (K,) per-client unique-feature counts — the *submodel* size, which prices
+    the downlink and the density. ``uplink_rows_per_client`` (defaults to the
+    same) prices the uplink delta, which top-k sparsification can shrink
+    below the submodel size.
+    """
+    k = len(valid_ids_per_client)
+    rows_down = int(np.asarray(valid_ids_per_client).sum())
+    rows_up = (rows_down if uplink_rows_per_client is None
+               else int(np.asarray(uplink_rows_per_client).sum()))
+    up_row = row_payload_bytes
+    if int8:
+        # int8 payload (1 byte/element) + one f32 scale per row
+        up_row = float(row_elems if row_elems is not None
+                       else row_payload_bytes / 4.0) + _SCALE_BYTES
+    sparse_up = k * sparse_static_bytes + rows_up * (_ID_BYTES + up_row)
+    sparse_down = k * sparse_static_bytes + rows_down * (_ID_BYTES + row_payload_bytes)
+
+    return CommStats(
+        round=rnd, clients=k,
+        bytes_up_dense=k * dense_model_bytes,
+        bytes_up_sparse=sparse_up,
+        bytes_down_dense=k * dense_model_bytes,
+        bytes_down_sparse=sparse_down,
+        rows_total=k * num_features,
+        rows_sent=rows_down,
+    )

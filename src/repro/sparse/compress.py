@@ -1,0 +1,87 @@
+"""Optional row compression for the sparse update plane.
+
+Both schemes compose with the aggregator because they stay in the
+``(ids, rows)`` format:
+
+``topk_rows``       keep only the k rows with the largest payload norm —
+                    magnitude-based sparsification of an already-sparse
+                    update (biased, like all top-k schemes; the classic
+                    error-feedback remedy lives client-side and is out of
+                    scope here).
+``quantize_rows_int8``  per-row symmetric int8 with *stochastic rounding*,
+                    so dequantisation is unbiased: E[dq(q(x))] = x. The
+                    wire payload drops 4x (plus one f32 scale per row).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.rowsparse import PAD_ID, RowSparse
+
+Array = jax.Array
+
+
+def topk_rows(rs: RowSparse, k: int) -> RowSparse:
+    """Keep the k largest-L2 rows of an unbatched RowSparse (capacity -> k)."""
+    assert rs.ids.ndim == 1, "topk_rows expects an unbatched RowSparse"
+    r = rs.capacity
+    k = min(int(k), r)
+    flat = rs.rows.reshape(r, -1).astype(jnp.float32)
+    norms = jnp.where(rs.ids >= 0, (flat * flat).sum(-1), -1.0)
+    _, keep = jax.lax.top_k(norms, k)
+    keep = jnp.sort(keep)                       # preserve ascending-id order
+    ids = jnp.take(rs.ids, keep)
+    rows = jnp.take(rs.rows, keep, axis=0)
+    # slots whose norm was the -1 padding sentinel stay padding
+    valid = jnp.take(norms, keep) >= 0
+    ids = jnp.where(valid, ids, PAD_ID)
+    rows = rows * valid.reshape((k,) + (1,) * (rows.ndim - 1)).astype(rows.dtype)
+    return RowSparse(ids, rows, rs.num_rows)
+
+
+class QuantRows:
+    """int8-quantised RowSparse payload: (ids, q, scales) pytree."""
+
+    __slots__ = ("ids", "q", "scales", "num_rows")
+
+    def __init__(self, ids, q, scales, num_rows: int):
+        self.ids = ids
+        self.q = q
+        self.scales = scales
+        self.num_rows = int(num_rows)
+
+    def __repr__(self):
+        return (f"QuantRows(ids={getattr(self.ids, 'shape', None)}, "
+                f"q={getattr(self.q, 'shape', None)}, num_rows={self.num_rows})")
+
+
+jax.tree_util.register_pytree_node(
+    QuantRows,
+    lambda qr: ((qr.ids, qr.q, qr.scales), qr.num_rows),
+    lambda num_rows, c: QuantRows(c[0], c[1], c[2], num_rows),
+)
+
+
+def quantize_rows_int8(rs: RowSparse, key: Array) -> QuantRows:
+    """Per-row symmetric int8 quantisation with stochastic rounding.
+
+    ``q = floor(x / s + u)`` with ``u ~ U[0, 1)`` satisfies ``E[q * s] = x``;
+    the scale ``s`` is ``max|row| / 127`` (1 for all-zero rows).
+    """
+    shape = rs.rows.shape
+    lead = rs.ids.shape                          # (..., R)
+    flat = rs.rows.reshape(lead + (-1,)).astype(jnp.float32)
+    maxabs = jnp.abs(flat).max(axis=-1)
+    scales = jnp.where(maxabs > 0, maxabs / 127.0, 1.0)
+    u = jax.random.uniform(key, flat.shape)
+    q = jnp.floor(flat / scales[..., None] + u)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return QuantRows(rs.ids, q.reshape(shape), scales, rs.num_rows)
+
+
+def dequantize_rows(qr: QuantRows, dtype=jnp.float32) -> RowSparse:
+    lead = qr.ids.shape
+    flat = qr.q.reshape(lead + (-1,)).astype(jnp.float32)
+    rows = (flat * qr.scales[..., None]).reshape(qr.q.shape).astype(dtype)
+    return RowSparse(qr.ids, rows, qr.num_rows)

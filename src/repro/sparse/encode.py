@@ -1,0 +1,151 @@
+"""Encoders: dense update trees -> row-sparse submodel updates.
+
+Two paths onto the sparse plane:
+
+``encode_delta_tree``
+    Post-hoc: a dense delta (or per-client stack of deltas) already exists;
+    gather the rows its support lives on. Exact whenever the gather ids cover
+    the delta's support — true by construction for lookup-table leaves
+    (row_axis 0), whose gradient is zero outside the batch's feature ids
+    ("the local gradient of X_{S\\S(i)} will always be zero", paper §3.1).
+
+``submodel_value_and_grad``
+    Ahead-of-time: never materialise the dense ``(V, D)`` gradient at all.
+    The feature-keyed table is swapped for its gathered ``(R, D)`` rows and
+    the batch's feature ids are remapped to row slots before the backward
+    pass, so autodiff produces the row gradient directly — the paper's
+    "download the submodel, train the submodel" made literal in JAX.
+
+Output-head style leaves (vocab on a non-leading axis, dense softmax
+gradients) are left dense; the sparse plane is for lookup tables.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregate import HeatSpec
+from repro.sharding.logical import Param, is_param, unbox
+from repro.sparse.rowsparse import RowSparse, is_rowsparse, remap_ids, unique_ids_padded
+
+Array = jax.Array
+
+#: feature spaces the sparse plane encodes by default (expert-keyed leaves are
+#: typically fully touched per cohort; encoding them sparsely buys nothing)
+DEFAULT_SPARSE_SPACES = ("vocab",)
+
+
+def sparse_eligible(space: Optional[Tuple[str, int]],
+                    spaces: Sequence[str] = DEFAULT_SPARSE_SPACES) -> bool:
+    """A leaf rides the sparse plane iff it is feature-keyed on axis 0.
+
+    Axis-0 feature leaves are lookup tables (grad support == batch ids);
+    feature axes elsewhere (e.g. an LM head's trailing vocab axis) carry dense
+    softmax gradients and must stay dense for exactness.
+    """
+    return space is not None and space[0] in spaces and space[1] == 0
+
+
+def encode_delta_tree(delta, heat_spec: HeatSpec, ids: Array,
+                      spaces: Sequence[str] = DEFAULT_SPARSE_SPACES):
+    """Replace eligible feature-keyed leaves of ``delta`` with RowSparse.
+
+    ``delta`` may be a single update (leaves ``(V, ...)``) or a per-client
+    stack (leaves ``(K, V, ...)`` with ``ids`` of shape ``(K, R)``); boxed
+    Param trees are unboxed. Dense leaves pass through unchanged.
+    """
+    plain = unbox(delta)
+    batched = ids.ndim == 2
+
+    def enc(leaf, space):
+        if not sparse_eligible(space, spaces):
+            return leaf
+        if batched:
+            return jax.vmap(RowSparse.from_dense)(leaf, ids)
+        return RowSparse.from_dense(leaf, ids)
+
+    return jax.tree.map(enc, plain, heat_spec.leaf_spaces,
+                        is_leaf=lambda x: x is None)
+
+
+def decode_delta_tree(tree):
+    """Densify every RowSparse leaf (the parity/debug inverse of encode)."""
+    return jax.tree.map(lambda l: l.to_dense() if is_rowsparse(l) else l, tree,
+                        is_leaf=is_rowsparse)
+
+
+# ---------------------------------------------------------------------------
+# Gather-before-backward fast path
+# ---------------------------------------------------------------------------
+
+
+def _get_leaf(tree, path: Sequence):
+    node = tree
+    for k in path:
+        node = node[k]
+    return node
+
+
+def _set_leaf(tree, path: Sequence, value):
+    if not path:
+        return value
+    k = path[0]
+    if isinstance(tree, dict):
+        out = dict(tree)
+        out[k] = _set_leaf(tree[k], path[1:], value)
+        return out
+    if isinstance(tree, (tuple, list)):
+        out = list(tree)
+        out[k] = _set_leaf(tree[k], path[1:], value)
+        return type(tree)(out) if isinstance(tree, tuple) else out
+    raise TypeError(f"cannot set path {path!r} in {type(tree)}")
+
+
+def submodel_value_and_grad(loss_fn: Callable, params, batch: Dict,
+                            table_path: Sequence, feature_keys: Sequence[str],
+                            ids: Array):
+    """Loss + gradients with the table at ``table_path`` never densified.
+
+    ``ids`` is the (sorted, -1-padded) union of the batch's feature ids for
+    that table. The table leaf is swapped for its gathered ``(R, ...)`` rows,
+    every ``batch[k]`` for k in ``feature_keys`` is remapped to row slots, and
+    autodiff runs on the submodel — the returned gradient tree carries a
+    ``RowSparse`` at ``table_path`` and dense gradients elsewhere.
+
+    Exactness requires the model to consume the table only through lookups by
+    those feature keys (true for every lookup-table leaf; not for tied
+    embeddings doubling as an output head).
+    """
+    leaf = _get_leaf(params, table_path)
+    boxed = is_param(leaf)
+    table = leaf.value if boxed else leaf
+    num_rows = table.shape[0]
+
+    rows0 = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    sub_batch = dict(batch)
+    for k in feature_keys:
+        sub_batch[k] = remap_ids(batch[k], ids)
+
+    # the dense table is removed from the differentiated tree entirely (its
+    # slot becomes an empty subtree), so the single backward pass below never
+    # allocates a (V, ...) gradient — only the (R, ...) row gradient.
+    p_rest = _set_leaf(params, table_path, ())
+
+    def joint_loss(rows, p):
+        sub_leaf = Param(rows, leaf.axes) if boxed else rows
+        return loss_fn(_set_leaf(p, table_path, sub_leaf), sub_batch)
+
+    loss, (row_grad, rest_grad) = jax.value_and_grad(
+        joint_loss, argnums=(0, 1))(rows0, p_rest)
+    row_grad = row_grad * (ids >= 0).reshape(
+        (-1,) + (1,) * (row_grad.ndim - 1)).astype(row_grad.dtype)
+    grads = _set_leaf(rest_grad, table_path, RowSparse(ids, row_grad, num_rows))
+    return loss, grads
+
+
+def batch_union_ids(batch: Dict, feature_keys: Sequence[str], capacity: int) -> Array:
+    """Union of the batch's feature ids across keys, padded to ``capacity``."""
+    flat = jnp.concatenate([jnp.asarray(batch[k]).reshape(-1) for k in feature_keys])
+    return unique_ids_padded(flat, capacity)

@@ -1,0 +1,136 @@
+"""Row-sparse representation of feature-keyed update leaves.
+
+A client (or cohort) update to a feature-keyed table ``(V, ...)`` touches only
+the rows in its submodel S(i) — the paper's core observation. ``RowSparse``
+stores exactly those rows as an ``(ids, rows)`` pair:
+
+    ids  : (R,) int32, sorted ascending, ``-1`` marks padding slots
+    rows : (R, ...)   the touched rows' values (padding rows are zero)
+
+``num_rows`` (the dense leading-dim size V) rides along as static pytree aux
+data, so RowSparse leaves flow through ``jit`` / ``vmap`` / ``grad`` like any
+array pair while ``to_dense``/``wire_bytes`` still know the dense geometry.
+Stacking under ``vmap`` simply adds leading axes to both children (a cohort of
+K client updates is ``ids (K, R)``, ``rows (K, R, ...)``).
+
+The on-wire cost of a RowSparse leaf is ``R * 4`` id bytes plus the row
+payload — the quantity the comm accounting in ``repro.sparse.comm`` tracks.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: id value marking an unused (padding) slot
+PAD_ID = -1
+
+
+class RowSparse:
+    """(ids, rows) pair for one feature-keyed leaf; transparent pytree node."""
+
+    __slots__ = ("ids", "rows", "num_rows")
+
+    def __init__(self, ids, rows, num_rows: int):
+        self.ids = ids
+        self.rows = rows
+        self.num_rows = int(num_rows)
+
+    # -- pytree ------------------------------------------------------------
+    def __repr__(self):
+        ids_s = getattr(self.ids, "shape", None)
+        rows_s = getattr(self.rows, "shape", None)
+        return f"RowSparse(ids={ids_s}, rows={rows_s}, num_rows={self.num_rows})"
+
+    @property
+    def capacity(self) -> int:
+        """Number of id slots R (static)."""
+        return int(self.ids.shape[-1])
+
+    @property
+    def dense_shape(self) -> Tuple[int, ...]:
+        batch = tuple(self.ids.shape[:-1])
+        return batch + (self.num_rows,) + tuple(self.rows.shape[len(batch) + 1:])
+
+    # -- conversions -------------------------------------------------------
+    @staticmethod
+    def from_dense(dense: Array, ids: Array) -> "RowSparse":
+        """Gather rows of ``dense`` at ``ids`` (axis 0); ``-1`` slots get zeros."""
+        valid = ids >= 0
+        rows = jnp.take(dense, jnp.maximum(ids, 0), axis=0)
+        rows = rows * valid.reshape(valid.shape + (1,) * (rows.ndim - ids.ndim)).astype(rows.dtype)
+        return RowSparse(ids.astype(jnp.int32), rows, dense.shape[0])
+
+    def to_dense(self) -> Array:
+        """Scatter-add rows into the dense ``(V, ...)`` leaf (unbatched only)."""
+        assert self.ids.ndim == 1, "to_dense expects an unbatched RowSparse"
+        out = jnp.zeros((self.num_rows,) + tuple(self.rows.shape[1:]), self.rows.dtype)
+        safe = jnp.where(self.ids >= 0, self.ids, self.num_rows)  # pads -> dropped
+        return out.at[safe].add(self.rows, mode="drop")
+
+    # -- arithmetic helpers used by the server plane -----------------------
+    def scale(self, s) -> "RowSparse":
+        return RowSparse(self.ids, self.rows * s, self.num_rows)
+
+    def astype(self, dtype) -> "RowSparse":
+        return RowSparse(self.ids, self.rows.astype(dtype), self.num_rows)
+
+    def valid_count(self) -> Array:
+        """Number of non-padding ids (traced scalar; sums over batch dims)."""
+        return (self.ids >= 0).sum()
+
+    def density(self) -> Array:
+        """Fraction of dense rows carried per stacked update."""
+        n_updates = 1
+        for d in self.ids.shape[:-1]:
+            n_updates *= int(d)
+        return self.valid_count() / (n_updates * self.num_rows)
+
+
+def _rs_flatten(rs: RowSparse):
+    return (rs.ids, rs.rows), rs.num_rows
+
+
+def _rs_unflatten(num_rows, children):
+    ids, rows = children
+    return RowSparse(ids, rows, num_rows)
+
+
+jax.tree_util.register_pytree_node(RowSparse, _rs_flatten, _rs_unflatten)
+
+
+def is_rowsparse(x: Any) -> bool:
+    return isinstance(x, RowSparse)
+
+
+def unique_ids_padded(ids: Array, capacity: int) -> Array:
+    """Sorted unique non-negative ids, padded with ``-1`` to ``capacity``.
+
+    Pure jnp (static output shape, jit-safe). Ids beyond ``capacity`` distinct
+    values are dropped — callers size capacity from host-side knowledge (e.g.
+    a cohort batch can touch at most ``K * tokens_per_client`` rows).
+    """
+    flat = ids.reshape(-1).astype(jnp.int32)
+    sentinel = jnp.iinfo(jnp.int32).max
+    s = jnp.sort(jnp.where(flat >= 0, flat, sentinel))
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    first = first & (s != sentinel)
+    slot = jnp.where(first, jnp.cumsum(first) - 1, capacity)  # capacity = drop
+    out = jnp.full((capacity,), PAD_ID, jnp.int32)
+    return out.at[slot].set(jnp.where(first, s, PAD_ID), mode="drop")
+
+
+def remap_ids(tokens: Array, ids: Array) -> Array:
+    """Map feature ids to their slot in ``ids`` (sorted uniques then -1 pads).
+
+    Negative tokens stay negative (the models' own padding convention).
+    Tokens absent from ``ids`` produce an arbitrary slot — callers guarantee
+    coverage (ids are derived from the same batch).
+    """
+    sentinel = jnp.iinfo(jnp.int32).max
+    key = jnp.where(ids >= 0, ids, sentinel)
+    pos = jnp.searchsorted(key, tokens.astype(jnp.int32))
+    return jnp.where(tokens >= 0, pos, tokens).astype(jnp.int32)

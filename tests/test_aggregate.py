@@ -3,6 +3,8 @@ global update of parameter m equals the average of the local updates of the
 clients that involve m."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

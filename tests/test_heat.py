@@ -1,6 +1,8 @@
 """Heat statistics + private estimation (paper §2, App. F)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -1,6 +1,8 @@
 """Per-kernel oracle sweeps: shapes x dtypes against repro.kernels.ref."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

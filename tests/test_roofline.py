@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from benchmarks.roofline import analytic_flops_for
 from repro.configs import get_smoke_config
+from repro.launch.hlo import cost_analysis_dict
 from repro.models import build_model
 
 
@@ -24,8 +25,9 @@ def test_cost_analysis_counts_loop_body_once():
 
     x = jnp.zeros((64, 64))
     w = jnp.zeros((64, 64))
-    flops_scan = jax.jit(f).lower(x, w).compile().cost_analysis()["flops"]
-    flops_once = jax.jit(lambda x, w: x @ w).lower(x, w).compile().cost_analysis()["flops"]
+    flops_scan = cost_analysis_dict(jax.jit(f).lower(x, w).compile())["flops"]
+    flops_once = cost_analysis_dict(
+        jax.jit(lambda x, w: x @ w).lower(x, w).compile())["flops"]
     assert flops_scan < 2 * flops_once  # NOT ~10x: body counted once
 
 
@@ -40,7 +42,7 @@ def test_analytic_flops_match_hlo_single_layer(arch):
     batch = {"tokens": jnp.ones((b, s), jnp.int32),
              "labels": jnp.ones((b, s), jnp.int32),
              "mask": jnp.ones((b, s), jnp.float32)}
-    hlo = jax.jit(api.loss).lower(params, batch).compile().cost_analysis()["flops"]
+    hlo = cost_analysis_dict(jax.jit(api.loss).lower(params, batch).compile())["flops"]
     af = analytic_flops_for(cfg, "prefill", b, s)   # forward-only loss
     # loss() is forward only here (no grad), so compare to the prefill estimate
     ratio = hlo / af["total"]

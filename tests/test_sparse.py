@@ -1,0 +1,422 @@
+"""Sparse submodel update plane: representation, parity with the dense path,
+kernels, compression, and the end-to-end sparse trainer/round-step modes.
+
+Deliberately hypothesis-free (seeded sweeps) so the sparse plane keeps test
+coverage even where hypothesis is not installed.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FedConfig, get_smoke_config
+from repro.core.aggregate import HeatSpec, correct_update_tree
+from repro.data import make_amazon_like, make_movielens_like
+from repro.federated import FederatedTrainer, make_round_step
+from repro.kernels import ops, ref
+from repro.models import build_model
+from repro.models.recsys import (lr_logits, lr_loss, lstm_loss, make_lr_params,
+                                 make_lstm_params)
+from repro.sharding.logical import unbox
+from repro.sparse import (RowSparse, aggregate_rowsparse, apply_rowsparse,
+                          batch_union_ids, dequantize_rows, encode_delta_tree,
+                          quantize_rows_int8, sparse_cohort_aggregate,
+                          submodel_value_and_grad, topk_rows, tree_wire_bytes,
+                          unique_ids_padded)
+
+
+def _random_cohort(rng, k, v, d, max_rows):
+    """Per-client supports incl. empty-ish clients; returns ids, dense deltas."""
+    ids = np.full((k, max_rows), -1, np.int32)
+    dense = np.zeros((k, v, d), np.float32)
+    for i in range(k):
+        n = int(rng.integers(1, max_rows + 1))
+        sup = np.sort(rng.choice(v, size=n, replace=False))
+        ids[i, :n] = sup
+        dense[i, sup] = rng.normal(size=(n, d))
+    return ids, dense
+
+
+# ---------------------------------------------------------------------------
+# representation
+# ---------------------------------------------------------------------------
+
+
+def test_rowsparse_roundtrip_and_jit(rng):
+    v, d = 24, 3
+    ids = jnp.asarray([1, 5, 7, -1, -1], jnp.int32)
+    dense = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    rs = RowSparse.from_dense(dense, ids)
+    want = np.zeros((v, d), np.float32)
+    for i in (1, 5, 7):
+        want[i] = np.asarray(dense)[i]
+    np.testing.assert_allclose(np.asarray(rs.to_dense()), want)
+    # flows through jit/vmap as a pytree, aux data intact
+    out = jax.jit(lambda r: r.scale(3.0))(rs)
+    assert out.num_rows == v
+    np.testing.assert_allclose(np.asarray(out.to_dense()), 3 * want, rtol=1e-6)
+    stacked = jax.vmap(RowSparse.from_dense, in_axes=(None, 0))(
+        dense, jnp.stack([ids, ids]))
+    assert stacked.ids.shape == (2, 5)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_unique_ids_padded_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(-1, 40, size=64).astype(np.int32)
+    cap = 48
+    out = np.asarray(unique_ids_padded(jnp.asarray(raw), cap))
+    want = np.unique(raw[raw >= 0])
+    np.testing.assert_array_equal(out[: len(want)], want)
+    assert np.all(out[len(want):] == -1)
+    # capacity overflow drops the tail deterministically
+    tight = np.asarray(unique_ids_padded(jnp.asarray(raw), 4))
+    np.testing.assert_array_equal(tight, want[:4])
+
+
+# ---------------------------------------------------------------------------
+# sparse/dense aggregation parity (the ISSUE's property test)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("union_backend", ["bitmap", "sort"])
+def test_sparse_aggregation_matches_dense_correction(seed, union_backend):
+    """Sparse encode + segment-sum + fused N/n_m == dense mean + correct,
+    including cold rows (n_m = 0) and -1 padding ids."""
+    rng = np.random.default_rng(seed)
+    k, v, d = 5, 37, 3
+    ids_np, dense = _random_cohort(rng, k, v, d, max_rows=11)
+    heat = np.zeros(v, np.float64)
+    for i in range(k):
+        heat[ids_np[i][ids_np[i] >= 0]] += 1
+    assert (heat == 0).any(), "want genuinely cold rows in this fixture"
+    total = 20.0
+    spec = HeatSpec({"emb": ("vocab", 0), "b": None})
+    counts = {"vocab": jnp.asarray(heat, jnp.float32)}
+    delta = {"emb": jnp.asarray(dense),
+             "b": jnp.asarray(rng.normal(size=(k, 4)), jnp.float32)}
+
+    enc = encode_delta_tree(delta, spec, jnp.asarray(ids_np))
+    stacked = enc["emb"]
+    agg = aggregate_rowsparse(stacked, counts["vocab"], total, 1.0 / k,
+                              union_backend=union_backend)
+    got = np.asarray(agg.to_dense())
+
+    dense_mean = jax.tree.map(lambda x: x.mean(axis=0), delta)
+    want = np.asarray(correct_update_tree(dense_mean, spec, counts, total)["emb"])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    # tree-level helper agrees too, and passes dense leaves through as means
+    tree_agg = sparse_cohort_aggregate(enc, spec, counts, total, k)
+    np.testing.assert_allclose(np.asarray(tree_agg["emb"].to_dense()), want,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(tree_agg["b"]),
+                               np.asarray(dense_mean["b"]), rtol=1e-6)
+
+
+def test_sparse_cohort_aggregate_corrects_trailing_axis_leaves(rng):
+    """A vocab-spaced dense leaf (e.g. an LM head, vocab on axis 1) must get
+    the same broadcast correction the dense server applies."""
+    k, v, d = 3, 12, 4
+    heat = np.array([0, 1, 2, 3, 0, 4, 1, 2, 3, 4, 1, 2], np.float64)
+    spec = HeatSpec({"head": ("vocab", 1)})
+    counts = {"vocab": jnp.asarray(heat, jnp.float32)}
+    delta = {"head": jnp.asarray(rng.normal(size=(k, d, v)), jnp.float32)}
+    agg = sparse_cohort_aggregate(delta, spec, counts, total=8.0,
+                                  num_clients_in_cohort=k)
+    dense_mean = jax.tree.map(lambda x: x.mean(axis=0), delta)
+    want = correct_update_tree(dense_mean, spec, counts, 8.0)["head"]
+    np.testing.assert_allclose(np.asarray(agg["head"]), np.asarray(want),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_apply_rowsparse_matches_dense_add(rng):
+    v, d = 16, 2
+    table = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    ids = jnp.asarray([0, 3, 9, -1], jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+    rows = rows * (np.asarray(ids) >= 0)[:, None]
+    rs = RowSparse(ids, rows, v)
+    got = apply_rowsparse(table, rs, 0.5)
+    want = table + 0.5 * rs.to_dense()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# generalized Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,d,v,v_blk,t_blk", [
+    (256, 8, 64, 16, 64),
+    (500, 16, 96, 32, 128),      # non-multiple T exercises row padding
+    (300, 8, 101, 32, 128),      # odd vocab exercises vocab padding
+])
+def test_rowsparse_scatter_kernel_vs_ref(rng, t, d, v, v_blk, t_blk):
+    ids = jnp.asarray(rng.integers(-1, v, t), jnp.int32)
+    rows = jnp.asarray(rng.normal(0, 1, (t, d)), jnp.float32)
+    heat = jnp.asarray(rng.integers(0, 7, v), jnp.float32)
+    out = ops.rowsparse_scatter(ids, rows, heat, 64.0, v, scale=0.125,
+                                v_blk=v_blk, t_blk=t_blk)
+    want = ref.rowsparse_scatter_ref(ids, rows, heat, 64.0, v, scale=0.125)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_matches_sparse_aggregate(rng):
+    """The Pallas dense-output path and the jnp union path agree."""
+    k, v, d = 4, 64, 8
+    ids_np, dense = _random_cohort(rng, k, v, d, max_rows=12)
+    heat = jnp.asarray(np.maximum(rng.integers(0, 4, v), 0), jnp.float32)
+    stacked = jax.vmap(RowSparse.from_dense)(jnp.asarray(dense),
+                                             jnp.asarray(ids_np))
+    from repro.sparse import aggregate_rowsparse_dense
+    got_pl = aggregate_rowsparse_dense(stacked, heat, 32.0, scale=0.25,
+                                       backend="pallas")
+    got_jnp = aggregate_rowsparse_dense(stacked, heat, 32.0, scale=0.25,
+                                        backend="jnp")
+    np.testing.assert_allclose(np.asarray(got_pl), np.asarray(got_jnp),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gather-before-backward encoder
+# ---------------------------------------------------------------------------
+
+
+def test_submodel_grads_match_dense_grads_lr(rng):
+    v = 50
+    params = make_lr_params(v, rng=jax.random.PRNGKey(0))
+    params["w"].value = jnp.asarray(rng.normal(size=(v, 1)), jnp.float32)
+    batch = {"features": jnp.asarray(rng.integers(-1, v, (6, 5)), jnp.int32),
+             "label": jnp.asarray(rng.integers(0, 2, 6), jnp.int32)}
+    ids = batch_union_ids(batch, ("features",), 32)
+    loss_s, grads = submodel_value_and_grad(lr_loss, params, batch,
+                                            ("w",), ("features",), ids)
+    loss_d, dense_grads = jax.value_and_grad(lr_loss)(params, batch)
+    np.testing.assert_allclose(float(loss_s), float(loss_d), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grads["w"].to_dense()),
+                               np.asarray(unbox(dense_grads)["w"]),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(unbox(grads["b"])),
+                               np.asarray(unbox(dense_grads)["b"]), rtol=1e-6)
+
+
+def test_submodel_grads_match_dense_grads_lstm(rng):
+    v = 40
+    params = make_lstm_params(v, emb_dim=6, hidden=8, layers=1,
+                              rng=jax.random.PRNGKey(1))
+    batch = {"tokens": jnp.asarray(rng.integers(-1, v, (4, 7)), jnp.int32),
+             "label": jnp.asarray(rng.integers(0, 2, 4), jnp.int32)}
+    ids = batch_union_ids(batch, ("tokens",), 32)
+    loss_s, grads = submodel_value_and_grad(lstm_loss, params, batch,
+                                            ("embedding",), ("tokens",), ids)
+    loss_d, dense_grads = jax.value_and_grad(lstm_loss)(params, batch)
+    np.testing.assert_allclose(float(loss_s), float(loss_d), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(grads["embedding"].to_dense()),
+                               np.asarray(unbox(dense_grads)["embedding"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+def test_topk_rows_keeps_largest(rng):
+    v, r, d = 30, 8, 2
+    ids = jnp.asarray([2, 4, 6, 8, 10, -1, -1, -1], jnp.int32)
+    rows = np.zeros((r, d), np.float32)
+    rows[:5] = rng.normal(size=(5, d))
+    rs = RowSparse(ids, jnp.asarray(rows), v)
+    out = topk_rows(rs, 3)
+    norms = (rows ** 2).sum(-1)[:5]
+    want_ids = np.sort(np.asarray(ids)[:5][np.argsort(norms)[-3:]])
+    np.testing.assert_array_equal(np.asarray(out.ids), want_ids)
+    # fewer valid rows than k -> padding survives as padding
+    out2 = topk_rows(RowSparse(ids, jnp.asarray(rows), v), 7)
+    assert int((out2.ids >= 0).sum()) == 5
+
+
+def test_int8_stochastic_rounding_unbiased(rng):
+    v, r, d = 20, 6, 4
+    ids = jnp.asarray([1, 3, 5, 7, 9, -1], jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(r, d)), jnp.float32)
+    rows = rows * (np.asarray(ids) >= 0)[:, None]
+    rs = RowSparse(ids, rows, v)
+    keys = jax.random.split(jax.random.PRNGKey(0), 400)
+    dq = jax.vmap(lambda k: dequantize_rows(quantize_rows_int8(rs, k)).rows)(keys)
+    mean = np.asarray(dq.mean(axis=0))
+    scales = np.abs(np.asarray(rows)).max(-1, keepdims=True) / 127.0
+    # unbiased: the Monte-Carlo mean approaches the true rows
+    np.testing.assert_allclose(mean, np.asarray(rows),
+                               atol=3 * float(scales.max()) / np.sqrt(400) * 4)
+    # single-shot error bounded by one quantisation step
+    one = np.asarray(dequantize_rows(quantize_rows_int8(rs, keys[0])).rows)
+    assert np.all(np.abs(one - np.asarray(rows)) <= np.maximum(scales, 1e-6) + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: FederatedTrainer sparse mode == dense mode
+# ---------------------------------------------------------------------------
+
+
+def _make_trainer(ds, sparse, alg="fedsubavg", **kw):
+    cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=6,
+                    local_iters=3, local_batch=4, lr=0.5, algorithm=alg,
+                    sparse=sparse, **kw)
+    mk = functools.partial(make_lr_params, ds.num_features)
+    return FederatedTrainer(
+        ds, mk, lr_loss, cfg,
+        predict_fn=lambda p, t: lr_logits(p, jnp.asarray(t["features"])),
+        metric="auc")
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return make_movielens_like(num_clients=40, num_items=40, mean_samples=15)
+
+
+def test_trainer_sparse_matches_dense(small_ds):
+    td = _make_trainer(small_ds, sparse=False)
+    ts = _make_trainer(small_ds, sparse=True)
+    losses_d = [td.run_round() for _ in range(8)]
+    losses_s = [ts.run_round() for _ in range(8)]
+    np.testing.assert_allclose(losses_s, losses_d, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(unbox(td.state.params)),
+                    jax.tree.leaves(unbox(ts.state.params))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_trainer_comm_accounting(small_ds):
+    ts = _make_trainer(small_ds, sparse=True)
+    ts.run(4, eval_every=4)
+    assert len(ts.comm_log) == 4
+    s = ts.comm_summary()
+    assert 0 < s["mean_density"] < 1
+    assert s["bytes_up_sparse"] < s["bytes_up_dense"]
+    assert s["up_ratio"] > 1
+    rec = ts.history[-1]
+    assert rec.bytes_up > 0 and rec.density == pytest.approx(s["mean_density"])
+
+
+def test_trainer_sparse_din_includes_targets():
+    """DIN deltas are supported on hist AND target ids; parity must hold."""
+    ds = make_amazon_like(num_clients=30, num_items=60, mean_samples=12)
+    from repro.models.recsys import din_logits, din_loss, make_din_params
+    def mk(sparse):
+        cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=5,
+                        local_iters=2, local_batch=4, lr=0.3,
+                        algorithm="fedsubavg", sparse=sparse)
+        return FederatedTrainer(
+            ds, functools.partial(make_din_params, ds.num_features), din_loss,
+            cfg, predict_fn=lambda p, t: din_logits(p, jnp.asarray(t["hist"]),
+                                                    jnp.asarray(t["target"])))
+    ld = [mk(False).run_round() for _ in range(1)]
+    td, ts = mk(False), mk(True)
+    losses_d = [td.run_round() for _ in range(4)]
+    losses_s = [ts.run_round() for _ in range(4)]
+    np.testing.assert_allclose(losses_s, losses_d, rtol=1e-5, atol=1e-6)
+
+
+def test_trainer_sparse_compression_variants_run(small_ds):
+    for kw in (dict(sparse_topk=6), dict(sparse_int8=True)):
+        tr = _make_trainer(small_ds, sparse=True, **kw)
+        losses = [tr.run_round() for _ in range(3)]
+        assert np.all(np.isfinite(losses))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: simulation.make_round_step sparse mode == fedsgd
+# ---------------------------------------------------------------------------
+
+
+def test_simulation_sparse_mode_matches_fedsgd():
+    cfg = get_smoke_config("qwen2_5_14b").replace(dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    fed = FedConfig(num_clients=64, clients_per_round=4, lr=0.1,
+                    algorithm="fedsubavg")
+    heat = jnp.maximum(
+        jax.random.randint(jax.random.PRNGKey(1), (cfg.vocab_size,), 0, 30)
+        .astype(jnp.float32), 0)
+    b, s = 4, 16
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                          cfg.vocab_size),
+             "labels": jnp.ones((b, s), jnp.int32),
+             "mask": jnp.ones((b, s), jnp.float32),
+             "heat_vocab": heat}
+    dense_step = jax.jit(make_round_step(api.loss, params, fed, mode="fedsgd"))
+    sparse_step = jax.jit(make_round_step(api.loss, params, fed, mode="sparse"))
+    pd_, md = dense_step(params, batch)
+    ps_, ms = sparse_step(params, batch)
+    np.testing.assert_allclose(float(ms["loss"]), float(md["loss"]), rtol=1e-6)
+    assert 0 < float(ms["density"]) <= 1
+    for a, b_ in zip(jax.tree.leaves(unbox(pd_)), jax.tree.leaves(unbox(ps_))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_simulation_sparse_mode_without_explicit_labels():
+    """Regression: the LM losses derive next-token targets from
+    batch["tokens"] when "labels" is absent; sparse mode must pin targets to
+    the ORIGINAL ids before the submodel swap remaps tokens to row slots."""
+    cfg = get_smoke_config("qwen2_5_14b").replace(dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    fed = FedConfig(num_clients=64, clients_per_round=4, lr=0.1,
+                    algorithm="fedsubavg")
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(7), (4, 16), 0,
+                                          cfg.vocab_size),
+             "heat_vocab": jnp.full((cfg.vocab_size,), 5.0)}
+    dense_step = jax.jit(make_round_step(api.loss, params, fed, mode="fedsgd"))
+    sparse_step = jax.jit(make_round_step(api.loss, params, fed, mode="sparse"))
+    pd_, md = dense_step(params, batch)
+    ps_, ms = sparse_step(params, batch)
+    np.testing.assert_allclose(float(ms["loss"]), float(md["loss"]), rtol=1e-6)
+    for a, b_ in zip(jax.tree.leaves(unbox(pd_)), jax.tree.leaves(unbox(ps_))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_simulation_sparse_short_training_run_matches():
+    """Losses over a short multi-round run agree to >= 1e-5 (ISSUE criterion)."""
+    cfg = get_smoke_config("qwen2_5_14b").replace(dtype="float32")
+    api = build_model(cfg)
+    fed = FedConfig(num_clients=64, clients_per_round=4, lr=0.1,
+                    algorithm="fedsubavg")
+    heat = jnp.maximum(
+        jax.random.randint(jax.random.PRNGKey(1), (cfg.vocab_size,), 0, 30)
+        .astype(jnp.float32), 1)
+
+    def run(mode):
+        params = api.init(jax.random.PRNGKey(0))
+        step = jax.jit(make_round_step(api.loss, params, fed, mode=mode))
+        losses = []
+        for r in range(4):
+            key = jax.random.PRNGKey(100 + r)
+            batch = {"tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab_size),
+                     "labels": jnp.ones((4, 16), jnp.int32),
+                     "mask": jnp.ones((4, 16), jnp.float32),
+                     "heat_vocab": heat}
+            params, m = step(params, batch)
+            losses.append(float(m["loss"]))
+        return losses
+
+    np.testing.assert_allclose(run("sparse"), run("fedsgd"), rtol=1e-5)
+
+
+def test_wire_bytes_accounting(rng):
+    v, d, r = 100, 8, 10
+    ids = jnp.asarray(list(range(r)), jnp.int32)
+    rs = RowSparse(ids, jnp.asarray(rng.normal(size=(r, d)), jnp.float32), v)
+    assert tree_wire_bytes({"e": rs}) == r * (4 + d * 4)
+    dense = jnp.zeros((v, d), jnp.float32)
+    assert tree_wire_bytes({"e": dense}) == v * d * 4
+    qr = quantize_rows_int8(rs, jax.random.PRNGKey(0))
+    assert tree_wire_bytes({"e": qr}) == r * (4 + d + 4)
