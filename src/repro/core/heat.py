@@ -62,46 +62,54 @@ def estimate_heat_secure_agg(indicators: np.ndarray, rng: Optional[np.random.Gen
     """
     rng = rng or np.random.default_rng(0)
     n, m = indicators.shape
-    masked = indicators.astype(np.uint64) % modulus
-    # pairwise masks: draw one matrix of per-pair seeds lazily per pair row to
-    # keep memory at O(n * m) rather than O(n^2 * m)
-    acc = np.zeros((m,), dtype=np.uint64)
+    # per-client masked vectors; both endpoints of a pair share the mask
+    # derived from SeedSequence((min(i,j), max(i,j))) — a stable function of
+    # the pair (unlike Python's per-process-salted hash()), so runs reproduce
+    # bit-identically across processes. Each pair mask is generated exactly
+    # once and applied with opposite signs to its two endpoints (the old
+    # O(N^2) loop re-derived every mask from both sides); the final server
+    # sum is one vectorised reduction. All arithmetic is mod 2^32 carried in
+    # uint64 (2^64 = 0 mod 2^32, so wraparound preserves the residue), hence
+    # this is bit-identical to the per-client accumulation it replaces.
+    vecs = indicators.astype(np.uint64) % modulus
     for i in range(n):
-        vec = masked[i].copy()
-        # every client re-derives the same pair mask from a shared seed:
-        # SeedSequence((min(i,j), max(i,j))) — a stable function of the pair,
-        # unlike Python's per-process-salted hash(), so runs reproduce
-        # bit-identically across processes
-        for j in range(n):
-            if j == i:
-                continue
-            pair_rng = np.random.default_rng(
-                np.random.SeedSequence((min(i, j), max(i, j))))
+        for j in range(i + 1, n):
+            pair_rng = np.random.default_rng(np.random.SeedSequence((i, j)))
             mask = pair_rng.integers(0, modulus, size=m, dtype=np.uint64)
-            if i < j:
-                vec = (vec + mask) % modulus
-            else:
-                vec = (vec - mask) % modulus
-        acc = (acc + vec) % modulus
+            vecs[i] = (vecs[i] + mask) % modulus
+            vecs[j] = (vecs[j] - mask) % modulus
+    acc = vecs.sum(axis=0, dtype=np.uint64)
     return (acc % modulus).astype(np.float64)
 
 
 def estimate_heat_randomized_response(
-    indicators: np.ndarray, flip_prob: float, rng: Optional[np.random.Generator] = None
+    indicators: np.ndarray, flip_prob: float,
+    rng: Optional[np.random.Generator] = None,
+    weights: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Unbiased heat estimate under randomized response (Warner 1965).
 
     Each client reports its true bit with prob ``1 - p`` and the flipped bit
     with prob ``p``. If ``c`` is the count of reported ones over N clients,
     ``(c - p*N) / (1 - 2p)`` is unbiased for the true count.
+
+    With ``weights`` (App. D.4 composed with App. F): the server sums
+    ``w_i * reported_i`` — the weighting never touches raw client bits, so
+    the local privacy guarantee is unchanged. ``E[sum w_i r_i] =
+    (1-2p) * sum w_i ind_i + p * W`` with ``W = sum w_i``, hence
+    ``(c_w - p*W) / (1 - 2p)`` is unbiased for the weighted heat.
     """
     assert 0.0 <= flip_prob < 0.5
     rng = rng or np.random.default_rng(0)
     n, m = indicators.shape
     flips = rng.random((n, m)) < flip_prob
     reported = np.where(flips, 1 - indicators, indicators)
-    c = reported.sum(axis=0).astype(np.float64)
-    return (c - flip_prob * n) / (1.0 - 2.0 * flip_prob)
+    if weights is None:
+        c = reported.sum(axis=0).astype(np.float64)
+        return (c - flip_prob * n) / (1.0 - 2.0 * flip_prob)
+    w = np.asarray(weights, np.float64)
+    c_w = (w[:, None] * reported).sum(axis=0)
+    return (c_w - flip_prob * w.sum()) / (1.0 - 2.0 * flip_prob)
 
 
 # ---------------------------------------------------------------------------

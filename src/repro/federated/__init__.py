@@ -1,8 +1,15 @@
 from repro.federated.client import make_local_trainer  # noqa: F401
 from repro.federated.metrics import comm_summary  # noqa: F401
-from repro.federated.server import FederatedTrainer  # noqa: F401
+from repro.federated.server import (  # noqa: F401
+    FederatedTrainer,
+    RoundRecord,
+    count_sub_ids,
+    derive_sub_ids,
+    pow2_capacity,
+)
 from repro.federated.simulation import (  # noqa: F401
     heat_spec_from_axes,
     make_round_step,
+    round_capacity,
     sparse_table_paths,
 )

@@ -8,6 +8,7 @@ the same interface.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -43,6 +44,69 @@ class RoundRecord:
     bytes_up: float = 0.0            # cumulative sparse-plane uplink bytes
     bytes_down: float = 0.0          # cumulative sparse-plane downlink bytes
     density: float = 1.0             # mean per-client submodel density so far
+    wall_time: float = 0.0           # mean seconds/round since the last record
+
+
+# ---------------------------------------------------------------------------
+# jitted sub-id derivation (the server engine's cohort preprocessing)
+# ---------------------------------------------------------------------------
+
+
+def pow2_capacity(max_count: int, floor: int = 8) -> int:
+    """Smallest power-of-two >= max(max_count, floor).
+
+    Sub-id capacities are bucketed to powers of two so the jitted round step
+    compiles at most O(log V) distinct variants over a whole training run —
+    the invariant must never be broken by clamping to a non-pow2 table size
+    (a capacity slightly above V only adds padding slots, which every sparse
+    consumer drops).
+    """
+    cap = floor
+    while cap < max_count:
+        cap *= 2
+    return cap
+
+
+@functools.partial(jax.jit, static_argnames=("num_features",))
+def count_sub_ids(feats: jax.Array, num_features: int) -> jax.Array:
+    """Per-client distinct-feature counts ``(K,)`` from stacked id leaves.
+
+    ``feats``: ``(K, M)`` int feature ids, negatives are padding. The count
+    is over distinct non-negative ids — the size of client k's submodel
+    S(k), i.e. the number of valid slots ``derive_sub_ids`` will fill.
+    """
+
+    def one(flat):
+        safe = jnp.where(flat >= 0, flat, num_features)
+        mark = jnp.zeros((num_features,), bool).at[safe].set(True, mode="drop")
+        return mark.sum(dtype=jnp.int32)
+
+    return jax.vmap(one)(feats)
+
+
+@functools.partial(jax.jit, static_argnames=("num_features", "capacity"))
+def derive_sub_ids(feats: jax.Array, num_features: int,
+                   capacity: int) -> jax.Array:
+    """Per-client sorted unique feature ids ``(K, capacity)``, -1 padded.
+
+    The jitted replacement for the trainer's former host-side per-client
+    ``np.unique`` loops: mark each client's touched rows in a (V,) bitmap,
+    rank the marks by cumsum, and scatter row indices to their rank — one
+    fused vectorised program per (K, M, capacity) shape bucket instead of K
+    numpy passes per round. ``capacity`` must come from ``pow2_capacity`` of
+    ``count_sub_ids(...).max()`` so the jit cache stays O(log V).
+    """
+
+    def one(flat):
+        safe = jnp.where(flat >= 0, flat, num_features)
+        mark = jnp.zeros((num_features,), bool).at[safe].set(True, mode="drop")
+        rank = jnp.cumsum(mark) - 1
+        slot = jnp.where(mark, rank, capacity)          # unmarked -> dropped
+        out = jnp.full((capacity,), -1, jnp.int32)
+        return out.at[slot].set(jnp.arange(num_features, dtype=jnp.int32),
+                                mode="drop")
+
+    return jax.vmap(one)(feats)
 
 
 class FederatedTrainer:
@@ -74,8 +138,18 @@ class FederatedTrainer:
             self._central_step = jax.jit(self._make_central_step())
         elif cfg.sparse:
             # jit caches one trace per sub_ids capacity (kept to O(log V)
-            # variants by the power-of-two rounding in _run_sparse_round)
-            self._sparse_step = jax.jit(self._make_sparse_round_step())
+            # variants by pow2_capacity bucketing); ServerState buffers are
+            # donated through the step so the table is updated in place
+            round_step = self._make_sparse_round_step()
+            self._sparse_step = jax.jit(round_step, donate_argnums=(0,))
+
+            def engine(state, cohorts, sub_ids):
+                # multi-round driver: scan the round step over stacked
+                # cohorts so dispatch overhead amortises across rounds
+                return jax.lax.scan(lambda s, xs: round_step(s, *xs), state,
+                                    (cohorts, sub_ids))
+
+            self._sparse_engine = jax.jit(engine, donate_argnums=(0,))
             self._prepare_sparse_plane(params)
         else:
             self._round_step = jax.jit(self._make_round_step())
@@ -85,33 +159,40 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------------
     def _resolve_heat(self, ds: FederatedDataset, cfg: FedConfig) -> HeatStats:
-        if cfg.heat_estimator == "exact":
-            counts, total = ds.heat.counts, ds.heat.total
-        elif cfg.heat_estimator == "randomized_response":
+        """Heat statistics under the configured estimator (App. F) and, when
+        ``weighted``, the App. D.4 per-client weighting — *composed with* the
+        estimator: weighted randomized response stays private (the weighting
+        is applied to the noisy reported bits, never to raw client data);
+        exact and secure_agg are exact by construction, so their weighted
+        variant aggregates ``w_c`` per involving client directly."""
+        key = ds.feature_key
+
+        def client_ids(c):
+            ids = ds.client_data[key][c].reshape(-1)
+            ids = ids[ids >= 0]
+            if key == "hist" and "target" in ds.client_data:
+                t = ds.client_data["target"][c].reshape(-1)
+                ids = np.concatenate([ids, t[t >= 0]])
+            return np.unique(ids)
+
+        w = ds.sample_counts.astype(np.float64) if cfg.weighted else None
+        if cfg.heat_estimator == "randomized_response":
             ind = np.zeros((ds.num_clients, ds.num_features), np.int64)
-            key = ds.feature_key
             for c in range(ds.num_clients):
-                ids = ds.client_data[key][c].reshape(-1)
-                ids = ids[ids >= 0]
-                ind[c, np.unique(ids)] = 1
-                if key == "hist" and "target" in ds.client_data:
-                    t = ds.client_data["target"][c].reshape(-1)
-                    ind[c, np.unique(t)] = 1
-            est = estimate_heat_randomized_response(ind, cfg.rr_flip_prob,
-                                                    np.random.default_rng(cfg.seed))
-            counts, total = np.clip(est, 0, ds.num_clients), float(ds.num_clients)
-        else:  # secure_agg is exact by construction; reuse exact counts
-            counts, total = ds.heat.counts, ds.heat.total
-        if cfg.weighted:
-            # App. D.4: weight clients by local dataset size
-            w = ds.sample_counts.astype(np.float64)
+                ind[c, client_ids(c)] = 1
+            est = estimate_heat_randomized_response(
+                ind, cfg.rr_flip_prob, np.random.default_rng(cfg.seed),
+                weights=w)
+            total = float(ds.num_clients) if w is None else float(w.sum())
+            counts = np.clip(est, 0, total)
+        elif cfg.weighted:
+            # exact / secure_agg: sum involving clients' weights (App. D.4)
             counts = np.zeros(ds.num_features)
-            key = ds.feature_key
             for c in range(ds.num_clients):
-                ids = ds.client_data[key][c].reshape(-1)
-                ids = ids[ids >= 0]
-                counts[np.unique(ids)] += w[c]
+                counts[client_ids(c)] += w[c]
             total = float(w.sum())
+        else:  # exact; secure_agg is exact by construction, reuse the counts
+            counts, total = ds.heat.counts, ds.heat.total
         return HeatStats(counts=np.asarray(counts, np.float64), total=float(total),
                          name="vocab")
 
@@ -200,32 +281,31 @@ class FederatedTrainer:
 
         return round_step
 
-    def _run_sparse_round(self) -> float:
+    def _sample_sparse_cohort(self):
+        """One round's host work: sample the cohort and stack its feature ids.
+
+        Returns ``(cohort_batch, feats)`` where ``feats`` is the ``(K, M)``
+        concatenation of every feature-carrying leaf — the input the jitted
+        ``count_sub_ids``/``derive_sub_ids`` pair consumes. This is the only
+        per-round host-side work left on the sparse path.
+        """
         cfg = self.cfg
         ids = self.np_rng.choice(self.ds.num_clients, size=cfg.clients_per_round,
                                  replace=False)
-        cohort = sample_cohort_batch(self.ds, ids, cfg.local_iters, cfg.local_batch,
-                                     self.np_rng)
-        feats = [np.asarray(cohort[k]).reshape(len(ids), -1)
-                 for k in self._feature_batch_keys]
-        per_client = [np.unique(np.concatenate([f[k_] for f in feats]))
-                      for k_ in range(len(ids))]
-        per_client = [u[u >= 0] for u in per_client]
-        valid_counts = np.array([len(u) for u in per_client])
-        # pow2 capacity bounds jit recompiles to O(log V) variants
-        capacity = 8
-        while capacity < valid_counts.max():
-            capacity *= 2
-        capacity = min(capacity, self.ds.num_features)
-        sub_ids = np.full((len(ids), capacity), -1, np.int32)
-        for k_, u in enumerate(per_client):
-            sub_ids[k_, : len(u)] = u
-        cohort = {k: jnp.asarray(v) for k, v in cohort.items()}
-        self.state, loss = self._sparse_step(self.state, cohort,
-                                             jnp.asarray(sub_ids))
-        # uplink: top-k keeps exactly min(k, valid) delta rows per client;
-        # downlink (the submodel download) and density stay at the full
-        # per-client feature counts
+        cohort = sample_cohort_batch(self.ds, ids, cfg.local_iters,
+                                     cfg.local_batch, self.np_rng)
+        feats = np.concatenate([np.asarray(cohort[k]).reshape(len(ids), -1)
+                                for k in self._feature_batch_keys], axis=1)
+        return cohort, feats
+
+    def _log_sparse_comm(self, valid_counts: np.ndarray):
+        """Comm accounting for one sparse round from per-client sub-id counts.
+
+        Uplink: top-k keeps exactly min(k, valid) delta rows per client;
+        downlink (the submodel download) and density stay at the full
+        per-client feature counts.
+        """
+        cfg = self.cfg
         up_counts = (np.minimum(valid_counts, cfg.sparse_topk)
                      if cfg.sparse_topk else valid_counts)
         dense_bytes, sparse_static, row_payload, row_elems = self._comm_meta
@@ -233,7 +313,55 @@ class FederatedTrainer:
             self._rounds_run, dense_bytes, sparse_static, row_payload,
             valid_counts, self.ds.num_features, int8=cfg.sparse_int8,
             row_elems=row_elems, uplink_rows_per_client=up_counts))
+
+    def _run_sparse_round(self) -> float:
+        cohort, feats = self._sample_sparse_cohort()
+        feats = jnp.asarray(feats)
+        valid_counts = np.asarray(count_sub_ids(feats, self.ds.num_features))
+        # pow2 capacity bounds jit recompiles to O(log V) variants
+        capacity = pow2_capacity(int(valid_counts.max()))
+        sub_ids = derive_sub_ids(feats, self.ds.num_features, capacity)
+        cohort = {k: jnp.asarray(v) for k, v in cohort.items()}
+        self.state, loss = self._sparse_step(self.state, cohort, sub_ids)
+        self._log_sparse_comm(valid_counts)
         return float(loss)
+
+    def run_rounds(self, n: int) -> List[float]:
+        """Drive ``n`` rounds through the in-jit engine (one ``lax.scan``).
+
+        Identical math and RNG stream to ``n`` successive ``run_round``
+        calls — the host samples all ``n`` cohorts up front (consuming
+        ``np_rng`` in the same order), sub-ids for every round are derived by
+        one jitted call, and a single scan-compiled program advances the
+        donated ``ServerState`` through all rounds, so per-round dispatch and
+        host work amortise to ~zero. Falls back to the per-round loop for
+        non-sparse configurations. Returns the per-round monitoring losses.
+        """
+        if n <= 0:
+            return []
+        cfg = self.cfg
+        if cfg.algorithm == "central" or not cfg.sparse:
+            return [self.run_round() for _ in range(n)]
+        k = cfg.clients_per_round
+        cohorts, feats = [], []
+        for _ in range(n):
+            c, f = self._sample_sparse_cohort()
+            cohorts.append(c)
+            feats.append(f)
+        stacked = {key: jnp.asarray(np.stack([c[key] for c in cohorts]))
+                   for key in cohorts[0]}
+        flat_feats = jnp.asarray(np.stack(feats)).reshape(n * k, -1)
+        valid_counts = np.asarray(
+            count_sub_ids(flat_feats, self.ds.num_features)).reshape(n, k)
+        capacity = pow2_capacity(int(valid_counts.max()))
+        sub_ids = derive_sub_ids(flat_feats, self.ds.num_features,
+                                 capacity).reshape(n, k, capacity)
+        self.state, losses = self._sparse_engine(self.state, stacked, sub_ids)
+        losses = np.asarray(losses)
+        for r in range(n):
+            self._rounds_run += 1
+            self._log_sparse_comm(valid_counts[r])
+        return [float(l) for l in losses]
 
     def _make_central_step(self):
         def central_step(state: ServerState, batches):
@@ -289,12 +417,30 @@ class FederatedTrainer:
         from repro.federated.metrics import comm_summary
         return comm_summary(self.comm_log)
 
-    def run(self, rounds: int, eval_every: int = 10, verbose: bool = False):
-        for r in range(rounds):
-            loss = self.run_round()
-            if (r + 1) % eval_every == 0 or r == rounds - 1:
+    def run(self, rounds: int, eval_every: int = 10, verbose: bool = False,
+            engine: bool = False):
+        """Train for ``rounds`` rounds, evaluating every ``eval_every``.
+
+        ``engine=True`` drives each between-evals stretch through
+        ``run_rounds`` (the in-jit multi-round scan) instead of one
+        ``run_round`` dispatch per round; results are identical to f32
+        tolerance. Per-round wall time lands in ``RoundRecord.wall_time``.
+        """
+        done = 0
+        while done < rounds:
+            chunk = min(eval_every - done % eval_every, rounds - done)
+            t0 = time.perf_counter()
+            if engine:
+                self.run_rounds(chunk)
+            else:
+                for _ in range(chunk):
+                    self.run_round()
+            wall = (time.perf_counter() - t0) / chunk
+            done += chunk
+            if done % eval_every == 0 or done == rounds:
                 metric = self.evaluate()
-                rec = RoundRecord(r + 1, self.train_loss(), metric)
+                rec = RoundRecord(done, self.train_loss(), metric,
+                                  wall_time=wall)
                 if self.comm_log:
                     s = self.comm_summary()
                     rec.bytes_up = s["bytes_up_sparse"]
@@ -302,7 +448,8 @@ class FederatedTrainer:
                     rec.density = s["mean_density"]
                 self.history.append(rec)
                 if verbose:
-                    print(f"[{self.cfg.algorithm}] round {r+1}: "
+                    print(f"[{self.cfg.algorithm}] round {done}: "
                           f"loss={self.history[-1].train_loss:.4f} "
-                          f"{self.metric}={metric:.4f}")
+                          f"{self.metric}={metric:.4f} "
+                          f"({wall * 1e3:.1f} ms/round)")
         return self.history

@@ -76,6 +76,19 @@ def sparse_table_paths(heat_spec: HeatSpec, spaces=None):
             if sparse_eligible(space, spaces)]
 
 
+def round_capacity(vocab: int, ids_size: int, align: int = 8) -> int:
+    """Union-id capacity for one sparse round step.
+
+    ``min(vocab, ids_size)`` rounded up to a multiple of ``align`` for tiling,
+    then clamped back to ``vocab`` — the rounding must never allocate union
+    slots past the feature table (e.g. V=50257 would otherwise get 50264
+    slots, gathering rows that don't exist in the table's id space).
+    """
+    cap = min(int(vocab), int(ids_size))
+    cap += (-cap) % align
+    return min(cap, int(vocab))
+
+
 def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
                     mode: str = "fedsgd", correct: bool = True,
                     feature_key: str = "tokens") -> Callable:
@@ -108,11 +121,14 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
                 loss, grads = jax.value_and_grad(loss_fn)(params, data)
             else:
                 # gradient accumulation: cohort split into microbatches so the
-                # live activation set stays within HBM at pod scale
-                def split(x):
+                # live activation set stays within HBM at pod scale. The batch
+                # axis is keyed on the entry NAME: only "mrope_pos" carries a
+                # leading (3,) coordinate axis with batch on axis 1 — keying
+                # on shape would misroute any genuine batch-size-3 entry.
+                def split(k, x):
                     if x.ndim == 0:
                         return x
-                    axis = 1 if x.shape[0] == 3 and x.ndim >= 3 else 0   # mrope (3,B,S)
+                    axis = 1 if k == "mrope_pos" else 0      # mrope (3,B,S)
                     b = x.shape[axis]
                     assert b % nmb == 0, (x.shape, nmb)
                     xs = jnp.moveaxis(x, axis, 0).reshape(
@@ -125,7 +141,7 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
                         return jnp.moveaxis(x, 1, 0)
                     return x
 
-                mb = {k: split(v) for k, v in data.items()}
+                mb = {k: split(k, v) for k, v in data.items()}
 
                 def acc_step(carry, mbatch):
                     g_acc, l_acc = carry
@@ -182,8 +198,7 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
                 # loss falls back to next-token targets from batch["tokens"])
                 data = {**data,
                         "labels": jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))}
-            capacity = min(vocab, int(tokens.size))
-            capacity += (-capacity) % 8
+            capacity = round_capacity(vocab, tokens.size)
             ids = batch_union_ids(data, (feature_key,), capacity)
             loss, grads = submodel_value_and_grad(
                 loss_fn, params, data, paths[0][0], (feature_key,), ids)

@@ -2,6 +2,8 @@
 
 heat_scatter      -- FedSubAvg's fused aggregate+correct embedding update
 rowsparse_scatter -- generalisation to cohort row-sparse deltas (sparse plane)
+union_segsum      -- fused union build + segment-sum + heat scaling producing
+                     the union-id RowSparse aggregate (sparse server engine)
 flash_attention   -- causal GQA flash attention (+ sliding window)
 flash_decode      -- single-token decode against long KV caches
 
@@ -13,4 +15,5 @@ from repro.kernels.ops import (  # noqa: F401
     flash_decode,
     heat_scatter,
     rowsparse_scatter,
+    union_segsum,
 )

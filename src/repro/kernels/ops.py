@@ -17,6 +17,7 @@ from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.heat_scatter import heat_scatter as _heat_scatter
 from repro.kernels.heat_scatter import on_tpu as _on_tpu
 from repro.kernels.heat_scatter import rowsparse_scatter as _rowsparse_scatter
+from repro.kernels.union_segsum import union_segsum as _union_segsum
 
 
 @functools.partial(jax.jit, static_argnames=("total", "vocab", "v_blk", "t_blk"))
@@ -33,6 +34,15 @@ def rowsparse_scatter(ids, rows, heat, total: float, vocab: int,
     """Fused cohort row-sparse aggregation + heat correction (see kernel)."""
     return _rowsparse_scatter(ids, rows, heat, total, vocab, scale=scale,
                               v_blk=v_blk, t_blk=t_blk, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("total", "cap", "num_rows", "scale",
+                                             "v_blk", "t_blk"))
+def union_segsum(ids, rows, heat, total: float, cap: int, num_rows: int,
+                 scale: float = 1.0, v_blk: int = 512, t_blk: int = 512):
+    """Fused union + segment-sum + heat scaling (see kernel module)."""
+    return _union_segsum(ids, rows, heat, total, cap, num_rows, scale=scale,
+                         v_blk=v_blk, t_blk=t_blk, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k"))

@@ -1,0 +1,209 @@
+"""Pallas TPU kernel: fused union + segment-sum + heat scaling (sparse server).
+
+The FedSubAvg server step over a cohort's row-sparse deltas has three parts:
+build the union of the clients' submodel ids, segment-sum the contributed rows
+onto those union slots, and scale each slot by ``scale * N / n_m`` (Algorithm
+1 line 9, fused with the cohort mean). The jnp backends in
+``repro.sparse.aggregate`` express this as a chain of sort/searchsorted (or
+bitmap/cumsum) + scatter ops; this kernel does all three in one blocked pass
+so the server hot loop issues a single fused program instead of a dispatch
+chain.
+
+Layout: grid ``(nv, nt)`` over vocab blocks x row blocks, both sequential on
+TPU (row-major), with the vocab axis outer. Per vocab block the kernel
+
+1. accumulates the block's segment-sums as a blocked one-hot MXU matmul
+   ``(v_blk, t_blk) @ (t_blk, D)`` into a VMEM scratch accumulator across the
+   row blocks (same scheme as ``heat_scatter``), together with per-row match
+   counts;
+2. on the block's last row tile, applies the fused heat factor, ranks the
+   touched rows with an in-block cumsum, compacts them to the front of the
+   block through a ``(v_blk, v_blk)`` permutation matmul, and
+3. appends the compacted ``(ids, rows)`` window to the output at the running
+   union offset (an SMEM carry across vocab blocks) with a dynamic store.
+
+Because vocab blocks are visited in ascending order the emitted union ids are
+sorted — the same invariant as ``unique_ids_padded`` — and overflow beyond
+``cap`` falls into a ``v_blk`` padding tail that is sliced off, which drops
+the largest ids exactly like the sort backend's capacity drop.
+
+The union outputs ``(cap + v_blk,)`` ids and ``(cap + v_blk, D)`` rows stay
+VMEM-resident for the whole kernel (constant output index map), so the kernel
+targets union capacities that fit VMEM — the regime the sparse plane is for.
+``fits_vmem`` is the runtime guard the ``"auto"`` backend selection consults;
+beyond it the jnp backends take over. Backend selection mirrors
+``heat_scatter``: compiled on TPU, interpret mode elsewhere (the CI parity
+target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.heat_scatter import _pick_blk, _tpu_compiler_params, on_tpu
+
+DEFAULT_V_BLK = 512
+DEFAULT_T_BLK = 512
+
+#: VMEM budget (bytes) the resident outputs + scratch must fit for the
+#: compiled path; ~16 MB/core minus headroom for pipeline buffers.
+VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _kernel(ids_ref, rows_ref, heat_ref, out_ids_ref, out_rows_ref,
+            acc_ref, cnt_ref, carry_ref, *, total: float, scale: float,
+            use_heat: bool, v_blk: int, t_blk: int, nt: int, cap: int):
+    iv = pl.program_id(0)
+    it = pl.program_id(1)
+
+    @pl.when((iv == 0) & (it == 0))
+    def _init_out():
+        carry_ref[0] = 0
+        out_ids_ref[...] = jnp.full_like(out_ids_ref, -1)
+        out_rows_ref[...] = jnp.zeros_like(out_rows_ref)
+
+    @pl.when(it == 0)
+    def _init_block():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    ids = ids_ref[...]                                     # (t_blk,)
+    base = iv * v_blk
+    vrows = base + jax.lax.broadcasted_iota(jnp.int32, (v_blk, t_blk), 0)
+    # padding ids (-1) are < 0 and match no vocab row in any tile
+    onehot = (vrows == ids[None, :]).astype(jnp.float32)   # (v_blk, t_blk)
+    rows = rows_ref[...].astype(jnp.float32)               # (t_blk, D)
+    # HIGHEST keeps the accumulation in true f32 on TPU (the default MXU
+    # bf16 passes would cost ~1e-3 relative error vs the jnp backends)
+    acc_ref[...] += jnp.dot(onehot, rows, preferred_element_type=jnp.float32,
+                            precision=jax.lax.Precision.HIGHEST)
+    cnt_ref[...] += onehot.sum(axis=1)
+
+    @pl.when(it == nt - 1)
+    def _emit():
+        touched = cnt_ref[...] > 0                         # (v_blk,)
+        if use_heat:
+            heat = heat_ref[...].astype(jnp.float32)
+            factor = jnp.where(heat > 0,
+                               scale * total / jnp.maximum(heat, 1.0), 0.0)
+        else:
+            factor = jnp.full((v_blk,), scale, jnp.float32)
+        scaled = acc_ref[...] * factor[:, None]
+        rank = jnp.cumsum(touched.astype(jnp.int32)) - 1   # in-block rank
+        n_new = jnp.sum(touched.astype(jnp.int32))
+        # compact the touched rows to the window front: P[s, v] = 1 iff the
+        # touched vocab row v has rank s — a permutation matmul on the MXU
+        srange = jax.lax.broadcasted_iota(jnp.int32, (v_blk, v_blk), 0)
+        sel = (srange == rank[None, :]) & touched[None, :]   # (slot, vocab)
+        win_rows = jnp.dot(sel.astype(jnp.float32), scaled,
+                           preferred_element_type=jnp.float32,
+                           precision=jax.lax.Precision.HIGHEST)
+        # ids stay integer end-to-end: each window slot selects exactly one
+        # vocab row, so an int32 max-reduction extracts it exactly at any
+        # vocab size (a f32 matmul would corrupt ids >= 2^24)
+        vr = base + jax.lax.broadcasted_iota(jnp.int32, (v_blk, v_blk), 1)
+        win_ids_m = jnp.max(jnp.where(sel, vr, -1), axis=1)
+        slot = jax.lax.broadcasted_iota(jnp.int32, (v_blk, 1), 0)
+        win_ids = jnp.where(slot < n_new, win_ids_m[:, None], -1)
+        carry = carry_ref[0]
+        # clamp: once the union overflows cap, windows land in the padding
+        # tail [cap, cap + v_blk) and are sliced off by the wrapper
+        offset = jnp.minimum(carry, cap)
+        pl.store(out_ids_ref, (pl.ds(offset, v_blk), slice(None)), win_ids)
+        pl.store(out_rows_ref, (pl.ds(offset, v_blk), slice(None)), win_rows)
+        carry_ref[0] = carry + n_new
+
+
+def fits_vmem(cap: int, row_elems: int, v_blk: int = DEFAULT_V_BLK,
+              t_blk: int = DEFAULT_T_BLK, budget: int = VMEM_BUDGET) -> bool:
+    """Whether the kernel's VMEM-resident footprint fits the compiled budget."""
+    d = max(int(row_elems), 1)
+    resident = (cap + v_blk) * (d + 1) * 4          # out rows + ids
+    blocks = (2 * t_blk * d + v_blk * d + v_blk * t_blk + v_blk * v_blk) * 4
+    return resident + blocks <= budget
+
+
+def union_segsum(ids, rows, heat, total: float, cap: int, num_rows: int, *,
+                 scale: float = 1.0, v_blk: int = DEFAULT_V_BLK,
+                 t_blk: int = DEFAULT_T_BLK, interpret=None):
+    """Fused union + segment-sum + FedSubAvg scaling over cohort deltas.
+
+    ids: ``(K, R)`` or flat ``(T,)`` int32 feature ids (-1 pads, dropped);
+    rows: matching ``(K, R, ...)`` / ``(T, ...)`` payload; heat: ``(num_rows,)``
+    or None (factor ``scale`` for every union row). Returns ``(union_ids,
+    union_rows)``: sorted-ascending union ids padded with -1 to ``cap`` and
+    the summed rows scaled by ``scale * total / n_m`` (0 where heat is 0).
+    Ids beyond ``cap`` distinct values are dropped largest-first, matching
+    ``unique_ids_padded``.
+
+    ``interpret=None`` selects the compiled TPU path on TPU and the
+    interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    ids = jnp.asarray(ids)
+    rows = jnp.asarray(rows)
+    trailing = tuple(rows.shape[ids.ndim:])      # payload dims beyond the ids'
+    ids = ids.reshape(-1).astype(jnp.int32)
+    rows = rows.reshape((ids.shape[0], -1))
+    t, d = rows.shape
+    out_shape = (cap,) + trailing
+    if t == 0 or cap == 0:
+        return (jnp.full((cap,), -1, jnp.int32),
+                jnp.zeros(out_shape, jnp.float32))
+
+    use_heat = heat is not None
+    heat = (jnp.asarray(heat, jnp.float32) if use_heat
+            else jnp.zeros((num_rows,), jnp.float32))
+    v_blk = _pick_blk(num_rows, v_blk)
+    t_blk = min(t_blk, t)
+    pad = (-t) % t_blk
+    if pad:
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, ids.dtype)])
+        rows = jnp.concatenate([rows, jnp.zeros((pad, d), rows.dtype)])
+        t += pad
+    vpad = (-num_rows) % v_blk
+    v_p = num_rows + vpad
+    if vpad:
+        # padded vocab rows are matched by no id, so they are never touched
+        # and never emitted into the union
+        heat = jnp.concatenate([heat, jnp.zeros((vpad,), heat.dtype)])
+    nv, nt = v_p // v_blk, t // t_blk
+    cap_p = cap + v_blk
+
+    kwargs = {}
+    if not interpret:
+        cp = _tpu_compiler_params()
+        if cp is not None:
+            kwargs["compiler_params"] = cp
+    out_ids, out_rows = pl.pallas_call(
+        functools.partial(_kernel, total=float(total), scale=float(scale),
+                          use_heat=use_heat, v_blk=v_blk, t_blk=t_blk,
+                          nt=nt, cap=cap),
+        grid=(nv, nt),
+        in_specs=[
+            pl.BlockSpec((t_blk,), lambda iv, it: (it,)),
+            pl.BlockSpec((t_blk, d), lambda iv, it: (it, 0)),
+            pl.BlockSpec((v_blk,), lambda iv, it: (iv,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cap_p, 1), lambda iv, it: (0, 0)),
+            pl.BlockSpec((cap_p, d), lambda iv, it: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap_p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cap_p, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((v_blk, d), jnp.float32),
+            pltpu.VMEM((v_blk,), jnp.float32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(ids, rows, heat)
+    return out_ids[:cap, 0], out_rows[:cap].reshape(out_shape)

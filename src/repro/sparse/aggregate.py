@@ -5,15 +5,18 @@ contributes ``(ids_i, rows_i)``; the server sums rows landing on the same
 feature id, scales by ``1/K`` (cohort mean) and fuses the heat correction
 ``N / n_m`` — one pass over the non-zeros, never touching cold rows.
 
-Two backends, selected at runtime:
+Three union backends, selected at runtime (``union_backend="auto"``):
 
-``jnp``     sort/searchsorted segment-sum into the cohort's union ids —
-            O(nnz) work, the right path on CPU and for sparse *output*
-            (the server keeps the update sparse end-to-end).
-``pallas``  the generalized ``rowsparse_scatter`` kernel (blocked one-hot
-            MXU matmul, ``repro.kernels.heat_scatter``) producing the dense
-            corrected update directly in VMEM tiles — the TPU path when the
-            server applies into a dense replicated table.
+``bitmap``  mark touched rows in a (V,) bitmap, rank by cumsum — O(V)
+            streamed vector work, the CPU fast path for moderate V.
+``sort``    sort/searchsorted — O(T log T), for huge feature spaces.
+``pallas``  the fused ``union_segsum`` kernel (``repro.kernels``): union
+            build, segment-sum and heat scaling in one blocked TPU program —
+            the server hot-loop path whenever the union fits VMEM (compiled
+            on TPU; interpret-mode parity elsewhere).
+
+``aggregate_rowsparse_dense`` additionally routes through the dense-output
+``rowsparse_scatter`` kernel when the server applies into a dense table.
 """
 from __future__ import annotations
 
@@ -47,12 +50,33 @@ def heat_factor_at(heat: Array, ids: Array, total: float,
 _BITMAP_MAX_ROWS = 1 << 22
 
 
+def _resolve_backend(backend: str, num_rows: int, cap: int,
+                     row_elems: int) -> str:
+    """Runtime union-backend selection for ``"auto"``.
+
+    On TPU the fused ``union_segsum`` kernel wins whenever its VMEM-resident
+    union fits the budget; otherwise (and everywhere on CPU, where the
+    interpreter would crawl) the jnp backends split by feature-space size.
+    """
+    if backend != "auto":
+        return backend
+    from repro.kernels.heat_scatter import on_tpu
+    from repro.kernels.union_segsum import fits_vmem
+    # the kernel's grid scales with V/v_blk, so beyond the bitmap regime the
+    # sort backend wins regardless of how small the union is
+    if on_tpu() and num_rows <= _BITMAP_MAX_ROWS and fits_vmem(cap, row_elems):
+        return "pallas"
+    return "bitmap" if num_rows <= _BITMAP_MAX_ROWS else "sort"
+
+
 def _union_and_slots(flat_ids: Array, num_rows: int, cap: int, backend: str):
-    """(union ids (cap,), per-element slot (T,)) under either union backend.
+    """(union ids (cap,), per-element slot (T,)) under either jnp backend.
 
     ``bitmap``: mark touched rows in a (V,) bitmap, rank by cumsum, compact
     with size-bounded ``nonzero`` — no sort, everything streams. ``sort``:
-    the generic O(T log T) path for huge feature spaces.
+    the generic O(T log T) path for huge feature spaces. (The ``pallas``
+    backend never materialises slots — ``aggregate_rowsparse`` dispatches to
+    the fused ``union_segsum`` kernel before reaching here.)
     """
     if backend == "auto":
         backend = "bitmap" if num_rows <= _BITMAP_MAX_ROWS else "sort"
@@ -88,6 +112,16 @@ def aggregate_rowsparse(stacked: RowSparse, heat: Optional[Array] = None,
     cap = union_capacity or min(stacked.num_rows, k * r)
     flat_ids = stacked.ids.reshape(-1)
     flat_rows = stacked.rows.reshape((k * r,) + tuple(stacked.rows.shape[2:]))
+    row_elems = int(flat_rows.size) // max(k * r, 1)
+
+    union_backend = _resolve_backend(union_backend, stacked.num_rows, cap,
+                                     row_elems)
+    if union_backend == "pallas":
+        from repro.kernels import ops
+        union, summed = ops.union_segsum(
+            flat_ids, flat_rows, heat, float(total), cap, stacked.num_rows,
+            scale=float(scale))
+        return RowSparse(union, summed, stacked.num_rows)
 
     union, pos = _union_and_slots(flat_ids, stacked.num_rows, cap, union_backend)
     summed = jnp.zeros((cap,) + tuple(flat_rows.shape[1:]), jnp.float32)

@@ -133,3 +133,90 @@ def test_replicated_mode_local_iters():
     new_params, metrics = jax.jit(step)(params, batch)
     diff = jax.tree.leaves(tree_sub(unbox(new_params), unbox(params)))
     assert any(float(jnp.abs(d).max()) > 0 for d in diff)
+
+
+def test_weighted_composes_with_randomized_response(ds):
+    """Regression: weighted=True must not silently bypass the randomized-
+    response estimator with exact counts recomputed from raw client data —
+    the weighting is composed with the noisy reported bits (App. D.4 + F)."""
+    from repro.core.heat import estimate_heat_randomized_response
+
+    cfg_kw = dict(heat_estimator="randomized_response", rr_flip_prob=0.2,
+                  weighted=True)
+    tr = _trainer(ds, "fedsubavg", rounds=1, **cfg_kw)
+
+    # exact weighted counts (what the pre-fix code returned)
+    w = ds.sample_counts.astype(np.float64)
+    exact_w = np.zeros(ds.num_features)
+    ind = np.zeros((ds.num_clients, ds.num_features), np.int64)
+    for c in range(ds.num_clients):
+        ids = ds.client_data[ds.feature_key][c].reshape(-1)
+        u = np.unique(ids[ids >= 0])
+        exact_w[u] += w[c]
+        ind[c, u] = 1
+    assert not np.allclose(tr.heat.counts, exact_w), \
+        "weighted heat bypassed the randomized-response mechanism"
+
+    # and it matches the weighted RR estimator run under the trainer's seed
+    want = estimate_heat_randomized_response(
+        ind, 0.2, np.random.default_rng(tr.cfg.seed), weights=w)
+    want = np.clip(want, 0, w.sum())
+    np.testing.assert_allclose(tr.heat.counts, want)
+    assert tr.heat.total == pytest.approx(w.sum())
+    assert np.isfinite(tr.history[-1].train_loss)
+
+
+def test_microbatch_split_keys_on_name_not_shape():
+    """Regression: a genuine batch-size-3 entry with ndim >= 3 must split on
+    axis 0 — the old shape-keyed rule routed it down the mrope axis-1 path."""
+    from repro.federated.simulation import make_round_step
+    from repro.sharding.logical import Param
+
+    params = {"w": Param(jnp.eye(4, dtype=jnp.float32), (None, None))}
+
+    def loss_fn(p, batch):
+        x = batch["x"]                       # (B, S, 4) with B == 3
+        y = jnp.einsum("bsd,de->bse", x, p["w"].value if hasattr(p["w"], "value")
+                       else p["w"])
+        return jnp.mean(y ** 2)
+
+    fed1 = FedConfig(num_clients=4, lr=0.1, microbatches=1)
+    fed3 = FedConfig(num_clients=4, lr=0.1, microbatches=3)
+    # S = 5 is not divisible by nmb=3: the buggy axis-1 split asserts out
+    batch = {"x": jnp.asarray(np.random.default_rng(0).normal(size=(3, 5, 4)),
+                              jnp.float32),
+             "heat_vocab": jnp.ones((4,), jnp.float32)}
+    step1 = make_round_step(loss_fn, params, fed1, mode="fedsgd", correct=False)
+    step3 = make_round_step(loss_fn, params, fed3, mode="fedsgd", correct=False)
+    p1, m1 = jax.jit(step1)(params, batch)
+    p3, m3 = jax.jit(step3)(params, batch)
+    np.testing.assert_allclose(float(m3["loss"]), float(m1["loss"]), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(unbox(p1)), jax.tree.leaves(unbox(p3))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_microbatch_mrope_still_splits_on_batch_axis():
+    """The name-keyed rule preserves the mrope (3, B, S) handling."""
+    cfg = get_smoke_config("qwen2_vl_7b").replace(dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    b, s = 4, 16
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (3, b, s))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                          cfg.vocab_size),
+             "labels": jnp.ones((b, s), jnp.int32),
+             "mask": jnp.ones((b, s), jnp.float32),
+             "mrope_pos": pos,
+             "patch_embeds": 0.01 * jnp.ones((b, cfg.num_patches, cfg.d_model),
+                                             jnp.float32),
+             "heat_vocab": jnp.ones((cfg.vocab_size,), jnp.float32)}
+    fed1 = FedConfig(num_clients=10, lr=0.1, algorithm="fedsubavg",
+                     microbatches=1)
+    fed2 = FedConfig(num_clients=10, lr=0.1, algorithm="fedsubavg",
+                     microbatches=2)
+    p1, m1 = jax.jit(make_round_step(api.loss, params, fed1, "fedsgd"))(params, batch)
+    p2, m2 = jax.jit(make_round_step(api.loss, params, fed2, "fedsgd"))(params, batch)
+    for a, b_ in zip(jax.tree.leaves(unbox(p1)), jax.tree.leaves(unbox(p2))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-4, atol=2e-5)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from repro.configs import FedConfig, get_smoke_config
 from repro.core.aggregate import HeatSpec, correct_update_tree
 from repro.data import make_amazon_like, make_movielens_like
-from repro.federated import FederatedTrainer, make_round_step
+from repro.federated import (FederatedTrainer, count_sub_ids, derive_sub_ids,
+                             make_round_step, pow2_capacity, round_capacity)
 from repro.kernels import ops, ref
 from repro.models import build_model
 from repro.models.recsys import (lr_logits, lr_loss, lstm_loss, make_lr_params,
@@ -184,6 +185,163 @@ def test_kernel_matches_sparse_aggregate(rng):
 
 
 # ---------------------------------------------------------------------------
+# fused union_segsum kernel (the sparse server engine)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("v,v_blk,t_blk", [
+    (64, 16, 32),
+    (101, 32, 64),       # V not a multiple of the block
+    (37, 8, 16),
+])
+def test_union_segsum_matches_jnp_backends(seed, v, v_blk, t_blk):
+    """Randomized cohorts (duplicate ids across clients by construction):
+    the fused kernel's RowSparse output equals both jnp backends'."""
+    from repro.kernels.union_segsum import union_segsum
+    rng = np.random.default_rng(seed)
+    k, d = 4, 5
+    ids_np, dense = _random_cohort(rng, k, v, d, max_rows=max(v // 3, 4))
+    heat = np.zeros(v, np.float64)
+    for i in range(k):
+        heat[ids_np[i][ids_np[i] >= 0]] += 1
+    stacked = jax.vmap(RowSparse.from_dense)(jnp.asarray(dense),
+                                             jnp.asarray(ids_np))
+    total, scale = 24.0, 0.25
+    heat_j = jnp.asarray(heat, jnp.float32)
+    want = {b: aggregate_rowsparse(stacked, heat_j, total, scale,
+                                   union_backend=b)
+            for b in ("bitmap", "sort")}
+    got = aggregate_rowsparse(stacked, heat_j, total, scale,
+                              union_backend="pallas")
+    for b, w in want.items():
+        np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(w.ids))
+        np.testing.assert_allclose(np.asarray(got.to_dense()),
+                                   np.asarray(w.to_dense()),
+                                   rtol=1e-5, atol=1e-5, err_msg=b)
+    # direct kernel call with explicit small blocks agrees too
+    u_ids, u_rows = union_segsum(stacked.ids, stacked.rows, heat_j, total,
+                                 got.capacity, v, scale=scale,
+                                 v_blk=v_blk, t_blk=t_blk)
+    np.testing.assert_array_equal(np.asarray(u_ids), np.asarray(got.ids))
+    np.testing.assert_allclose(np.asarray(u_rows), np.asarray(got.rows),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_union_segsum_all_pad_clients_and_exact_cap(rng):
+    """All-pad clients contribute nothing; cap == union size exactly fills
+    every slot; cap < union drops the largest ids (sort-backend semantics)."""
+    v, d = 40, 3
+    ids = np.array([[3, 7, 11, -1], [-1, -1, -1, -1], [7, 20, -1, -1]],
+                   np.int32)
+    rows = rng.normal(size=(3, 4, d)).astype(np.float32)
+    rows[ids < 0] = 0
+    heat = jnp.asarray(rng.integers(1, 5, v), jnp.float32)
+    stacked = RowSparse(jnp.asarray(ids), jnp.asarray(rows), v)
+    union = {3, 7, 11, 20}
+    for cap in (len(union), len(union) - 1, len(union) + 3):
+        got = aggregate_rowsparse(stacked, heat, 10.0, 0.5,
+                                  union_capacity=cap, union_backend="pallas")
+        want = aggregate_rowsparse(stacked, heat, 10.0, 0.5,
+                                   union_capacity=cap, union_backend="sort")
+        np.testing.assert_array_equal(np.asarray(got.ids),
+                                      np.asarray(want.ids))
+        np.testing.assert_allclose(np.asarray(got.to_dense()),
+                                   np.asarray(want.to_dense()),
+                                   rtol=1e-5, atol=1e-6)
+    lone = aggregate_rowsparse(
+        RowSparse(jnp.asarray(ids[1:2]), jnp.asarray(rows[1:2]), v), heat,
+        10.0, 1.0, union_backend="pallas")
+    assert int((lone.ids >= 0).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(lone.to_dense()), 0)
+
+
+def test_union_backend_auto_selection(monkeypatch):
+    """'auto' resolves to a jnp backend off-TPU and to the fused kernel on
+    TPU whenever the union fits VMEM (interpret vs compiled selection)."""
+    import importlib
+    hs_mod = importlib.import_module("repro.kernels.heat_scatter")
+    from repro.sparse import aggregate as agg_mod
+    assert agg_mod._resolve_backend("auto", 1000, 64, 8) in ("bitmap", "sort")
+    assert agg_mod._resolve_backend("pallas", 1000, 64, 8) == "pallas"
+    monkeypatch.setattr(hs_mod, "on_tpu", lambda: True)
+    assert agg_mod._resolve_backend("auto", 1000, 64, 8) == "pallas"
+    # beyond the VMEM budget auto falls back to the jnp backends
+    assert agg_mod._resolve_backend("auto", 1 << 23, 1 << 22, 64) == "sort"
+    # huge feature spaces never auto-select the kernel (grid scales with V),
+    # even when the union itself would fit VMEM
+    assert agg_mod._resolve_backend("auto", (1 << 22) + 1, 64, 8) == "sort"
+    # the kernel wrapper keys interpret mode off the same runtime check
+    us_mod = importlib.import_module("repro.kernels.union_segsum")
+    assert us_mod.fits_vmem(64, 8) and not us_mod.fits_vmem(1 << 22, 64)
+
+
+# ---------------------------------------------------------------------------
+# jitted sub-id derivation (server engine preprocessing)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_derive_sub_ids_matches_numpy_path(seed):
+    """The jitted bitmap-rank derivation reproduces the old host-side
+    per-client np.unique loop exactly (ids, padding, and counts)."""
+    rng = np.random.default_rng(seed)
+    k, m, v = 6, 40, 57
+    feats = rng.integers(-1, v, (k, m)).astype(np.int32)
+    feats[2] = -1                                    # an all-pad client
+    counts = np.asarray(count_sub_ids(jnp.asarray(feats), v))
+    capacity = pow2_capacity(int(counts.max()))
+    got = np.asarray(derive_sub_ids(jnp.asarray(feats), v, capacity))
+    for c in range(k):
+        u = np.unique(feats[c])
+        u = u[u >= 0]
+        assert counts[c] == len(u)
+        np.testing.assert_array_equal(got[c, : len(u)], u)
+        assert np.all(got[c, len(u):] == -1)
+
+
+def test_pow2_capacity_invariant():
+    """Regression: capacities are pure powers of two (>= 8) so the jitted
+    round step compiles O(log V) variants — the old trainer clamped the
+    bucket to a non-pow2 table size, breaking the ladder."""
+    assert pow2_capacity(0) == 8 and pow2_capacity(8) == 8
+    for n in (3, 9, 70, 100, 1000):
+        cap = pow2_capacity(n)
+        assert cap >= max(n, 8) and (cap & (cap - 1)) == 0
+    # the broken variant: min(pow2, V) with V=100 gave 100 for counts > 64
+    assert pow2_capacity(70) == 128
+
+
+def test_round_capacity_clamped_to_vocab():
+    """Regression: rounding the union capacity up to a multiple of 8 must
+    never allocate slots past the feature table (e.g. V=50257 -> 50264)."""
+    assert round_capacity(50257, 10 ** 9) == 50257
+    assert round_capacity(101, 1000) == 101
+    cap = round_capacity(101, 50)
+    assert cap == 56 and cap % 8 == 0          # rounding still applies
+    assert round_capacity(8, 3) == 8
+
+
+def test_simulation_sparse_mode_odd_vocab_runs():
+    """End-to-end regression companion: a vocab that is not a multiple of 8
+    with a batch large enough to trigger the clamp still runs exactly."""
+    from repro.models.recsys import lstm_loss, make_lstm_params
+    v = 41
+    params = make_lstm_params(v, emb_dim=6, hidden=8, layers=1,
+                              rng=jax.random.PRNGKey(1))
+    fed = FedConfig(num_clients=16, clients_per_round=4, lr=0.1,
+                    algorithm="fedsubavg")
+    step = make_round_step(lstm_loss, params, fed, mode="sparse")
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, v, (8, 16)), jnp.int32),
+             "label": jnp.asarray(rng.integers(0, 2, 8), jnp.int32),
+             "heat_vocab": jnp.full((v,), 4.0)}
+    new_params, metrics = jax.jit(step)(params, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["density"]) <= 1.0
+
+
+# ---------------------------------------------------------------------------
 # gather-before-backward encoder
 # ---------------------------------------------------------------------------
 
@@ -322,6 +480,39 @@ def test_trainer_sparse_din_includes_targets():
     losses_d = [td.run_round() for _ in range(4)]
     losses_s = [ts.run_round() for _ in range(4)]
     np.testing.assert_allclose(losses_s, losses_d, rtol=1e-5, atol=1e-6)
+
+
+def test_trainer_run_rounds_matches_run_round(small_ds):
+    """The in-jit multi-round engine (one lax.scan) reproduces the per-round
+    loop: same RNG stream, same losses, same parameters, same comm log."""
+    tr_loop = _make_trainer(small_ds, sparse=True)
+    tr_scan = _make_trainer(small_ds, sparse=True)
+    losses_loop = [tr_loop.run_round() for _ in range(6)]
+    losses_scan = tr_scan.run_rounds(6)
+    np.testing.assert_allclose(losses_scan, losses_loop, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(unbox(tr_loop.state.params)),
+                    jax.tree.leaves(unbox(tr_scan.state.params))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    assert len(tr_scan.comm_log) == len(tr_loop.comm_log) == 6
+    for cl, cs in zip(tr_loop.comm_log, tr_scan.comm_log):
+        assert cs.bytes_up_sparse == pytest.approx(cl.bytes_up_sparse)
+    # run(engine=True) drives the same engine and surfaces wall time
+    tr_eng = _make_trainer(small_ds, sparse=True)
+    tr_eng.run(4, eval_every=2, engine=True)
+    assert tr_eng.history[-1].round == 4
+    assert tr_eng.history[-1].wall_time > 0
+    # engine composes with the compression variants
+    tr_c = _make_trainer(small_ds, sparse=True, sparse_topk=6, sparse_int8=True)
+    assert np.all(np.isfinite(tr_c.run_rounds(3)))
+
+
+def test_trainer_run_rounds_dense_fallback(small_ds):
+    """Non-sparse configs fall back to the per-round loop transparently."""
+    tr = _make_trainer(small_ds, sparse=False)
+    losses = tr.run_rounds(2)
+    assert len(losses) == 2 and np.all(np.isfinite(losses))
+    assert tr._rounds_run == 2
 
 
 def test_trainer_sparse_compression_variants_run(small_ds):
