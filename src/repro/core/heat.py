@@ -55,22 +55,41 @@ def estimate_heat_secure_agg(indicators: np.ndarray, rng: Optional[np.random.Gen
     """Secure-aggregation simulation: pairwise additive masks that cancel.
 
     Each client i adds masks ``m_{ij}`` for j>i and subtracts ``m_{ji}`` for
-    j<i (mod 2^32); the server sums the masked vectors and the masks cancel,
+    j<i (mod ``modulus``); the server sums the masked vectors and the masks
+    cancel,
     recovering the exact heat without seeing any individual indicator. This
     simulates the Bonawitz et al. protocol's arithmetic; the crypto key
     agreement is out of scope (there is no adversary inside a simulation).
+
+    ``modulus`` must be a power of two (at most 2**63): the per-client
+    vectors are reduced mod ``modulus`` as each mask is applied, but the
+    final server sum across clients accumulates unreduced in uint64 and is
+    reduced once — congruent mod ``modulus`` iff ``modulus`` divides 2**64
+    — and the modulus itself must stay uint64-representable. It
+    must also exceed the client count, or the true heat of a hot feature
+    (up to N for 0/1 indicators) would itself wrap mod the ring size.
     """
+    if modulus <= 0 or modulus & (modulus - 1) or modulus > (1 << 63):
+        raise ValueError(
+            f"modulus must be a power of two <= 2**63, got {modulus}: the "
+            "uint64 wraparound arithmetic is only congruent mod a divisor "
+            "of 2**64")
     rng = rng or np.random.default_rng(0)
     n, m = indicators.shape
+    if modulus <= n:
+        raise ValueError(
+            f"modulus {modulus} must exceed the client count {n}: the true "
+            "heat reaches n for a feature every client holds and would wrap")
     # per-client masked vectors; both endpoints of a pair share the mask
     # derived from SeedSequence((min(i,j), max(i,j))) — a stable function of
     # the pair (unlike Python's per-process-salted hash()), so runs reproduce
     # bit-identically across processes. Each pair mask is generated exactly
     # once and applied with opposite signs to its two endpoints (the old
     # O(N^2) loop re-derived every mask from both sides); the final server
-    # sum is one vectorised reduction. All arithmetic is mod 2^32 carried in
-    # uint64 (2^64 = 0 mod 2^32, so wraparound preserves the residue), hence
-    # this is bit-identical to the per-client accumulation it replaces.
+    # sum is one vectorised reduction. All arithmetic is mod `modulus`
+    # carried in uint64 (modulus divides 2^64 — validated above — so
+    # wraparound preserves the residue), hence this is bit-identical to the
+    # per-client accumulation it replaces.
     vecs = indicators.astype(np.uint64) % modulus
     for i in range(n):
         for j in range(i + 1, n):

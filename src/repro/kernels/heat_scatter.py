@@ -30,12 +30,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_V_BLK = 512
 DEFAULT_T_BLK = 1024
 
 
-def _kernel(ids_ref, rows_ref, heat_ref, out_ref, *, total: float, scale: float,
+def _kernel(params_ref, ids_ref, rows_ref, heat_ref, out_ref, *,
             v_blk: int, t_blk: int, nt: int):
     iv = pl.program_id(0)
     it = pl.program_id(1)
@@ -54,6 +55,8 @@ def _kernel(ids_ref, rows_ref, heat_ref, out_ref, *, total: float, scale: float,
 
     @pl.when(it == nt - 1)
     def _finalize():
+        total = params_ref[0]
+        scale = params_ref[1]
         heat = heat_ref[...].astype(jnp.float32)         # (V_BLK,)
         factor = jnp.where(heat > 0, scale * total / jnp.maximum(heat, 1.0), 0.0)
         out_ref[...] *= factor[:, None]
@@ -72,13 +75,18 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _tpu_compiler_params():
-    """Mosaic params for the compiled path; None when unavailable."""
+def _tpu_compiler_params(semantics=("parallel", "arbitrary")):
+    """Mosaic params for the compiled path; None when unavailable.
+
+    ``semantics`` declares one entry per grid dim. ``heat_scatter``'s vocab
+    axis is safe to split across cores ('parallel': its vocab blocks touch
+    disjoint output rows); a kernel that carries state across a grid dim
+    (e.g. ``union_segsum``'s SMEM union offset) must declare that dim
+    'arbitrary' or Megacore partitioning will corrupt it.
+    """
     try:
-        from jax.experimental.pallas import tpu as pltpu
-        return pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "arbitrary"))
-    except Exception:                                    # pragma: no cover
+        return pltpu.TPUCompilerParams(dimension_semantics=tuple(semantics))
+    except Exception:  # pragma: no cover — jax build without TPUCompilerParams
         return None
 
 
@@ -91,11 +99,14 @@ def rowsparse_scatter(ids, rows, heat, total: float, vocab: int, *,
     (vocab,). Returns ``(vocab, D)`` float32 where row v holds
     ``scale * total / heat[v] * sum_{t: ids[t]=v} rows[t]`` (0 if heat 0).
 
-    ``interpret=None`` selects the real compiled TPU path when running on
-    TPU and the interpreter elsewhere. Neither row count nor vocab need
-    align to the block sizes — rows are padded with ``-1`` ids (free: they
-    match nothing) and the vocab axis is padded with zero-heat rows (which
-    no id targets and the correction zeroes), then sliced off.
+    ``total`` and ``scale`` may be Python floats or traced scalars — they
+    reach the kernel through an SMEM operand, so varying them never
+    retraces or recompiles. ``interpret=None`` selects the real compiled
+    TPU path when running on TPU and the interpreter elsewhere. Neither row
+    count nor vocab need align to the block sizes — rows are padded with
+    ``-1`` ids (free: they match nothing) and the vocab axis is padded with
+    zero-heat rows (which no id targets and the correction zeroes), then
+    sliced off.
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -115,6 +126,8 @@ def rowsparse_scatter(ids, rows, heat, total: float, vocab: int, *,
     if vpad:
         heat = jnp.concatenate([heat, jnp.zeros((vpad,), heat.dtype)])
     nv, nt = vocab_p // v_blk, t // t_blk
+    params = jnp.stack([jnp.asarray(total, jnp.float32),
+                        jnp.asarray(scale, jnp.float32)])
 
     kwargs = {}
     if not interpret:
@@ -122,10 +135,10 @@ def rowsparse_scatter(ids, rows, heat, total: float, vocab: int, *,
         if cp is not None:
             kwargs["compiler_params"] = cp
     return pl.pallas_call(
-        functools.partial(_kernel, total=float(total), scale=float(scale),
-                          v_blk=v_blk, t_blk=t_blk, nt=nt),
+        functools.partial(_kernel, v_blk=v_blk, t_blk=t_blk, nt=nt),
         grid=(nv, nt),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((t_blk,), lambda iv, it: (it,)),
             pl.BlockSpec((t_blk, d), lambda iv, it: (it, 0)),
             pl.BlockSpec((v_blk,), lambda iv, it: (iv,)),
@@ -134,7 +147,7 @@ def rowsparse_scatter(ids, rows, heat, total: float, vocab: int, *,
         out_shape=jax.ShapeDtypeStruct((vocab_p, d), jnp.float32),
         interpret=interpret,
         **kwargs,
-    )(ids, rows, heat)[:vocab]
+    )(params, ids, rows, heat)[:vocab]
 
 
 def heat_scatter(ids, grads, heat, total: float, vocab: int, *,

@@ -20,27 +20,34 @@ from repro.kernels.heat_scatter import rowsparse_scatter as _rowsparse_scatter
 from repro.kernels.union_segsum import union_segsum as _union_segsum
 
 
-@functools.partial(jax.jit, static_argnames=("total", "vocab", "v_blk", "t_blk"))
-def heat_scatter(ids, grads, heat, total: float, vocab: int,
+@functools.partial(jax.jit, static_argnames=("vocab", "v_blk", "t_blk"))
+def heat_scatter(ids, grads, heat, total, vocab: int,
                  v_blk: int = 512, t_blk: int = 1024):
     return _heat_scatter(ids, grads, heat, total, vocab, v_blk=v_blk, t_blk=t_blk,
                          interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("total", "vocab", "scale", "v_blk", "t_blk"))
-def rowsparse_scatter(ids, rows, heat, total: float, vocab: int,
-                      scale: float = 1.0, v_blk: int = 512, t_blk: int = 1024):
-    """Fused cohort row-sparse aggregation + heat correction (see kernel)."""
+@functools.partial(jax.jit, static_argnames=("vocab", "v_blk", "t_blk"))
+def rowsparse_scatter(ids, rows, heat, total, vocab: int,
+                      scale=1.0, v_blk: int = 512, t_blk: int = 1024):
+    """Fused cohort row-sparse aggregation + heat correction (see kernel).
+
+    As with ``union_segsum``, ``total``/``scale`` are traced scalar
+    operands — only the shape parameters are static.
+    """
     return _rowsparse_scatter(ids, rows, heat, total, vocab, scale=scale,
                               v_blk=v_blk, t_blk=t_blk, interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("total", "cap", "num_rows", "scale",
-                                             "v_blk", "t_blk"))
-def union_segsum(ids, rows, heat, total: float, cap: int, num_rows: int,
-                 scale: float = 1.0, v_blk: int = 512, t_blk: int = 512):
-    """Fused union + segment-sum + heat scaling (see kernel module)."""
+@functools.partial(jax.jit, static_argnames=("cap", "num_rows", "v_blk", "t_blk"))
+def union_segsum(ids, rows, heat, total, cap: int, num_rows: int,
+                 scale=1.0, v_blk: int = 512, t_blk: int = 512):
+    """Fused union + segment-sum + heat scaling (see kernel module).
+
+    ``total`` and ``scale`` are traced scalar operands — varying them (e.g.
+    across rounds or in a sweep) hits the same compiled kernel; only the
+    true shape parameters (``cap``, ``num_rows``, blocks) are static.
+    """
     return _union_segsum(ids, rows, heat, total, cap, num_rows, scale=scale,
                          v_blk=v_blk, t_blk=t_blk, interpret=not _on_tpu())
 

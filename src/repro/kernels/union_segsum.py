@@ -54,9 +54,17 @@ DEFAULT_T_BLK = 512
 VMEM_BUDGET = 12 * 1024 * 1024
 
 
-def _kernel(ids_ref, rows_ref, heat_ref, out_ids_ref, out_rows_ref,
-            acc_ref, cnt_ref, carry_ref, *, total: float, scale: float,
-            use_heat: bool, v_blk: int, t_blk: int, nt: int, cap: int):
+#: Grid dimension semantics for the compiled path. BOTH dims are
+#: order-dependent — the SMEM ``carry_ref`` union offset threads across vocab
+#: blocks and the VMEM accumulator across row tiles — so neither may be
+#: declared 'parallel' (Megacore would split it across cores and corrupt the
+#: union). Do not reuse ``heat_scatter``'s default ('parallel', ...) here.
+_DIM_SEMANTICS = ("arbitrary", "arbitrary")
+
+
+def _kernel(params_ref, ids_ref, rows_ref, heat_ref, out_ids_ref, out_rows_ref,
+            acc_ref, cnt_ref, carry_ref, *, use_heat: bool, v_blk: int,
+            t_blk: int, nt: int, cap: int):
     iv = pl.program_id(0)
     it = pl.program_id(1)
 
@@ -86,12 +94,14 @@ def _kernel(ids_ref, rows_ref, heat_ref, out_ids_ref, out_rows_ref,
     @pl.when(it == nt - 1)
     def _emit():
         touched = cnt_ref[...] > 0                         # (v_blk,)
+        total = params_ref[0]
+        scale = params_ref[1]
         if use_heat:
             heat = heat_ref[...].astype(jnp.float32)
             factor = jnp.where(heat > 0,
                                scale * total / jnp.maximum(heat, 1.0), 0.0)
         else:
-            factor = jnp.full((v_blk,), scale, jnp.float32)
+            factor = jnp.broadcast_to(scale, (v_blk,)).astype(jnp.float32)
         scaled = acc_ref[...] * factor[:, None]
         rank = jnp.cumsum(touched.astype(jnp.int32)) - 1   # in-block rank
         n_new = jnp.sum(touched.astype(jnp.int32))
@@ -118,12 +128,34 @@ def _kernel(ids_ref, rows_ref, heat_ref, out_ids_ref, out_rows_ref,
         carry_ref[0] = carry + n_new
 
 
-def fits_vmem(cap: int, row_elems: int, v_blk: int = DEFAULT_V_BLK,
+def _block_sizes(num_rows, t, v_blk: int, t_blk: int):
+    """The (v_blk, t_blk) the kernel actually runs with — the single source
+    of the block adjustments, shared by ``union_segsum`` and ``fits_vmem``
+    so the ``"auto"`` budget guard and the kernel never drift apart."""
+    if num_rows is not None:
+        v_blk = _pick_blk(num_rows, v_blk)
+    if t is not None and t > 0:
+        t_blk = min(t_blk, t)
+    return v_blk, t_blk
+
+
+def fits_vmem(cap: int, row_elems: int, *, num_rows: int | None = None,
+              t: int | None = None, v_blk: int = DEFAULT_V_BLK,
               t_blk: int = DEFAULT_T_BLK, budget: int = VMEM_BUDGET) -> bool:
-    """Whether the kernel's VMEM-resident footprint fits the compiled budget."""
+    """Whether the kernel's VMEM-resident footprint fits the compiled budget.
+
+    Applies the same ``_block_sizes`` adjustments ``union_segsum`` itself
+    makes when ``num_rows`` / ``t`` are given, so the ``"auto"`` guard and
+    the kernel agree near the budget boundary.
+    """
     d = max(int(row_elems), 1)
+    v_blk, t_blk = _block_sizes(num_rows, t, v_blk, t_blk)
     resident = (cap + v_blk) * (d + 1) * 4          # out rows + ids
-    blocks = (2 * t_blk * d + v_blk * d + v_blk * t_blk + v_blk * v_blk) * 4
+    # double-buffered pipeline input blocks (ids, rows, heat), scratch
+    # accumulators (acc, cnt), and the onehot/sel matmul temporaries
+    blocks = (2 * (t_blk + t_blk * d + v_blk)
+              + v_blk * d + v_blk
+              + v_blk * t_blk + v_blk * v_blk) * 4
     return resident + blocks <= budget
 
 
@@ -140,8 +172,10 @@ def union_segsum(ids, rows, heat, total: float, cap: int, num_rows: int, *,
     Ids beyond ``cap`` distinct values are dropped largest-first, matching
     ``unique_ids_padded``.
 
-    ``interpret=None`` selects the compiled TPU path on TPU and the
-    interpreter elsewhere.
+    ``total`` and ``scale`` may be Python floats or traced scalars — they
+    reach the kernel through an SMEM operand, so varying them never
+    retraces or recompiles. ``interpret=None`` selects the compiled TPU
+    path on TPU and the interpreter elsewhere.
     """
     if interpret is None:
         interpret = not on_tpu()
@@ -159,8 +193,7 @@ def union_segsum(ids, rows, heat, total: float, cap: int, num_rows: int, *,
     use_heat = heat is not None
     heat = (jnp.asarray(heat, jnp.float32) if use_heat
             else jnp.zeros((num_rows,), jnp.float32))
-    v_blk = _pick_blk(num_rows, v_blk)
-    t_blk = min(t_blk, t)
+    v_blk, t_blk = _block_sizes(num_rows, t, v_blk, t_blk)
     pad = (-t) % t_blk
     if pad:
         ids = jnp.concatenate([ids, jnp.full((pad,), -1, ids.dtype)])
@@ -175,17 +208,20 @@ def union_segsum(ids, rows, heat, total: float, cap: int, num_rows: int, *,
     nv, nt = v_p // v_blk, t // t_blk
     cap_p = cap + v_blk
 
+    params = jnp.stack([jnp.asarray(total, jnp.float32),
+                        jnp.asarray(scale, jnp.float32)])
+
     kwargs = {}
     if not interpret:
-        cp = _tpu_compiler_params()
+        cp = _tpu_compiler_params(semantics=_DIM_SEMANTICS)
         if cp is not None:
             kwargs["compiler_params"] = cp
     out_ids, out_rows = pl.pallas_call(
-        functools.partial(_kernel, total=float(total), scale=float(scale),
-                          use_heat=use_heat, v_blk=v_blk, t_blk=t_blk,
+        functools.partial(_kernel, use_heat=use_heat, v_blk=v_blk, t_blk=t_blk,
                           nt=nt, cap=cap),
         grid=(nv, nt),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((t_blk,), lambda iv, it: (it,)),
             pl.BlockSpec((t_blk, d), lambda iv, it: (it, 0)),
             pl.BlockSpec((v_blk,), lambda iv, it: (iv,)),
@@ -205,5 +241,5 @@ def union_segsum(ids, rows, heat, total: float, cap: int, num_rows: int, *,
         ],
         interpret=interpret,
         **kwargs,
-    )(ids, rows, heat)
+    )(params, ids, rows, heat)
     return out_ids[:cap, 0], out_rows[:cap].reshape(out_shape)

@@ -40,8 +40,8 @@ def heat_factor_at(heat: Array, ids: Array, total: float,
     form — the dense-broadcast twin is ``heat_correction_factors``.
     """
     h = jnp.take(heat, jnp.maximum(ids, 0))
-    f = jnp.where(h > 0, float(total) / jnp.maximum(h, 1.0), 0.0)
-    return jnp.where(ids >= 0, f * float(scale), 0.0)
+    f = jnp.where(h > 0, total / jnp.maximum(h, 1.0), 0.0)
+    return jnp.where(ids >= 0, f * scale, 0.0)
 
 
 #: dense-bitmap union is O(V) vectorised work and V bits of scratch — the
@@ -51,12 +51,14 @@ _BITMAP_MAX_ROWS = 1 << 22
 
 
 def _resolve_backend(backend: str, num_rows: int, cap: int,
-                     row_elems: int) -> str:
+                     row_elems: int, num_elems: int) -> str:
     """Runtime union-backend selection for ``"auto"``.
 
     On TPU the fused ``union_segsum`` kernel wins whenever its VMEM-resident
     union fits the budget; otherwise (and everywhere on CPU, where the
     interpreter would crawl) the jnp backends split by feature-space size.
+    ``num_rows``/``num_elems`` are forwarded so the budget check uses the
+    same block sizes the kernel will actually pick.
     """
     if backend != "auto":
         return backend
@@ -64,7 +66,8 @@ def _resolve_backend(backend: str, num_rows: int, cap: int,
     from repro.kernels.union_segsum import fits_vmem
     # the kernel's grid scales with V/v_blk, so beyond the bitmap regime the
     # sort backend wins regardless of how small the union is
-    if on_tpu() and num_rows <= _BITMAP_MAX_ROWS and fits_vmem(cap, row_elems):
+    if (on_tpu() and num_rows <= _BITMAP_MAX_ROWS
+            and fits_vmem(cap, row_elems, num_rows=num_rows, t=num_elems)):
         return "pallas"
     return "bitmap" if num_rows <= _BITMAP_MAX_ROWS else "sort"
 
@@ -115,12 +118,14 @@ def aggregate_rowsparse(stacked: RowSparse, heat: Optional[Array] = None,
     row_elems = int(flat_rows.size) // max(k * r, 1)
 
     union_backend = _resolve_backend(union_backend, stacked.num_rows, cap,
-                                     row_elems)
+                                     row_elems, k * r)
     if union_backend == "pallas":
         from repro.kernels import ops
+        # total/scale pass through untouched — the kernel takes them as
+        # traced scalar operands, so they may be tracers (no recompile)
         union, summed = ops.union_segsum(
-            flat_ids, flat_rows, heat, float(total), cap, stacked.num_rows,
-            scale=float(scale))
+            flat_ids, flat_rows, heat, total, cap, stacked.num_rows,
+            scale=scale)
         return RowSparse(union, summed, stacked.num_rows)
 
     union, pos = _union_and_slots(flat_ids, stacked.num_rows, cap, union_backend)
@@ -130,7 +135,7 @@ def aggregate_rowsparse(stacked: RowSparse, heat: Optional[Array] = None,
     if heat is not None:
         factor = heat_factor_at(jnp.asarray(heat), union, total, scale)
     else:
-        factor = jnp.where(union >= 0, float(scale), 0.0)
+        factor = jnp.where(union >= 0, scale, 0.0)
     summed = summed * factor.reshape((cap,) + (1,) * (summed.ndim - 1))
     return RowSparse(union, summed, stacked.num_rows)
 
@@ -152,7 +157,7 @@ def aggregate_rowsparse_dense(stacked: RowSparse, heat: Array, total: float,
         flat_ids = stacked.ids.reshape(-1)
         rows = stacked.rows.reshape(k * r, -1)
         out = ops.rowsparse_scatter(flat_ids, rows, jnp.asarray(heat, jnp.float32),
-                                    float(total), stacked.num_rows, scale=float(scale))
+                                    total, stacked.num_rows, scale=scale)
         return out.reshape((stacked.num_rows,) + tuple(stacked.rows.shape[2:]))
     if backend == "jnp":
         return aggregate_rowsparse(stacked, heat, total, scale).to_dense()

@@ -106,6 +106,24 @@ def test_secure_agg_matches_reference_loop(rng):
     np.testing.assert_array_equal(got, ind.sum(axis=0))
 
 
+def test_secure_agg_rejects_non_pow2_modulus():
+    """Regression: the unreduced uint64 accumulation is only congruent mod a
+    divisor of 2**64 — a non-power-of-two modulus must be rejected rather
+    than return silently wrong sums."""
+    ind = np.ones((3, 5), np.int64)
+    # 1 << 64 is a power of two but not uint64-representable (would raise a
+    # confusing numpy OverflowError deep in the mask arithmetic)
+    for bad in (10, 3, (1 << 32) - 1, 0, -8, 1 << 64):
+        with pytest.raises(ValueError, match="power of two"):
+            estimate_heat_secure_agg(ind, modulus=bad)
+    # a pow2 ring smaller than the client count would wrap the true heat
+    with pytest.raises(ValueError, match="client count"):
+        estimate_heat_secure_agg(ind, modulus=2)
+    # non-default powers of two still recover the exact heat
+    est = estimate_heat_secure_agg(ind, modulus=1 << 20)
+    np.testing.assert_array_equal(est, ind.sum(axis=0))
+
+
 def test_randomized_response_weighted_unbiased():
     """Weighted RR (App. D.4 composed with App. F): unbiased for the
     weighted heat, and reduces to the unweighted estimator at w == 1."""

@@ -262,18 +262,95 @@ def test_union_backend_auto_selection(monkeypatch):
     import importlib
     hs_mod = importlib.import_module("repro.kernels.heat_scatter")
     from repro.sparse import aggregate as agg_mod
-    assert agg_mod._resolve_backend("auto", 1000, 64, 8) in ("bitmap", "sort")
-    assert agg_mod._resolve_backend("pallas", 1000, 64, 8) == "pallas"
+    assert agg_mod._resolve_backend("auto", 1000, 64, 8, 256) in ("bitmap",
+                                                                  "sort")
+    assert agg_mod._resolve_backend("pallas", 1000, 64, 8, 256) == "pallas"
     monkeypatch.setattr(hs_mod, "on_tpu", lambda: True)
-    assert agg_mod._resolve_backend("auto", 1000, 64, 8) == "pallas"
+    assert agg_mod._resolve_backend("auto", 1000, 64, 8, 256) == "pallas"
     # beyond the VMEM budget auto falls back to the jnp backends
-    assert agg_mod._resolve_backend("auto", 1 << 23, 1 << 22, 64) == "sort"
+    assert agg_mod._resolve_backend(
+        "auto", 1 << 23, 1 << 22, 64, 1 << 22) == "sort"
     # huge feature spaces never auto-select the kernel (grid scales with V),
     # even when the union itself would fit VMEM
-    assert agg_mod._resolve_backend("auto", (1 << 22) + 1, 64, 8) == "sort"
+    assert agg_mod._resolve_backend(
+        "auto", (1 << 22) + 1, 64, 8, 256) == "sort"
     # the kernel wrapper keys interpret mode off the same runtime check
     us_mod = importlib.import_module("repro.kernels.union_segsum")
     assert us_mod.fits_vmem(64, 8) and not us_mod.fits_vmem(1 << 22, 64)
+
+
+def test_fits_vmem_uses_actual_block_sizes():
+    """Regression: the budget guard mirrors the kernel's own block
+    adjustments (pow2-shrunk ``v_blk``, ``t_blk`` clamped to the element
+    count), so a small cohort/feature space can fit the budget where the
+    default-block estimate would refuse it."""
+    from repro.kernels.union_segsum import _pick_blk, fits_vmem
+    cap, d = 1024, 1024
+    assert not fits_vmem(cap, d)                      # default 512-blocks
+    assert fits_vmem(cap, d, num_rows=64, t=64)       # kernel-shrunk blocks
+    # the adjustment matches the kernel's: _pick_blk on v, min-clamp on t
+    assert _pick_blk(64, 512) == 64
+
+
+def test_union_segsum_grid_dims_sequential(monkeypatch):
+    """Regression: both grid dims of union_segsum are order-dependent (the
+    SMEM union-offset carry threads across vocab blocks), so the compiled
+    path must never declare a 'parallel' dim — reusing heat_scatter's
+    vocab-parallel default would corrupt the union on Megacore TPUs."""
+    import importlib
+    hs_mod = importlib.import_module("repro.kernels.heat_scatter")
+    us_mod = importlib.import_module("repro.kernels.union_segsum")
+    assert us_mod._DIM_SEMANTICS == ("arbitrary", "arbitrary")
+    cp = hs_mod._tpu_compiler_params(semantics=us_mod._DIM_SEMANTICS)
+    if cp is not None:
+        assert "parallel" not in tuple(cp.dimension_semantics)
+    # heat_scatter's own default (independent vocab blocks) is unchanged
+    cp_hs = hs_mod._tpu_compiler_params()
+    if cp_hs is not None:
+        assert tuple(cp_hs.dimension_semantics) == ("parallel", "arbitrary")
+
+    # and the compiled path actually requests those semantics: capture what
+    # union_segsum hands to _tpu_compiler_params on interpret=False (the
+    # kernel itself still executes via the interpreter on CPU)
+    seen = {}
+
+    def fake_params(semantics=("parallel", "arbitrary")):
+        seen["semantics"] = tuple(semantics)
+        return None
+
+    real_call = us_mod.pl.pallas_call
+
+    def interpreted_call(*args, **kw):
+        seen["interpret"] = kw.get("interpret")
+        kw["interpret"] = True
+        return real_call(*args, **kw)
+
+    monkeypatch.setattr(us_mod, "_tpu_compiler_params", fake_params)
+    monkeypatch.setattr(us_mod.pl, "pallas_call", interpreted_call)
+    ids = jnp.asarray([[0, 2, -1]], jnp.int32)
+    rows = jnp.ones((1, 3, 4), jnp.float32)
+    u, _ = us_mod.union_segsum(ids, rows, None, 4.0, 4, 8, interpret=False)
+    assert seen["interpret"] is False
+    assert seen["semantics"] == us_mod._DIM_SEMANTICS
+    assert sorted(np.asarray(u)[np.asarray(u) >= 0].tolist()) == [0, 2]
+
+
+def test_union_segsum_scalar_params_do_not_retrace(rng):
+    """total/scale are traced scalar operands of the jitted kernel wrapper:
+    sweeping them hits one compiled program (no per-value retrace) while
+    still scaling the output."""
+    from repro.kernels import ops
+    v, d = 32, 4
+    ids = jnp.asarray([[1, 5, 9, -1]], jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(1, 4, d)), jnp.float32)
+    heat = jnp.ones((v,), jnp.float32)
+    before = ops.union_segsum._cache_size()
+    outs = [ops.union_segsum(ids, rows, heat, total, 8, v, scale=scale)
+            for total, scale in ((2.0, 1.0), (4.0, 1.0), (4.0, 0.5))]
+    assert ops.union_segsum._cache_size() - before <= 1
+    r0, r1, r2 = (np.asarray(r) for _, r in outs)
+    np.testing.assert_allclose(r1, 2 * r0, rtol=1e-6)
+    np.testing.assert_allclose(r2, r0, rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
