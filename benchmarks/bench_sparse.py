@@ -17,6 +17,11 @@ Three sections, all emitted to the CSV stream and to
    ``run_rounds(n)`` scan on a real ``FederatedTrainer`` (LSTM over a
    sent140-like corpus), wall-clock per round after warmup.
 
+4. replicated local training: dense per-client replicas
+   (``sparse_local="replicated"``, the K*V*D memory wall) vs gathered
+   submodel replicas (``"sparse_replicated"``, K*capacity*D) — time per
+   round and the analytic replica-memory curve at V in {65k, 262k}.
+
 ``REPRO_BENCH_SMOKE=1`` shrinks every section to seconds of runtime (tiny V,
 2 rounds, interpret-mode kernel) — the CI smoke job runs that on every PR so
 the pallas backend and the scan engine stay exercised.
@@ -181,6 +186,56 @@ def _bench_engine(out, records):
                         speedup=us_loop / us_scan))
 
 
+def _bench_replicated(out, records):
+    """Section 4: dense-replica vs gathered-submodel local training."""
+    if SMOKE:
+        shapes = ((512,),)
+        clients, kpr, n_rounds, mean_samples, emb = 16, 4, 2, 8, 8
+    else:
+        shapes = ((65_536,), (262_144,))
+        clients, kpr, n_rounds, mean_samples, emb = 32, 8, 4, 25, 16
+    for (vocab,) in shapes:
+        ds = make_sent140_like(num_clients=clients, vocab=vocab,
+                               mean_samples=mean_samples, seq_len=24)
+
+        def make_trainer(local_mode):
+            cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=kpr,
+                            local_iters=2, local_batch=4, lr=0.3,
+                            algorithm="fedsubavg", sparse=True,
+                            sparse_local=local_mode)
+            return FederatedTrainer(
+                ds, functools.partial(make_lstm_params, ds.num_features,
+                                      emb_dim=emb, hidden=32, layers=1),
+                lstm_loss, cfg)
+
+        row = dict(section="replicated", v=vocab, k=kpr, d=emb,
+                   rounds=n_rounds)
+        for local_mode in ("replicated", "sparse_replicated"):
+            tr = make_trainer(local_mode)
+            tr.run_round()                               # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(n_rounds):
+                tr.run_round()
+            us = (time.perf_counter() - t0) / n_rounds * 1e6
+            # replica HBM for the feature table: K*V*D dense vs K*cap*D
+            rows_per_client = (min(tr._last_capacity, ds.num_features)
+                               if local_mode == "sparse_replicated"
+                               else ds.num_features)
+            replica_bytes = kpr * rows_per_client * emb * 4
+            row[f"us_{local_mode}"] = us
+            row[f"replica_bytes_{local_mode}"] = replica_bytes
+            out.append((f"sparse/local_{local_mode}", us,
+                        f"V={vocab};K={kpr};D={emb};I=2;"
+                        f"replica_bytes={replica_bytes:.0f}"))
+        row["speedup"] = row["us_replicated"] / row["us_sparse_replicated"]
+        row["mem_ratio"] = (row["replica_bytes_replicated"]
+                            / row["replica_bytes_sparse_replicated"])
+        out.append(("sparse/local_mode_win", row["speedup"],
+                    f"V={vocab};mem_ratio={row['mem_ratio']:.1f}x;"
+                    f"speedup={row['speedup']:.2f}x"))
+        records.append(row)
+
+
 def run():
     out = []
     records = []
@@ -191,6 +246,7 @@ def run():
     _bench_dense_vs_sparse(rng, out, records)
     _bench_union_backends(rng, out, records)
     _bench_engine(out, records)
+    _bench_replicated(out, records)
 
     # Pallas kernel (dense-output TPU path) at a kernel-friendly shape
     k, d, total = (4, 8, 100.0) if SMOKE else (16, 64, 100.0)

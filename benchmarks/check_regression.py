@@ -1,0 +1,126 @@
+"""Bench-smoke regression gate: fresh BENCH_sparse_engine.json vs baseline.
+
+Compares the union-backend and in-jit-engine sections of a fresh smoke-mode
+``bench_sparse`` run against the committed baseline
+(``benchmarks/BENCH_baseline_smoke.json``) and fails on a >25% regression.
+
+Hermeticity: raw microseconds are machine-speed-dependent (a CI runner is not
+the machine the baseline was recorded on), so the gate compares
+*within-run relative* metrics only — quantities in which the host's absolute
+speed cancels:
+
+- union_backends: each backend's time normalised by the SAME record's
+  ``us_sort`` (the jnp sort backend is the in-run reference). A code change
+  that slows the bitmap or pallas path shows up as a ratio regression no
+  matter how fast the runner is. Proxy-shape records (off-TPU pallas runs
+  without an in-run reference) are skipped.
+- engine: the host-loop / in-jit ``speedup`` column. The in-jit scan losing
+  ground against the per-round loop is a regression regardless of runner.
+
+Both runs must use the same smoke shapes (``REPRO_BENCH_SMOKE=1``); records
+are matched on their shape keys and a missing match fails the gate.
+
+Usage:
+    python -m benchmarks.check_regression BENCH_sparse_engine.json \
+        [--baseline benchmarks/BENCH_baseline_smoke.json] [--threshold 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_UNION_KEY = ("v", "density", "k", "d")
+_ENGINE_KEY = ("v", "k", "rounds")
+
+
+def _index(records, section, key_fields):
+    out = {}
+    for r in records:
+        if r.get("section") != section or r.get("proxy"):
+            continue
+        out[tuple(r.get(f) for f in key_fields)] = r
+    return out
+
+
+def _union_ratios(rec):
+    """Per-backend time relative to the in-run sort reference."""
+    ref = rec.get("us_sort")
+    if not ref:
+        return {}
+    return {k: rec[k] / ref for k in rec
+            if k.startswith("us_") and k != "us_sort"}
+
+
+def check(fresh: dict, baseline: dict, threshold: float):
+    failures = []
+
+    fresh_u = _index(fresh.get("records", []), "union_backends", _UNION_KEY)
+    base_u = _index(baseline.get("records", []), "union_backends", _UNION_KEY)
+    if not fresh_u:
+        failures.append("fresh run has no union_backends records")
+    for key, brec in base_u.items():
+        frec = fresh_u.get(key)
+        if frec is None:
+            failures.append(f"union_backends record missing from fresh run: {key}")
+            continue
+        bratios, fratios = _union_ratios(brec), _union_ratios(frec)
+        for name, bval in bratios.items():
+            fval = fratios.get(name)
+            if fval is None:
+                failures.append(f"union_backends {key}: fresh run lacks {name}")
+            elif fval > bval * (1.0 + threshold):
+                failures.append(
+                    f"union_backends {key} {name}/us_sort regressed "
+                    f"{bval:.3f} -> {fval:.3f} (>{threshold:.0%})")
+
+    fresh_e = _index(fresh.get("records", []), "engine", _ENGINE_KEY)
+    base_e = _index(baseline.get("records", []), "engine", _ENGINE_KEY)
+    if not fresh_e:
+        failures.append("fresh run has no engine records")
+    for key, brec in base_e.items():
+        frec = fresh_e.get(key)
+        if frec is None:
+            failures.append(f"engine record missing from fresh run: {key}")
+            continue
+        bsp, fsp = brec.get("speedup"), frec.get("speedup")
+        if bsp and not fsp:
+            # a missing/zero speedup must fail loudly, same as the union
+            # section — a silently skipped comparison is exactly the
+            # regression class this gate exists to catch
+            failures.append(f"engine {key}: fresh run lacks a usable speedup "
+                            f"(got {fsp!r})")
+        elif bsp and fsp < bsp / (1.0 + threshold):
+            failures.append(
+                f"engine {key} in-jit speedup regressed "
+                f"{bsp:.2f}x -> {fsp:.2f}x (>{threshold:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="path to the freshly generated bench JSON")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline_smoke.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed relative regression (0.25 = 25%%)")
+    args = ap.parse_args(argv)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if fresh.get("smoke") != baseline.get("smoke"):
+        print(f"smoke-mode mismatch: fresh={fresh.get('smoke')} "
+              f"baseline={baseline.get('smoke')}", file=sys.stderr)
+        return 1
+    failures = check(fresh, baseline, args.threshold)
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print("bench-smoke regression gate: OK "
+          f"(threshold {args.threshold:.0%}, baseline {args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -192,6 +192,15 @@ class FedConfig:
     sparse: bool = False             # row-sparse client deltas + sparse server agg
     sparse_topk: int = 0             # >0: per-client top-k row sparsification
     sparse_int8: bool = False        # int8 row payloads (unbiased stochastic round)
+    # how sparse local training replicates the model across the cohort:
+    #   "sparse_replicated"  each client's replica is its gathered submodel
+    #                        (K * capacity * D feature-table HBM; the paper's
+    #                        download-a-submodel protocol)
+    #   "replicated"         K full dense replicas + post-hoc row-sparse encode
+    #   "auto"               sparse_replicated whenever the model has axis-0
+    #                        feature tables spanning the dataset's id space,
+    #                        dense replicas otherwise
+    sparse_local: str = "auto"
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,8 @@
-from repro.federated.client import make_local_trainer  # noqa: F401
+from repro.federated.client import (  # noqa: F401
+    cohort_submodel_deltas,
+    make_local_trainer,
+    make_submodel_local_trainer,
+)
 from repro.federated.metrics import comm_summary  # noqa: F401
 from repro.federated.server import (  # noqa: F401
     FederatedTrainer,

@@ -12,7 +12,7 @@ Algorithm hooks:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +20,33 @@ from jax import lax
 
 from repro.common.pytree import tree_add, tree_dot, tree_scale, tree_sub
 from repro.configs.base import FedConfig
+from repro.sharding.logical import is_param
+from repro.sparse.encode import (gather_submodel_tree, remap_feature_batch,
+                                 submodel_delta_tree, tree_leaf_at)
+
+
+def _local_sgd_delta(loss_fn: Callable, cfg: FedConfig, params0, batches):
+    """I steps of mini-batch SGD from ``params0``; returns the delta.
+
+    The single local-training loop both replica layouts share: ``params0``
+    is the downloaded model — full dense parameters or a gathered submodel —
+    and also the FedProx prox anchor. ``batches`` leaves are (I, B, ...).
+    """
+    prox = cfg.prox_mu if cfg.algorithm == "fedprox" else 0.0
+
+    def objective(p, batch):
+        l = loss_fn(p, batch)
+        if prox > 0.0:
+            diff = tree_sub(p, params0)
+            l = l + 0.5 * prox * tree_dot(diff, diff)
+        return l
+
+    def step(p, batch):
+        g = jax.grad(objective)(p, batch)
+        return tree_add(p, tree_scale(g, -cfg.lr)), None
+
+    p_final, _ = lax.scan(step, params0, batches)
+    return tree_sub(p_final, params0)
 
 
 def make_local_trainer(loss_fn: Callable, cfg: FedConfig) -> Callable:
@@ -27,22 +54,9 @@ def make_local_trainer(loss_fn: Callable, cfg: FedConfig) -> Callable:
 
     ``client_batches`` leaves are (I, B, ...): the client's I minibatches.
     """
-    prox = cfg.prox_mu if cfg.algorithm == "fedprox" else 0.0
 
     def local_train(global_params, client_batches):
-        def objective(p, batch):
-            l = loss_fn(p, batch)
-            if prox > 0.0:
-                diff = tree_sub(p, global_params)
-                l = l + 0.5 * prox * tree_dot(diff, diff)
-            return l
-
-        def step(p, batch):
-            g = jax.grad(objective)(p, batch)
-            return tree_add(p, tree_scale(g, -cfg.lr)), None
-
-        p_final, _ = lax.scan(step, global_params, client_batches)
-        return tree_sub(p_final, global_params)
+        return _local_sgd_delta(loss_fn, cfg, global_params, client_batches)
 
     return local_train
 
@@ -50,3 +64,51 @@ def make_local_trainer(loss_fn: Callable, cfg: FedConfig) -> Callable:
 def cohort_deltas(local_train: Callable, global_params, cohort_batches):
     """vmap local training over the cohort; leaves (K, I, B, ...) -> (K, ...)."""
     return jax.vmap(local_train, in_axes=(None, 0))(global_params, cohort_batches)
+
+
+def make_submodel_local_trainer(loss_fn: Callable, cfg: FedConfig,
+                                table_paths: Sequence[Sequence],
+                                feature_keys: Sequence[str]) -> Callable:
+    """Returns local_train(global_params, client_batches, sub_ids) -> delta.
+
+    The paper's protocol made literal: a client's replica is its *submodel*
+    only. Each feature-keyed table at ``table_paths`` is gathered at the
+    client's ``sub_ids`` into a ``(capacity, ...)`` row table, every
+    ``client_batches[k]`` for k in ``feature_keys`` is remapped to row slots,
+    and the I local SGD steps run on the gathered rows plus the dense leaves
+    — replica HBM is O(capacity * D) per feature table, never O(V * D). The
+    delta comes back with ``RowSparse`` leaves at the table paths, already in
+    wire format for the sparse server plane (no post-hoc encode).
+
+    Exact vs dense-replica local training whenever the model consumes the
+    tables only through lookups by those feature keys (the paper's §3.1
+    observation: the local gradient outside S(i) is always zero, so rows
+    outside ``sub_ids`` never move). FedProx stays exact too: untouched rows
+    keep ``p == x_global`` for the whole local run, so their prox gradient is
+    identically zero.
+    """
+
+    def local_train(global_params, client_batches, sub_ids):
+        num_rows = []
+        for path in table_paths:
+            leaf = tree_leaf_at(global_params, path)
+            num_rows.append((leaf.value if is_param(leaf) else leaf).shape[0])
+        sub_params = gather_submodel_tree(global_params, table_paths, sub_ids)
+        batches = remap_feature_batch(client_batches, feature_keys, sub_ids)
+        delta = _local_sgd_delta(loss_fn, cfg, sub_params, batches)
+        return submodel_delta_tree(delta, table_paths, sub_ids, num_rows)
+
+    return local_train
+
+
+def cohort_submodel_deltas(local_train: Callable, global_params,
+                           cohort_batches, sub_ids):
+    """vmap submodel local training over the cohort.
+
+    ``sub_ids``: (K, capacity) per-client submodel ids. Returns the per-client
+    update stack with RowSparse leaves (ids (K, R), rows (K, R, ...)) at the
+    feature-table paths and dense (K, ...) leaves elsewhere — exactly the
+    input ``sparse_cohort_aggregate`` consumes.
+    """
+    return jax.vmap(local_train, in_axes=(None, 0, 0))(
+        global_params, cohort_batches, sub_ids)

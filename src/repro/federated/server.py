@@ -24,13 +24,16 @@ from repro.core.algorithms import ServerState, make_server_algorithm
 from repro.core.heat import HeatStats, estimate_heat_randomized_response
 from repro.data.batching import pooled_batches, sample_cohort_batch
 from repro.data.synthetic import FederatedDataset
-from repro.federated.client import cohort_deltas, make_local_trainer
+from repro.federated.client import (cohort_deltas, cohort_submodel_deltas,
+                                    make_local_trainer,
+                                    make_submodel_local_trainer)
 from repro.federated.metrics import accuracy, auc
 from repro.federated.simulation import heat_spec_from_axes, sparse_table_paths
 from repro.sharding.logical import boxed_like, unbox
 from repro.sparse.aggregate import apply_rowsparse, sparse_cohort_aggregate
 from repro.sparse.comm import CommStats, round_comm_stats
-from repro.sparse.compress import dequantize_rows, quantize_rows_int8, topk_rows
+from repro.sparse.compress import (QuantRows, dequantize_rows,
+                                   quantize_tree_int8, topk_rows)
 from repro.sparse.encode import decode_delta_tree, encode_delta_tree
 from repro.sparse.rowsparse import is_rowsparse
 
@@ -140,6 +143,7 @@ class FederatedTrainer:
             # jit caches one trace per sub_ids capacity (kept to O(log V)
             # variants by pow2_capacity bucketing); ServerState buffers are
             # donated through the step so the table is updated in place
+            self._prepare_sparse_plane(params)
             round_step = self._make_sparse_round_step()
             self._sparse_step = jax.jit(round_step, donate_argnums=(0,))
 
@@ -150,12 +154,12 @@ class FederatedTrainer:
                                     (cohorts, sub_ids))
 
             self._sparse_engine = jax.jit(engine, donate_argnums=(0,))
-            self._prepare_sparse_plane(params)
         else:
             self._round_step = jax.jit(self._make_round_step())
         self.history: List[RoundRecord] = []
         self.comm_log: List[CommStats] = []
         self._rounds_run = 0
+        self._last_capacity: Optional[int] = None   # last sparse sub-id bucket
 
     # ------------------------------------------------------------------
     def _resolve_heat(self, ds: FederatedDataset, cfg: FedConfig) -> HeatStats:
@@ -215,17 +219,20 @@ class FederatedTrainer:
     # sparse submodel update plane (repro.sparse)
     # ------------------------------------------------------------------
     def _prepare_sparse_plane(self, params):
-        """Precompute static metadata for the row-sparse round path."""
+        """Precompute static metadata and resolve the sparse local mode."""
         plain = unbox(params)
-        sparse_paths = {p for p, _ in sparse_table_paths(self._heat_spec)}
+        ordered_paths = [p for p, _ in sparse_table_paths(self._heat_spec)]
+        sparse_paths = set(ordered_paths)
         dense_bytes = sparse_static = row_payload = 0.0
         row_elems = 0
+        table_rows = []
         for path, leaf in jax.tree_util.tree_flatten_with_path(plain)[0]:
             nbytes = float(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
             dense_bytes += nbytes
             if tree_path_keys(path) in sparse_paths:
                 row_payload += nbytes / leaf.shape[0]
                 row_elems += int(np.prod(leaf.shape)) // leaf.shape[0]
+                table_rows.append(int(leaf.shape[0]))
             else:
                 sparse_static += nbytes
         self._comm_meta = (dense_bytes, sparse_static, row_payload, row_elems)
@@ -233,18 +240,45 @@ class FederatedTrainer:
         if self.ds.feature_key == "hist" and "target" in self.ds.client_data:
             keys.append("target")
         self._feature_batch_keys = keys
+        self._sparse_paths = ordered_paths
+        # local-training replica layout: gathered submodel replicas need every
+        # feature table keyed by the dataset's id space (sub_ids index rows)
+        gatherable = (bool(ordered_paths)
+                      and all(r == self.ds.num_features for r in table_rows))
+        mode = self.cfg.sparse_local
+        if mode not in ("auto", "replicated", "sparse_replicated"):
+            raise ValueError(f"unknown sparse_local mode: {mode!r}")
+        if mode == "auto":
+            mode = "sparse_replicated" if gatherable else "replicated"
+        elif mode == "sparse_replicated" and not gatherable:
+            raise ValueError(
+                "sparse_local='sparse_replicated' needs axis-0 feature tables "
+                f"of {self.ds.num_features} rows; found {table_rows}")
+        self._sparse_local = mode
 
     def _make_sparse_round_step(self):
         cfg = self.cfg
-        local_train = make_local_trainer(self.loss_fn, cfg)
         correct = cfg.algorithm == "fedsubavg"
         sparse_apply = cfg.algorithm in ("fedavg", "fedprox", "fedsubavg")
         eta = cfg.server_lr
         base_key = jax.random.PRNGKey(cfg.seed + 17)
+        submodel = self._sparse_local == "sparse_replicated"
+        if submodel:
+            local_train = make_submodel_local_trainer(
+                self.loss_fn, cfg, self._sparse_paths,
+                self._feature_batch_keys)
+        else:
+            local_train = make_local_trainer(self.loss_fn, cfg)
 
         def round_step(state: ServerState, cohort_batch, sub_ids):
-            deltas = cohort_deltas(local_train, state.params, cohort_batch)
-            enc = encode_delta_tree(deltas, self._heat_spec, sub_ids)
+            if submodel:
+                # each client trains its gathered submodel; deltas are born
+                # RowSparse on sub_ids — no dense (K, V, D) stack, no encode
+                enc = cohort_submodel_deltas(local_train, state.params,
+                                             cohort_batch, sub_ids)
+            else:
+                deltas = cohort_deltas(local_train, state.params, cohort_batch)
+                enc = encode_delta_tree(deltas, self._heat_spec, sub_ids)
             if cfg.sparse_topk:
                 enc = jax.tree.map(
                     lambda l: jax.vmap(lambda rs: topk_rows(rs, cfg.sparse_topk))(l)
@@ -252,8 +286,10 @@ class FederatedTrainer:
             if cfg.sparse_int8:
                 key = jax.random.fold_in(base_key, state.rounds)
                 enc = jax.tree.map(
-                    lambda l: dequantize_rows(quantize_rows_int8(l, key))
-                    if is_rowsparse(l) else l, enc, is_leaf=is_rowsparse)
+                    lambda l: dequantize_rows(l)
+                    if isinstance(l, QuantRows) else l,
+                    quantize_tree_int8(enc, key),
+                    is_leaf=lambda x: isinstance(x, QuantRows))
             agg = sparse_cohort_aggregate(
                 enc, self._heat_spec, self._heat_counts, self.heat.total,
                 cfg.clients_per_round, correct=correct)
@@ -298,21 +334,34 @@ class FederatedTrainer:
                                 for k in self._feature_batch_keys], axis=1)
         return cohort, feats
 
-    def _log_sparse_comm(self, valid_counts: np.ndarray):
+    def _log_sparse_comm(self, valid_counts: np.ndarray, capacity: int):
         """Comm accounting for one sparse round from per-client sub-id counts.
 
-        Uplink: top-k keeps exactly min(k, valid) delta rows per client;
-        downlink (the submodel download) and density stay at the full
-        per-client feature counts.
+        Uplink: top-k keeps exactly min(k, valid) delta rows per client.
+        Downlink prices what the execution actually ships: in
+        ``sparse_replicated`` mode each client receives its gathered
+        ``capacity``-row submodel buffer (clamped to the table size — the
+        pow2 bucket may exceed V, but the padding slots past the table are
+        never materialised on the wire); in dense-replica mode each client
+        receives the full feature table. The dense baseline carries the
+        ``local_iters`` factor (the I=1 dense protocol re-ships the model
+        every local step).
         """
         cfg = self.cfg
+        k = len(valid_counts)
         up_counts = (np.minimum(valid_counts, cfg.sparse_topk)
                      if cfg.sparse_topk else valid_counts)
+        down_counts = np.full(
+            k, min(capacity, self.ds.num_features)
+            if self._sparse_local == "sparse_replicated"
+            else self.ds.num_features)
         dense_bytes, sparse_static, row_payload, row_elems = self._comm_meta
         self.comm_log.append(round_comm_stats(
             self._rounds_run, dense_bytes, sparse_static, row_payload,
             valid_counts, self.ds.num_features, int8=cfg.sparse_int8,
-            row_elems=row_elems, uplink_rows_per_client=up_counts))
+            row_elems=row_elems, uplink_rows_per_client=up_counts,
+            downlink_rows_per_client=down_counts,
+            local_iters=cfg.local_iters))
 
     def _run_sparse_round(self) -> float:
         cohort, feats = self._sample_sparse_cohort()
@@ -323,7 +372,8 @@ class FederatedTrainer:
         sub_ids = derive_sub_ids(feats, self.ds.num_features, capacity)
         cohort = {k: jnp.asarray(v) for k, v in cohort.items()}
         self.state, loss = self._sparse_step(self.state, cohort, sub_ids)
-        self._log_sparse_comm(valid_counts)
+        self._last_capacity = capacity
+        self._log_sparse_comm(valid_counts, capacity)
         return float(loss)
 
     def run_rounds(self, n: int) -> List[float]:
@@ -336,6 +386,12 @@ class FederatedTrainer:
         donated ``ServerState`` through all rounds, so per-round dispatch and
         host work amortise to ~zero. Falls back to the per-round loop for
         non-sparse configurations. Returns the per-round monitoring losses.
+
+        One honest accounting difference vs the loop: the engine buckets ALL
+        ``n`` rounds to one shared sub-id capacity, so in sparse_replicated
+        mode the priced submodel download per round reflects that shared
+        buffer, where the per-round loop prices each round's own (possibly
+        smaller) bucket. Losses/params/uplink are identical either way.
         """
         if n <= 0:
             return []
@@ -358,9 +414,10 @@ class FederatedTrainer:
                                  capacity).reshape(n, k, capacity)
         self.state, losses = self._sparse_engine(self.state, stacked, sub_ids)
         losses = np.asarray(losses)
+        self._last_capacity = capacity
         for r in range(n):
             self._rounds_run += 1
-            self._log_sparse_comm(valid_counts[r])
+            self._log_sparse_comm(valid_counts[r], capacity)
         return [float(l) for l in losses]
 
     def _make_central_step(self):
@@ -425,6 +482,10 @@ class FederatedTrainer:
         ``run_rounds`` (the in-jit multi-round scan) instead of one
         ``run_round`` dispatch per round; results are identical to f32
         tolerance. Per-round wall time lands in ``RoundRecord.wall_time``.
+
+        ``RoundRecord.round`` numbers continue from the trainer's global
+        round counter, so repeated ``run()`` calls (or mixing ``run_round``
+        with ``run``) append monotone history instead of colliding with it.
         """
         done = 0
         while done < rounds:
@@ -439,7 +500,7 @@ class FederatedTrainer:
             done += chunk
             if done % eval_every == 0 or done == rounds:
                 metric = self.evaluate()
-                rec = RoundRecord(done, self.train_loss(), metric,
+                rec = RoundRecord(self._rounds_run, self.train_loss(), metric,
                                   wall_time=wall)
                 if self.comm_log:
                     s = self.comm_summary()
@@ -448,7 +509,7 @@ class FederatedTrainer:
                     rec.density = s["mean_density"]
                 self.history.append(rec)
                 if verbose:
-                    print(f"[{self.cfg.algorithm}] round {done}: "
+                    print(f"[{self.cfg.algorithm}] round {self._rounds_run}: "
                           f"loss={self.history[-1].train_loss:.4f} "
                           f"{self.metric}={metric:.4f} "
                           f"({wall * 1e3:.1f} ms/round)")

@@ -1,7 +1,7 @@
 """Pod-scale federated simulation: the jitted round step the dry-run lowers.
 
 At LLM scale a cohort client's local data is one (or a few) sequences and the
-cohort is sharded across the ``data`` mesh axis. Two modes:
+cohort is sharded across the ``data`` mesh axis. Four modes:
 
 ``fedsgd`` (default for the big architectures): I = 1 local step, so the
     cohort-mean delta equals ``-lr * grad`` of the cohort-mean loss — no
@@ -13,6 +13,14 @@ cohort is sharded across the ``data`` mesh axis. Two modes:
     models that fit K replicas (the paper's own models, or ~100M LMs in the
     examples); the dry-run uses fedsgd. This memory wall is real in
     production too — documented in DESIGN.md.
+
+``sparse``: fedsgd semantics on the row-sparse update plane — the feature
+    table's dense gradient never exists (gather-before-backward).
+
+``sparse_replicated``: the paper's actual protocol — I>1 local SGD where
+    each client's replica is its *submodel* only (gathered ``(capacity, D)``
+    feature rows + dense leaves), deltas emitted RowSparse. Breaks the
+    ``replicated`` memory wall: K * capacity * D instead of K * V * D.
 
 The FedSubAvg correction consults the boxed parameters' logical axes: any
 leaf with a "vocab" axis is feature-keyed by token id; any "experts" axis is
@@ -28,12 +36,16 @@ import jax.numpy as jnp
 from repro.common.pytree import tree_add, tree_path_keys, tree_scale
 from repro.configs.base import FedConfig
 from repro.core.aggregate import HeatSpec, correct_dense_leaf, correct_update_tree
-from repro.federated.client import cohort_deltas, make_local_trainer
+from repro.federated.client import (cohort_deltas, cohort_submodel_deltas,
+                                    make_local_trainer,
+                                    make_submodel_local_trainer)
 from repro.sharding.logical import axes_tree, boxed_like, unbox
-from repro.sparse.aggregate import heat_factor_at
+from repro.sparse.aggregate import (apply_rowsparse, heat_factor_at,
+                                    sparse_cohort_aggregate)
 from repro.sparse.encode import (DEFAULT_SPARSE_SPACES, batch_union_ids,
-                                 sparse_eligible, submodel_value_and_grad)
-from repro.sparse.rowsparse import is_rowsparse
+                                 sparse_eligible, submodel_value_and_grad,
+                                 tree_leaf_at)
+from repro.sparse.rowsparse import is_rowsparse, unique_ids_padded
 
 
 def heat_spec_from_axes(boxed_params,
@@ -183,10 +195,7 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
                 f"found {len(paths)}: {[p for p, _ in paths]}")
         n_total = float(cfg.num_clients)
         plain_template = unbox(boxed_params_template)
-        node = plain_template
-        for k in paths[0][0]:
-            node = node[k]
-        vocab = int(node.shape[0])
+        vocab = int(tree_leaf_at(plain_template, paths[0][0]).shape[0])
 
         def round_step(params, batch):
             heat = {k: v for k, v in batch.items() if k.startswith("heat_")}
@@ -246,6 +255,70 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
             first = jax.tree.map(lambda x: x[:, 0], data)
             loss = jax.vmap(lambda b: loss_fn(params, b))(first).mean()
             return new, {"loss": loss}
+
+        return round_step
+
+    if mode == "sparse_replicated":
+        # replicated (true I>1 local SGD) on per-client SUBMODEL replicas:
+        # each client's replica holds the gathered (capacity, D) rows of the
+        # feature tables at its own batch ids plus the dense leaves, so the
+        # cohort costs K * capacity * D of feature-table HBM instead of the
+        # K * V * D dense-replica wall. Deltas come out RowSparse and feed
+        # aggregate_rowsparse directly — the dense (K, V, D) stack and the
+        # dense (V, D) mean never exist. Math matches mode="replicated" to
+        # f32 tolerance for lookup-table models (tested).
+        paths = sparse_table_paths(heat_spec)
+        if not paths:
+            raise ValueError(
+                "sparse_replicated needs at least one axis-0 feature table")
+        plain_template = unbox(boxed_params_template)
+        vocabs = {int(tree_leaf_at(plain_template, p).shape[0])
+                  for p, _ in paths}
+        if len(vocabs) != 1:
+            # one shared feature-id space is what lets a single per-client
+            # sub_ids vector cover every table's gradient support
+            raise ValueError(
+                f"sparse_replicated feature tables disagree on vocab: {vocabs}")
+        vocab = vocabs.pop()
+        n_total = float(cfg.num_clients)
+        table_paths = [p for p, _ in paths]
+        local_train = make_submodel_local_trainer(loss_fn, cfg, table_paths,
+                                                  (feature_key,))
+
+        def round_step(params, batch):
+            heat = {k: v for k, v in batch.items() if k.startswith("heat_")}
+            data = {k: v for k, v in batch.items() if not k.startswith("heat_")}
+            tokens = data[feature_key]                       # (K, I, B, ...)
+            if "labels" not in data and tokens.ndim == 4:
+                # pin CE targets to the ORIGINAL token ids before the
+                # submodel gather remaps them to row slots (same rule as
+                # mode="sparse")
+                data = {**data, "labels": jnp.pad(
+                    tokens[..., 1:], ((0, 0), (0, 0), (0, 0), (0, 1)))}
+            k = tokens.shape[0]
+            per_client = 1
+            for d in tokens.shape[1:]:
+                per_client *= int(d)
+            capacity = round_capacity(vocab, per_client)
+            sub_ids = jax.vmap(
+                lambda f: unique_ids_padded(f, capacity))(tokens.reshape(k, -1))
+            deltas = cohort_submodel_deltas(local_train, params, data, sub_ids)
+            counts = {name[len("heat_"):]: v for name, v in heat.items()}
+            agg = sparse_cohort_aggregate(deltas, heat_spec, counts, n_total,
+                                          k, correct=correct)
+            plain = unbox(params)
+
+            def ap(p, u):
+                if is_rowsparse(u):
+                    return apply_rowsparse(p, u, cfg.server_lr)
+                return p + (u * cfg.server_lr).astype(p.dtype)
+
+            new = boxed_like(jax.tree.map(ap, plain, agg), params)
+            first = jax.tree.map(lambda x: x[:, 0], data)
+            loss = jax.vmap(lambda b: loss_fn(params, b))(first).mean()
+            sub_rows = (sub_ids >= 0).sum()
+            return new, {"loss": loss, "sub_rows": sub_rows,
+                         "density": sub_rows / (k * vocab)}
 
         return round_step
 

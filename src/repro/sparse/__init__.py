@@ -17,8 +17,12 @@ from repro.sparse.encode import (  # noqa: F401
     batch_union_ids,
     decode_delta_tree,
     encode_delta_tree,
+    gather_submodel_tree,
+    remap_feature_batch,
     sparse_eligible,
+    submodel_delta_tree,
     submodel_value_and_grad,
+    tree_leaf_at,
 )
 from repro.sparse.aggregate import (  # noqa: F401
     aggregate_rowsparse,
@@ -31,6 +35,12 @@ from repro.sparse.compress import (  # noqa: F401
     QuantRows,
     dequantize_rows,
     quantize_rows_int8,
+    quantize_tree_int8,
     topk_rows,
 )
-from repro.sparse.comm import CommStats, round_comm_stats, tree_wire_bytes  # noqa: F401
+from repro.sparse.comm import (  # noqa: F401
+    CommStats,
+    leaf_wire_bytes,
+    round_comm_stats,
+    tree_wire_bytes,
+)

@@ -26,16 +26,23 @@ _SCALE_BYTES = 4       # f32 per-row dequant scale
 
 @dataclass
 class CommStats:
-    """Bytes-on-wire for one federated round (cohort of ``clients``)."""
+    """Bytes-on-wire for one federated round (cohort of ``clients``).
+
+    The dense baseline is the I=1 (FedSGD-equivalent) dense protocol at
+    equal local compute: one full-model round-trip per local step, i.e.
+    ``clients * model_bytes * local_iters`` each way (``local_iters`` factor
+    1 unless the caller prices an I>1 round). The sparse plane amortises a
+    single submodel download/upload over all I local steps.
+    """
 
     round: int
     clients: int
-    bytes_up_dense: float        # dense baseline: every client ships (V, D)
+    bytes_up_dense: float        # dense I=1 baseline: K * model * local_iters
     bytes_up_sparse: float       # sparse plane: ids + touched rows (+ scales)
-    bytes_down_dense: float      # dense baseline: full model broadcast
-    bytes_down_sparse: float     # submodel download: touched rows + dense leaves
+    bytes_down_dense: float      # dense I=1 baseline: K * model * local_iters
+    bytes_down_sparse: float     # submodel download: shipped rows + dense leaves
     rows_total: int              # sum over clients of dense feature rows
-    rows_sent: int               # sum over clients of rows actually shipped
+    rows_sent: int               # sum over clients of submodel (valid) rows
 
     @property
     def density(self) -> float:
@@ -66,7 +73,12 @@ def _row_payload_bytes(shape: Sequence[int], itemsize: int) -> int:
 
 
 def leaf_wire_bytes(leaf: Any) -> float:
-    """On-wire bytes of one update leaf in its current representation."""
+    """On-wire bytes of one update leaf in its current representation.
+
+    Accepts RowSparse/QuantRows leaves, plain arrays, scalars, and arbitrary
+    containers (priced as the sum of their sub-leaves; an empty container is
+    0 bytes).
+    """
     if isinstance(leaf, QuantRows):
         valid = int(np.asarray((leaf.ids >= 0).sum()))
         per_row = _row_payload_bytes((0,) + tuple(leaf.q.shape[leaf.ids.ndim:]), 1)
@@ -76,8 +88,14 @@ def leaf_wire_bytes(leaf: Any) -> float:
         per_row = _row_payload_bytes((0,) + tuple(leaf.rows.shape[leaf.ids.ndim:]),
                                      np.dtype(leaf.rows.dtype).itemsize)
         return valid * (_ID_BYTES + per_row)
-    arr = np.asarray(jax.tree.leaves(leaf)[0]) if not hasattr(leaf, "dtype") else leaf
-    return float(np.prod(arr.shape)) * np.dtype(arr.dtype).itemsize
+    if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+        return float(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    sub = jax.tree.leaves(
+        leaf, is_leaf=lambda x: is_rowsparse(x) or isinstance(x, QuantRows))
+    if len(sub) == 1 and sub[0] is leaf:        # atomic scalar (int/float)
+        arr = np.asarray(leaf)
+        return float(np.prod(arr.shape)) * arr.dtype.itemsize
+    return float(sum(leaf_wire_bytes(l) for l in sub))
 
 
 def tree_wire_bytes(tree: Any) -> float:
@@ -93,7 +111,9 @@ def round_comm_stats(rnd: int, dense_model_bytes: float,
                      sparse_static_bytes: float, row_payload_bytes: float,
                      valid_ids_per_client: np.ndarray, num_features: int,
                      int8: bool = False, row_elems: Optional[int] = None,
-                     uplink_rows_per_client: Optional[np.ndarray] = None) -> CommStats:
+                     uplink_rows_per_client: Optional[np.ndarray] = None,
+                     downlink_rows_per_client: Optional[np.ndarray] = None,
+                     local_iters: int = 1) -> CommStats:
     """Price one round from host-side metadata (exact, no estimation).
 
     ``dense_model_bytes``: full parameter tree size — the per-client payload
@@ -102,29 +122,48 @@ def round_comm_stats(rnd: int, dense_model_bytes: float,
     whole. ``row_payload_bytes``: bytes per feature row summed over the
     sparse-plane tables; ``row_elems``: elements per row (for int8 pricing
     at 1 byte/element regardless of the table dtype). ``valid_ids_per_client``:
-    (K,) per-client unique-feature counts — the *submodel* size, which prices
-    the downlink and the density. ``uplink_rows_per_client`` (defaults to the
-    same) prices the uplink delta, which top-k sparsification can shrink
-    below the submodel size.
+    (K,) per-client unique-feature counts — the *submodel* size, which sets
+    the density. ``uplink_rows_per_client`` (defaults to the same) prices the
+    uplink delta, which top-k sparsification can shrink below the submodel
+    size. ``downlink_rows_per_client`` (defaults to the same) prices the
+    submodel download with the rows the server *actually ships* — e.g. the
+    gathered ``capacity``-row replica buffer of sparse-replicated local
+    training, or the full table for dense-replica local training. A client
+    receiving the complete table (``rows == num_features``) gets no per-row
+    id bytes: a full-table broadcast ships no row indices, only the
+    contiguous payload.
+
+    ``local_iters``: the dense baseline is the I=1 (FedSGD-style) dense
+    protocol, which needs ``local_iters`` model round-trips to match one
+    round of I local steps — so the baseline bytes scale by it. The sparse
+    plane amortises the single submodel download/upload over all I steps.
     """
     k = len(valid_ids_per_client)
-    rows_down = int(np.asarray(valid_ids_per_client).sum())
-    rows_up = (rows_down if uplink_rows_per_client is None
+    rows_sent = int(np.asarray(valid_ids_per_client).sum())
+    rows_up = (rows_sent if uplink_rows_per_client is None
                else int(np.asarray(uplink_rows_per_client).sum()))
+    down = np.asarray(valid_ids_per_client if downlink_rows_per_client is None
+                      else downlink_rows_per_client)
+    rows_down = int(down.sum())
+    # per-row ids accompany a submodel download only; a full-table broadcast
+    # is a contiguous payload with no row indices
+    id_bytes_down = float((np.where(down < num_features, down, 0)).sum()) * _ID_BYTES
     up_row = row_payload_bytes
     if int8:
         # int8 payload (1 byte/element) + one f32 scale per row
         up_row = float(row_elems if row_elems is not None
                        else row_payload_bytes / 4.0) + _SCALE_BYTES
     sparse_up = k * sparse_static_bytes + rows_up * (_ID_BYTES + up_row)
-    sparse_down = k * sparse_static_bytes + rows_down * (_ID_BYTES + row_payload_bytes)
+    sparse_down = (k * sparse_static_bytes + rows_down * row_payload_bytes
+                   + id_bytes_down)
+    dense_bytes = k * dense_model_bytes * max(int(local_iters), 1)
 
     return CommStats(
         round=rnd, clients=k,
-        bytes_up_dense=k * dense_model_bytes,
+        bytes_up_dense=dense_bytes,
         bytes_up_sparse=sparse_up,
-        bytes_down_dense=k * dense_model_bytes,
+        bytes_down_dense=dense_bytes,
         bytes_down_sparse=sparse_down,
         rows_total=k * num_features,
-        rows_sent=rows_down,
+        rows_sent=rows_sent,
     )

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.sparse.rowsparse import PAD_ID, RowSparse
+from repro.sparse.rowsparse import PAD_ID, RowSparse, is_rowsparse
 
 Array = jax.Array
 
@@ -85,3 +85,18 @@ def dequantize_rows(qr: QuantRows, dtype=jnp.float32) -> RowSparse:
     flat = qr.q.reshape(lead + (-1,)).astype(jnp.float32)
     rows = (flat * qr.scales[..., None]).reshape(qr.q.shape).astype(dtype)
     return RowSparse(qr.ids, rows, qr.num_rows)
+
+
+def quantize_tree_int8(tree, key: Array):
+    """Quantize every RowSparse leaf of ``tree`` with an independent key.
+
+    Each leaf's key is ``fold_in(key, leaf_index)``: reusing one key across
+    leaves would draw the SAME stochastic-rounding noise for every feature
+    table of a round, correlating their quantization errors (two tables with
+    equal rows would round identically instead of independently). Dense
+    leaves pass through unchanged.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_rowsparse)
+    out = [quantize_rows_int8(l, jax.random.fold_in(key, i))
+           if is_rowsparse(l) else l for i, l in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -81,7 +81,8 @@ def decode_delta_tree(tree):
 # ---------------------------------------------------------------------------
 
 
-def _get_leaf(tree, path: Sequence):
+def tree_leaf_at(tree, path: Sequence):
+    """Walk a nested dict/tuple/list tree to the leaf at ``path``."""
     node = tree
     for k in path:
         node = node[k]
@@ -118,7 +119,7 @@ def submodel_value_and_grad(loss_fn: Callable, params, batch: Dict,
     those feature keys (true for every lookup-table leaf; not for tied
     embeddings doubling as an output head).
     """
-    leaf = _get_leaf(params, table_path)
+    leaf = tree_leaf_at(params, table_path)
     boxed = is_param(leaf)
     table = leaf.value if boxed else leaf
     num_rows = table.shape[0]
@@ -149,3 +150,62 @@ def batch_union_ids(batch: Dict, feature_keys: Sequence[str], capacity: int) -> 
     """Union of the batch's feature ids across keys, padded to ``capacity``."""
     flat = jnp.concatenate([jnp.asarray(batch[k]).reshape(-1) for k in feature_keys])
     return unique_ids_padded(flat, capacity)
+
+
+# ---------------------------------------------------------------------------
+# Submodel replicas (shared by mode="sparse_replicated" and the trainer)
+# ---------------------------------------------------------------------------
+
+
+def gather_submodel_tree(params, table_paths: Sequence[Sequence], ids: Array):
+    """Swap every table at ``table_paths`` for its gathered ``(R, ...)`` rows.
+
+    ``ids`` is one client's sorted-unique, -1-padded submodel id vector; each
+    feature-keyed table is replaced by ``RowSparse.from_dense`` row semantics
+    (rows gathered at the ids, padding slots zeroed). Param boxes are kept so
+    the gathered rows carry the table's logical axes. This is the "download
+    the submodel" half of the paper's protocol: the resulting tree is the
+    client's entire replica — O(capacity) feature rows instead of O(V).
+    """
+    out = params
+    for path in table_paths:
+        leaf = tree_leaf_at(params, path)
+        boxed = is_param(leaf)
+        table = leaf.value if boxed else leaf
+        rows = RowSparse.from_dense(table, ids).rows
+        out = _set_leaf(out, path, Param(rows, leaf.axes) if boxed else rows)
+    return out
+
+
+def remap_feature_batch(batch: Dict, feature_keys: Sequence[str],
+                        ids: Array) -> Dict:
+    """Remap each feature-carrying batch leaf to submodel row slots.
+
+    Negative (padding) ids stay negative — the models' own masking
+    convention; every non-negative id must appear in ``ids`` (true by
+    construction when ``ids`` is derived from the same client's batch).
+    """
+    out = dict(batch)
+    for k in feature_keys:
+        out[k] = remap_ids(batch[k], ids)
+    return out
+
+
+def submodel_delta_tree(delta, table_paths: Sequence[Sequence], ids: Array,
+                        num_rows: Sequence[int]):
+    """Repackage a submodel-replica delta as a wire-format update tree.
+
+    ``delta`` is a (possibly boxed) tree whose table leaves are gathered
+    ``(R, ...)`` row deltas; the result is the unboxed tree with a
+    ``RowSparse`` at each table path (padding rows zeroed) — exactly the
+    shape ``encode_delta_tree`` produces, with no dense ``(V, ...)`` delta
+    ever existing.
+    """
+    plain = unbox(delta)
+    valid = ids >= 0
+    for path, n in zip(table_paths, num_rows):
+        rows = tree_leaf_at(plain, path)
+        rows = rows * valid.reshape(
+            valid.shape + (1,) * (rows.ndim - ids.ndim)).astype(rows.dtype)
+        plain = _set_leaf(plain, path, RowSparse(ids, rows, n))
+    return plain

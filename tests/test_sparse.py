@@ -600,6 +600,250 @@ def test_trainer_sparse_compression_variants_run(small_ds):
 
 
 # ---------------------------------------------------------------------------
+# sparse_replicated local mode (submodel replicas in the trainer)
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_sparse_local_auto_resolves_to_submodel(small_ds):
+    """With axis-0 feature tables spanning the dataset id space, "auto" picks
+    gathered submodel replicas; forcing dense replicas still works."""
+    tr = _make_trainer(small_ds, sparse=True)
+    assert tr._sparse_local == "sparse_replicated"
+    assert tr._sparse_paths == [("w",)]
+    tr_dense = _make_trainer(small_ds, sparse=True, sparse_local="replicated")
+    assert tr_dense._sparse_local == "replicated"
+    with pytest.raises(ValueError, match="sparse_local"):
+        _make_trainer(small_ds, sparse=True, sparse_local="bogus")
+
+
+@pytest.mark.parametrize("alg", ["fedsubavg", "fedavg", "fedprox", "fedadam"])
+def test_trainer_submodel_replicas_match_dense_replicas(small_ds, alg):
+    """The gathered-submodel local trainer reproduces dense-replica local
+    training to 1e-5 over a multi-round run (same RNG stream) for the sparse
+    apply path AND the densify-at-boundary server optimizers."""
+    tr_sub = _make_trainer(small_ds, sparse=True, alg=alg)
+    tr_rep = _make_trainer(small_ds, sparse=True, alg=alg,
+                           sparse_local="replicated")
+    losses_sub = [tr_sub.run_round() for _ in range(5)]
+    losses_rep = [tr_rep.run_round() for _ in range(5)]
+    np.testing.assert_allclose(losses_sub, losses_rep, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(unbox(tr_sub.state.params)),
+                    jax.tree.leaves(unbox(tr_rep.state.params))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_trainer_submodel_engine_matches_loop(small_ds):
+    """run_rounds (one lax.scan) on the submodel path == per-round loop."""
+    tr_loop = _make_trainer(small_ds, sparse=True)
+    tr_scan = _make_trainer(small_ds, sparse=True)
+    losses_loop = [tr_loop.run_round() for _ in range(5)]
+    losses_scan = tr_scan.run_rounds(5)
+    np.testing.assert_allclose(losses_scan, losses_loop, rtol=1e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(unbox(tr_loop.state.params)),
+                    jax.tree.leaves(unbox(tr_scan.state.params))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_submodel_local_trainer_emits_rowsparse_at_capacity():
+    """Deltas come out of local training already RowSparse on the client's
+    sub_ids — (K, capacity) ids, (K, capacity, D) rows; no dense (K, V, D)."""
+    from repro.federated import (cohort_submodel_deltas, derive_sub_ids,
+                                 make_submodel_local_trainer, pow2_capacity)
+    from repro.models.recsys import lstm_loss, make_lstm_params
+    v, e, k, i, b, s = 64, 4, 3, 2, 2, 5
+    params = make_lstm_params(v, emb_dim=e, hidden=6, layers=1,
+                              rng=jax.random.PRNGKey(0))
+    cfg = FedConfig(num_clients=8, clients_per_round=k, local_iters=i, lr=0.2)
+    rng = np.random.default_rng(3)
+    tokens = rng.integers(-1, v, (k, i, b, s)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(tokens),
+             "label": jnp.asarray(rng.integers(0, 2, (k, i, b)), jnp.int32)}
+    counts = np.asarray(count_sub_ids(jnp.asarray(tokens.reshape(k, -1)), v))
+    capacity = pow2_capacity(int(counts.max()))
+    sub_ids = derive_sub_ids(jnp.asarray(tokens.reshape(k, -1)), v, capacity)
+    local = make_submodel_local_trainer(lstm_loss, cfg, [("embedding",)],
+                                        ("tokens",))
+    deltas = jax.jit(cohort_submodel_deltas, static_argnums=0)(
+        local, params, batch, sub_ids)
+    rs = deltas["embedding"]
+    assert rs.ids.shape == (k, capacity)
+    assert rs.rows.shape == (k, capacity, e)
+    assert rs.num_rows == v
+    # padding rows are exactly zero; support matches the client's sub_ids
+    ids_np, rows_np = np.asarray(rs.ids), np.asarray(rs.rows)
+    np.testing.assert_array_equal(ids_np, np.asarray(sub_ids))
+    assert np.all(rows_np[ids_np < 0] == 0)
+    assert np.any(rows_np[ids_np >= 0] != 0)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: int8 keys, comm pricing, run() bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_tree_int8_independent_per_leaf(rng):
+    """Regression: two feature tables in one round must draw INDEPENDENT
+    stochastic-rounding noise — the old server path reused one key for every
+    tree leaf, correlating the quantization errors across tables."""
+    from repro.sparse import quantize_tree_int8
+    v, r, d = 30, 6, 4
+    ids = jnp.asarray([0, 4, 8, 12, 16, -1], jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(r, d)), jnp.float32)
+    rows = rows * (np.asarray(ids) >= 0)[:, None]
+    rs = RowSparse(ids, rows, v)
+    tree = {"a": rs, "b": RowSparse(ids, rows, v), "dense": jnp.ones((3,))}
+    out = quantize_tree_int8(tree, jax.random.PRNGKey(0))
+    # identical inputs, different leaves -> different rounding noise
+    assert not np.array_equal(np.asarray(out["a"].q), np.asarray(out["b"].q))
+    # dense leaves pass through untouched; same tree+key is deterministic
+    np.testing.assert_array_equal(np.asarray(out["dense"]), np.ones(3))
+    out2 = quantize_tree_int8(tree, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out["a"].q), np.asarray(out2["a"].q))
+    # both leaves still dequantize to within one quantization step
+    from repro.sparse import dequantize_rows
+    for k in ("a", "b"):
+        dq = np.asarray(dequantize_rows(out[k]).rows)
+        scales = np.abs(np.asarray(rows)).max(-1, keepdims=True) / 127.0
+        assert np.all(np.abs(dq - np.asarray(rows))
+                      <= np.maximum(scales, 1e-6) + 1e-6)
+
+
+def test_trainer_int8_two_tables_draw_independent_noise():
+    """End-to-end regression (fails pre-fix): a model with two identical
+    feature tables receiving identical deltas must end the round with
+    DIFFERENT tables under sparse_int8 — correlated rounding noise would
+    keep them bit-identical forever."""
+    from repro.sharding.logical import Param
+    ds = make_movielens_like(num_clients=30, num_items=32, mean_samples=12)
+
+    def mk(rng):
+        w = 0.01 * jax.random.normal(rng, (ds.num_features, 2), jnp.float32)
+        # equal values, distinct buffers (donation rejects aliased leaves)
+        return {"wa": Param(w, ("vocab", "embed")),
+                "wb": Param(w.copy(), ("vocab", "embed")),
+                "b": Param(jnp.zeros((1,), jnp.float32), (None,))}
+
+    def loss(params, batch):
+        p = unbox(params)
+        feats = batch["features"]
+        valid = (feats >= 0).astype(jnp.float32)[..., None]
+        va = p["wa"][jnp.maximum(feats, 0)] * valid
+        vb = p["wb"][jnp.maximum(feats, 0)] * valid
+        # asymmetric column weights keep the per-row delta elements at
+        # DISTINCT magnitudes: only the row max quantizes exactly (+-127),
+        # the rest genuinely draw stochastic-rounding noise
+        cw = jnp.asarray([1.0, 0.61], jnp.float32)
+        logit = ((va * cw).sum(axis=(-2, -1))
+                 + (vb * cw).sum(axis=(-2, -1))) + p["b"][0]
+        lab = batch["label"].astype(jnp.float32)
+        per = jnp.maximum(logit, 0) - logit * lab + jnp.log1p(
+            jnp.exp(-jnp.abs(logit)))
+        m = batch.get("sample_mask", jnp.ones_like(per))
+        return (per * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+    cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=5,
+                    local_iters=2, local_batch=4, lr=0.5,
+                    algorithm="fedsubavg", sparse=True, sparse_int8=True)
+    tr = FederatedTrainer(ds, mk, loss, cfg)
+    tr.run_round()
+    wa = np.asarray(unbox(tr.state.params)["wa"])
+    wb = np.asarray(unbox(tr.state.params)["wb"])
+    assert not np.array_equal(wa, wb), \
+        "identical tables stayed identical: int8 noise is correlated"
+
+
+def test_leaf_wire_bytes_containers(rng):
+    """Regression: leaf_wire_bytes must price empty containers (0 bytes, not
+    IndexError) and multi-leaf subtrees (sum, not first-leaf-only)."""
+    from repro.sparse import leaf_wire_bytes
+    from repro.sparse.compress import quantize_rows_int8 as q8
+    v, r, d = 50, 5, 3
+    ids = jnp.asarray([1, 7, 9, -1, -1], jnp.int32)
+    rows = jnp.asarray(rng.normal(size=(r, d)), jnp.float32)
+    rows = rows * (np.asarray(ids) >= 0)[:, None]
+    rs = RowSparse(ids, rows, v)
+    assert leaf_wire_bytes(rs) == 3 * (4 + d * 4)
+    qr = q8(rs, jax.random.PRNGKey(0))
+    assert leaf_wire_bytes(qr) == 3 * (4 + d + 4)
+    arr = jnp.zeros((4, 6), jnp.float32)
+    assert leaf_wire_bytes(arr) == 4 * 6 * 4
+    # empty containers: 0 bytes (the old code crashed on leaves[0])
+    assert leaf_wire_bytes([]) == 0.0
+    assert leaf_wire_bytes({}) == 0.0
+    assert leaf_wire_bytes(()) == 0.0
+    # nested dict: the SUM of its leaves (old code priced only the first)
+    nested = {"x": arr, "y": {"z": jnp.zeros((2, 2), jnp.float32), "rs": rs}}
+    want = 4 * 6 * 4 + 2 * 2 * 4 + 3 * (4 + d * 4)
+    assert leaf_wire_bytes(nested) == want
+    assert tree_wire_bytes(nested) == want
+    # scalar leaf
+    assert leaf_wire_bytes(np.float32(1.0)) == 4.0
+
+
+def test_trainer_downlink_priced_at_gathered_submodel(small_ds):
+    """Honest downlink: submodel mode ships the gathered capacity-row buffer;
+    dense-replica mode ships the full table. The dense baseline carries the
+    local_iters factor (I model round-trips at I=1 to match one I-step round)."""
+    tr = _make_trainer(small_ds, sparse=True)          # local_iters=3
+    tr.run_round()
+    c = tr.comm_log[-1]
+    dense_bytes, static, row_payload, _ = tr._comm_meta
+    k = tr.cfg.clients_per_round
+    # dense baseline: K * model * I, both directions
+    assert c.bytes_up_dense == pytest.approx(k * dense_bytes * 3)
+    assert c.bytes_down_dense == pytest.approx(k * dense_bytes * 3)
+    # downlink rows = the shared capacity bucket (clamped to the table size:
+    # the pow2 padding past V is never materialised on the wire), same for
+    # every client
+    rows_down = (c.bytes_down_sparse - k * static) / (4 + row_payload)
+    assert rows_down % k == 0
+    per_client = int(rows_down / k)
+    assert 8 <= per_client <= small_ds.num_features
+    assert (per_client == small_ds.num_features
+            or (per_client & (per_client - 1)) == 0)
+    # density still reports the true submodel size, not the padded bucket
+    assert 0 < c.density < 1
+    # dense-replica local mode prices the full-table broadcast it performs:
+    # the whole payload, but NO per-row id bytes (a contiguous table ships
+    # no row indices) — so at local_iters=1 it would equal the dense model
+    tr_rep = _make_trainer(small_ds, sparse=True, sparse_local="replicated")
+    tr_rep.run_round()
+    c_rep = tr_rep.comm_log[-1]
+    want = k * static + k * small_ds.num_features * row_payload
+    assert c_rep.bytes_down_sparse == pytest.approx(want)
+    assert c_rep.bytes_down_sparse == pytest.approx(c_rep.bytes_down_dense / 3)
+    assert c_rep.bytes_down_sparse > c.bytes_down_sparse
+    # regression: when the pow2 bucket overshoots the table (clients touching
+    # nearly all of V), the priced download clamps to the table size — the
+    # submodel can never cost more wire than shipping the whole table
+    over_cap = pow2_capacity(small_ds.num_features)       # > V by construction
+    assert over_cap > small_ds.num_features
+    tr._log_sparse_comm(np.full(k, small_ds.num_features - 1), over_cap)
+    c_over = tr.comm_log[-1]
+    assert c_over.bytes_down_sparse == pytest.approx(want)
+    assert c_over.bytes_down_sparse <= c_rep.bytes_down_sparse
+
+
+def test_run_round_numbers_continue_across_calls(small_ds):
+    """Regression: a second run() (or mixing run_round with run) must append
+    RoundRecords whose round numbers continue from the global counter instead
+    of restarting at 0 and colliding with existing history."""
+    tr = _make_trainer(small_ds, sparse=True)
+    tr.run(4, eval_every=2)
+    tr.run(4, eval_every=2)
+    rounds = [r.round for r in tr.history]
+    assert rounds == [2, 4, 6, 8]
+    tr.run_round()
+    tr.run(2, eval_every=2)
+    rounds = [r.round for r in tr.history]
+    assert rounds == [2, 4, 6, 8, 11]
+    assert rounds == sorted(rounds) and len(set(rounds)) == len(rounds)
+    assert tr._rounds_run == 11
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: simulation.make_round_step sparse mode == fedsgd
 # ---------------------------------------------------------------------------
 
