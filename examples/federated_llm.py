@@ -6,7 +6,15 @@ The model is the qwen2.5 family at ~100M scale (8 layers, d=512, vocab 8192);
 one round = one FedSGD cohort step (Algorithm 1 with I=1), exactly the
 computation the pod dry-run lowers at 14B-400B scale.
 
+The round is expressed as a ``RoundPlan`` — the execution-plan API behind
+both ``make_round_step`` and ``FederatedTrainer``. ``--sparse`` switches the
+transport to the row-sparse submodel plane, and ``--topk`` / ``--int8``
+compose compression onto it (a combination the legacy mode strings never
+expressed), with the round's comm bytes priced by the transport.
+
     PYTHONPATH=src python examples/federated_llm.py [--rounds 200]
+    PYTHONPATH=src python examples/federated_llm.py --sparse --topk 256
+    PYTHONPATH=src python examples/federated_llm.py --smoke --rounds 2
 """
 import argparse
 import time
@@ -18,7 +26,9 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs import FedConfig, get_config
 from repro.data import make_lm_federated
-from repro.federated import make_round_step
+from repro.federated import (DenseTransport, FedSgdLocal, RoundPlan,
+                             RowSparseTransport, ServerUpdate,
+                             make_round_step, plan_comm_meta)
 from repro.models import build_model
 from repro.common.pytree import tree_size
 
@@ -29,25 +39,46 @@ def main():
     ap.add_argument("--arch", default="qwen2_5_14b")
     ap.add_argument("--algorithm", default="fedsubavg",
                     choices=["fedsubavg", "fedavg"])
+    ap.add_argument("--sparse", action="store_true",
+                    help="row-sparse submodel transport (gather-before-backward)")
+    ap.add_argument("--topk", type=int, default=0,
+                    help="top-k delta-row compression (implies --sparse)")
+    ap.add_argument("--int8", action="store_true",
+                    help="int8 stochastic-rounding rows (implies --sparse)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + corpus for CI (seconds of CPU)")
     ap.add_argument("--ckpt", default="results/fed_llm_ckpt")
     args = ap.parse_args()
 
-    # ~100M-parameter member of the assigned family
-    cfg = get_config(args.arch).replace(
-        num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
-        d_ff=1408, vocab_size=8192, dtype="float32", query_chunk=128, kv_chunk=128)
+    # ~100M-parameter member of the assigned family (tiny under --smoke)
+    if args.smoke:
+        cfg = get_config(args.arch).replace(
+            num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=512, dtype="float32",
+            query_chunk=64, kv_chunk=64)
+        clients, seq_len, cohort = 32, 32, 8
+    else:
+        cfg = get_config(args.arch).replace(
+            num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+            d_ff=1408, vocab_size=8192, dtype="float32", query_chunk=128,
+            kv_chunk=128)
+        clients, seq_len, cohort = 256, 128, 16
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
     print(f"arch={cfg.name} params={tree_size(params)/1e6:.1f}M")
 
-    ds = make_lm_federated(num_clients=256, vocab=cfg.vocab_size, seq_len=128,
-                           samples_per_client=4, zipf_a=1.3)
+    ds = make_lm_federated(num_clients=clients, vocab=cfg.vocab_size,
+                           seq_len=seq_len, samples_per_client=4, zipf_a=1.3)
     print(f"corpus: {ds.stats()}")
 
-    fed = FedConfig(num_clients=ds.num_clients, clients_per_round=16, lr=0.05,
-                    algorithm=args.algorithm)
-    step = jax.jit(make_round_step(api.loss, params, fed, mode="fedsgd",
-                                   correct=args.algorithm == "fedsubavg"))
+    fed = FedConfig(num_clients=ds.num_clients, clients_per_round=cohort,
+                    lr=0.05, algorithm=args.algorithm)
+    sparse = args.sparse or args.topk > 0 or args.int8
+    transport = (RowSparseTransport(topk=args.topk, int8=args.int8)
+                 if sparse else DenseTransport())
+    plan = RoundPlan(FedSgdLocal(), transport, ServerUpdate(args.algorithm))
+    print(f"plan: {plan.describe()}")
+    step = jax.jit(make_round_step(api.loss, params, fed, mode=plan))
     heat = jnp.asarray(ds.heat.counts, jnp.float32)
     rng = np.random.default_rng(0)
 
@@ -59,9 +90,23 @@ def main():
         toks = ds.client_data["tokens"][ids, sample]
         params, metrics = step(params, {"tokens": jnp.asarray(toks),
                                         "heat_vocab": heat})
-        if (r + 1) % 20 == 0:
-            print(f"round {r+1:4d}  loss={float(metrics['loss']):.4f}  "
-                  f"({(time.time()-t0)/(r+1):.2f}s/round)", flush=True)
+        if (r + 1) % 20 == 0 or args.smoke:
+            line = (f"round {r+1:4d}  loss={float(metrics['loss']):.4f}  "
+                    f"({(time.time()-t0)/(r+1):.2f}s/round)")
+            if sparse:
+                line += f"  density={float(metrics['density']):.3f}"
+            print(line, flush=True)
+
+    if sparse and args.rounds > 0:
+        # price the last round's wire traffic through the plan's transport
+        meta = plan_comm_meta(params)
+        counts = np.asarray([int(metrics["sub_rows"])])
+        stats = transport.round_comm(args.rounds, meta, counts,
+                                     cfg.vocab_size)
+        print(f"comm (last round, cohort as one union): "
+              f"up {stats.bytes_up_sparse/1e6:.2f} MB sparse vs "
+              f"{stats.bytes_up_dense/1e6:.2f} MB dense "
+              f"({stats.up_ratio:.1f}x)")
 
     save_checkpoint(args.ckpt, params, step=args.rounds,
                     extra={"arch": cfg.name, "algorithm": args.algorithm})

@@ -168,6 +168,14 @@ SHAPES = {
 # Federated configuration (paper Algorithm 1)
 # ---------------------------------------------------------------------------
 
+#: server-side algorithms (repro.core.algorithms re-exports this tuple)
+SERVER_ALGORITHMS = ("fedavg", "fedprox", "scaffold", "fedadam", "fedsubavg",
+                     "central")
+#: heat estimators (paper App. F)
+HEAT_ESTIMATORS = ("exact", "secure_agg", "randomized_response")
+#: sparse local-training replica layouts (see ``FedConfig.sparse_local``)
+SPARSE_LOCAL_MODES = ("auto", "replicated", "sparse_replicated")
+
 
 @dataclass(frozen=True)
 class FedConfig:
@@ -201,6 +209,35 @@ class FedConfig:
     #                        feature tables spanning the dataset's id space,
     #                        dense replicas otherwise
     sparse_local: str = "auto"
+
+    def __post_init__(self):
+        """Reject invalid configurations at construction time.
+
+        Every check here used to fail deep inside tracing (or silently do the
+        wrong thing); failing in ``FedConfig(...)`` with an actionable message
+        is the only place the user still has the call site in hand.
+        """
+        if self.algorithm not in SERVER_ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}: expected one of "
+                f"{SERVER_ALGORITHMS}")
+        if self.heat_estimator not in HEAT_ESTIMATORS:
+            raise ValueError(
+                f"unknown heat_estimator {self.heat_estimator!r}: expected "
+                f"one of {HEAT_ESTIMATORS}")
+        if self.sparse_local not in SPARSE_LOCAL_MODES:
+            raise ValueError(
+                f"unknown sparse_local mode {self.sparse_local!r}: expected "
+                f"one of {SPARSE_LOCAL_MODES}")
+        if self.sparse_topk < 0:
+            raise ValueError(
+                f"sparse_topk must be >= 0 (0 disables top-k), got "
+                f"{self.sparse_topk}")
+        if self.microbatches > 1 and self.sparse:
+            raise ValueError(
+                "microbatches > 1 does not compose with sparse=True: the "
+                "sparse plane computes one fused cohort gradient per round; "
+                "set microbatches=1 or sparse=False")
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.pytree import tree_add, tree_scale, tree_zeros_like
-from repro.configs.base import FedConfig
+from repro.configs.base import SERVER_ALGORITHMS, FedConfig  # noqa: F401 (re-export)
 from repro.core.aggregate import HeatSpec, correct_update_tree
 
 
@@ -107,6 +107,3 @@ def make_server_algorithm(
         return ServerAlgorithm(name, init, apply)
 
     raise ValueError(f"unknown server algorithm: {name!r}")
-
-
-SERVER_ALGORITHMS = ("fedavg", "fedprox", "scaffold", "fedadam", "fedsubavg", "central")

@@ -4,6 +4,20 @@ from repro.federated.client import (  # noqa: F401
     make_submodel_local_trainer,
 )
 from repro.federated.metrics import comm_summary  # noqa: F401
+from repro.federated.plan import (  # noqa: F401
+    DenseTransport,
+    FedSgdLocal,
+    ReplicatedLocal,
+    RoundPlan,
+    RowSparseTransport,
+    ServerUpdate,
+    SubmodelReplicatedLocal,
+    build_round_step,
+    plan_comm_meta,
+    plan_from_config,
+    resolve_plan,
+    split_heat_batch,
+)
 from repro.federated.server import (  # noqa: F401
     FederatedTrainer,
     RoundRecord,
@@ -17,3 +31,37 @@ from repro.federated.simulation import (  # noqa: F401
     round_capacity,
     sparse_table_paths,
 )
+
+#: the public API surface (pinned by tests/test_plan.py)
+__all__ = [
+    # plan strategies + compiler (the one dispatch system)
+    "RoundPlan",
+    "FedSgdLocal",
+    "ReplicatedLocal",
+    "SubmodelReplicatedLocal",
+    "DenseTransport",
+    "RowSparseTransport",
+    "ServerUpdate",
+    "build_round_step",
+    "resolve_plan",
+    "plan_from_config",
+    "plan_comm_meta",
+    "split_heat_batch",
+    # entry points
+    "make_round_step",
+    "FederatedTrainer",
+    # client-side local training
+    "cohort_submodel_deltas",
+    "make_local_trainer",
+    "make_submodel_local_trainer",
+    # server bookkeeping + sub-id derivation
+    "RoundRecord",
+    "comm_summary",
+    "count_sub_ids",
+    "derive_sub_ids",
+    "pow2_capacity",
+    # heat/sparse metadata helpers
+    "heat_spec_from_axes",
+    "round_capacity",
+    "sparse_table_paths",
+]

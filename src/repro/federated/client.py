@@ -12,7 +12,7 @@ Algorithm hooks:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,14 +25,20 @@ from repro.sparse.encode import (gather_submodel_tree, remap_feature_batch,
                                  submodel_delta_tree, tree_leaf_at)
 
 
-def _local_sgd_delta(loss_fn: Callable, cfg: FedConfig, params0, batches):
+def _local_sgd_delta(loss_fn: Callable, cfg: FedConfig, params0, batches,
+                     prox_mu: Optional[float] = None):
     """I steps of mini-batch SGD from ``params0``; returns the delta.
 
     The single local-training loop both replica layouts share: ``params0``
     is the downloaded model — full dense parameters or a gathered submodel —
     and also the FedProx prox anchor. ``batches`` leaves are (I, B, ...).
+    ``prox_mu`` overrides the proximal coefficient; ``None`` derives it from
+    the config (``cfg.prox_mu`` iff ``cfg.algorithm == "fedprox"``), so
+    RoundPlan compositions can turn a FedProx-style local objective on or off
+    independently of the server algorithm string.
     """
-    prox = cfg.prox_mu if cfg.algorithm == "fedprox" else 0.0
+    prox = (cfg.prox_mu if cfg.algorithm == "fedprox" else 0.0) \
+        if prox_mu is None else float(prox_mu)
 
     def objective(p, batch):
         l = loss_fn(p, batch)
@@ -49,14 +55,16 @@ def _local_sgd_delta(loss_fn: Callable, cfg: FedConfig, params0, batches):
     return tree_sub(p_final, params0)
 
 
-def make_local_trainer(loss_fn: Callable, cfg: FedConfig) -> Callable:
+def make_local_trainer(loss_fn: Callable, cfg: FedConfig,
+                       prox_mu: Optional[float] = None) -> Callable:
     """Returns local_train(global_params, client_batches) -> delta.
 
     ``client_batches`` leaves are (I, B, ...): the client's I minibatches.
     """
 
     def local_train(global_params, client_batches):
-        return _local_sgd_delta(loss_fn, cfg, global_params, client_batches)
+        return _local_sgd_delta(loss_fn, cfg, global_params, client_batches,
+                                prox_mu=prox_mu)
 
     return local_train
 
@@ -68,7 +76,8 @@ def cohort_deltas(local_train: Callable, global_params, cohort_batches):
 
 def make_submodel_local_trainer(loss_fn: Callable, cfg: FedConfig,
                                 table_paths: Sequence[Sequence],
-                                feature_keys: Sequence[str]) -> Callable:
+                                feature_keys: Sequence[str],
+                                prox_mu: Optional[float] = None) -> Callable:
     """Returns local_train(global_params, client_batches, sub_ids) -> delta.
 
     The paper's protocol made literal: a client's replica is its *submodel*
@@ -95,7 +104,8 @@ def make_submodel_local_trainer(loss_fn: Callable, cfg: FedConfig,
             num_rows.append((leaf.value if is_param(leaf) else leaf).shape[0])
         sub_params = gather_submodel_tree(global_params, table_paths, sub_ids)
         batches = remap_feature_batch(client_batches, feature_keys, sub_ids)
-        delta = _local_sgd_delta(loss_fn, cfg, sub_params, batches)
+        delta = _local_sgd_delta(loss_fn, cfg, sub_params, batches,
+                                 prox_mu=prox_mu)
         return submodel_delta_tree(delta, table_paths, sub_ids, num_rows)
 
     return local_train

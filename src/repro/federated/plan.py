@@ -1,0 +1,702 @@
+"""Composable execution plans for one federated round.
+
+The paper's FedSubAvg protocol (Ding et al., NeurIPS 2022) is ONE server
+update behind many execution layouts. A :class:`RoundPlan` names a layout as
+three orthogonal strategy choices instead of a mode string:
+
+``LocalStep`` — how the cohort produces update deltas:
+    :class:`FedSgdLocal`              I = 1 on the pooled cohort batch
+                                      (optionally microbatched); the cohort
+                                      mean is one gradient.
+    :class:`ReplicatedLocal`          true I > 1 local SGD on per-client
+                                      DENSE model replicas (vmap).
+    :class:`SubmodelReplicatedLocal`  I > 1 local SGD on per-client
+                                      gathered SUBMODEL replicas — the
+                                      paper's download-a-submodel protocol;
+                                      deltas are born RowSparse.
+
+``Transport`` — what ships between clients and server (and what one round
+costs in bytes — the transport owns comm accounting):
+    :class:`DenseTransport`           full dense update trees.
+    :class:`RowSparseTransport`       row-sparse ``(ids, rows)`` updates with
+                                      optional top-k row selection, int8
+                                      stochastic-rounding quantisation, and a
+                                      union-backend choice for the server
+                                      segment-sum.
+
+``ServerUpdate`` — the heat correction plus the algorithm that applies the
+aggregated update: plain (fedavg / fedprox / fedsubavg) or the stateful
+server optimizers (scaffold / fedadam), reusing
+``repro.core.algorithms.make_server_algorithm`` slots.
+
+:func:`build_round_step` compiles a plan into the single jitted round step
+both entry points run: ``make_round_step`` (mode strings are thin aliases via
+:func:`resolve_plan`) and ``FederatedTrainer`` (``FedConfig`` flags resolve
+via :func:`plan_from_config`, or pass ``plan=`` explicitly). One dispatch
+system, two entry points — and compositions no mode string ever expressed
+(top-k/int8 under the simulation's sparse path, submodel-replica local
+training against a dense server transport) fall out for free.
+
+Shared concerns that were once copy-pasted per mode branch live here (or in
+the module that owns them) exactly once: heat-batch splitting
+(:func:`split_heat_batch`), CE-label pinning (``repro.sparse.encode.
+pin_labels``), sub-id derivation, loss/density metrics, boxed/unboxed
+plumbing, and compression (``repro.sparse.compress.compress_delta_tree``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_path_keys, tree_scale
+from repro.configs.base import SERVER_ALGORITHMS, FedConfig
+from repro.core.aggregate import HeatSpec, correct_dense_leaf, correct_update_tree
+from repro.core.algorithms import ServerState, make_server_algorithm
+from repro.federated.client import (cohort_deltas, cohort_submodel_deltas,
+                                    make_local_trainer,
+                                    make_submodel_local_trainer)
+from repro.sharding.logical import axes_tree, boxed_like, unbox
+from repro.sparse.aggregate import (apply_rowsparse, correct_rowsparse,
+                                    sparse_cohort_aggregate)
+from repro.sparse.comm import CommMeta, CommStats, model_comm_meta, round_comm_stats
+from repro.sparse.compress import compress_delta_tree
+from repro.sparse.encode import (DEFAULT_SPARSE_SPACES, batch_union_ids,
+                                 decode_delta_tree, encode_delta_tree,
+                                 pin_labels, sparse_eligible,
+                                 submodel_value_and_grad, tree_leaf_at)
+from repro.sparse.rowsparse import RowSparse, is_rowsparse, unique_ids_padded
+
+Array = jax.Array
+
+#: round-plan server algorithms ("central" is not a federated round)
+PLAN_ALGORITHMS = tuple(a for a in SERVER_ALGORITHMS if a != "central")
+
+
+# ---------------------------------------------------------------------------
+# heat-spec derivation (moved here from simulation.py; re-exported there)
+# ---------------------------------------------------------------------------
+
+
+def heat_spec_from_axes(boxed_params,
+                        spaces: Dict[str, str] = None) -> HeatSpec:
+    """Derive the HeatSpec from Param logical axes.
+
+    spaces maps logical axis name -> heat space name; default:
+    "vocab" axis -> "vocab" space, "experts" axis -> "expert" space.
+    """
+    spaces = spaces or {"vocab": "vocab", "experts": "expert"}
+    axes = axes_tree(boxed_params)
+
+    def is_axes(x):
+        return x is None or (isinstance(x, tuple)
+                             and all(e is None or isinstance(e, str) for e in x))
+
+    def leaf_space(ax):
+        if ax is None:
+            return None
+        for i, name in enumerate(ax):
+            if name in spaces:
+                return (spaces[name], i)
+        return None
+
+    return HeatSpec(jax.tree.map(leaf_space, axes, is_leaf=is_axes))
+
+
+def _is_space(x) -> bool:
+    return x is None or (isinstance(x, tuple) and len(x) == 2
+                         and isinstance(x[0], str) and isinstance(x[1], int))
+
+
+def sparse_table_paths(heat_spec: HeatSpec, spaces=None):
+    """Paths of the leaves that ride the sparse plane (axis-0 feature tables)."""
+    if spaces is None:
+        spaces = DEFAULT_SPARSE_SPACES
+    flat, _ = jax.tree_util.tree_flatten_with_path(heat_spec.leaf_spaces,
+                                                   is_leaf=_is_space)
+    return [(tree_path_keys(path), space) for path, space in flat
+            if sparse_eligible(space, spaces)]
+
+
+def round_capacity(vocab: int, ids_size: int, align: int = 8) -> int:
+    """Union-id capacity for one sparse round step.
+
+    ``min(vocab, ids_size)`` rounded up to a multiple of ``align`` for tiling,
+    then clamped back to ``vocab`` — the rounding must never allocate union
+    slots past the feature table (e.g. V=50257 would otherwise get 50264
+    slots, gathering rows that don't exist in the table's id space).
+    """
+    cap = min(int(vocab), int(ids_size))
+    cap += (-cap) % align
+    return min(cap, int(vocab))
+
+
+def split_heat_batch(batch: Dict) -> Tuple[Dict, Dict]:
+    """Split a round batch into its static heat vectors and the cohort data.
+
+    ``heat_*`` entries (``heat_vocab``, ``heat_expert``, ...) ride along the
+    batch on the simulation entry point; the trainer bakes heat statically
+    and its batches simply carry no such keys.
+    """
+    heat = {k: v for k, v in batch.items() if k.startswith("heat_")}
+    data = {k: v for k, v in batch.items() if not k.startswith("heat_")}
+    return heat, data
+
+
+# ---------------------------------------------------------------------------
+# strategy objects
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FedSgdLocal:
+    """I = 1: the cohort-mean delta is one gradient of the pooled batch.
+
+    ``microbatches > 1`` splits the batch for gradient accumulation (dense
+    transport only — the sparse plane computes one fused cohort gradient).
+    Data layout: flat ``(B, ...)`` leaves. FedProx is a no-op here: a single
+    step taken AT the prox anchor has identically zero prox gradient.
+    """
+
+    microbatches: int = 1
+    stacked = False
+
+
+@dataclass(frozen=True)
+class ReplicatedLocal:
+    """True I > 1 local SGD on per-client DENSE replicas under vmap.
+
+    Data layout: ``(K, I, B, ...)`` leaves. ``prox_mu`` overrides the FedProx
+    proximal coefficient (``None`` derives it from the config: active iff
+    ``cfg.algorithm == "fedprox"``). Memory: K full model replicas.
+    """
+
+    prox_mu: Optional[float] = None
+    stacked = True
+
+
+@dataclass(frozen=True)
+class SubmodelReplicatedLocal:
+    """I > 1 local SGD on per-client gathered SUBMODEL replicas.
+
+    The paper's protocol made literal: each client's replica is its gathered
+    ``(capacity, D)`` feature rows plus the dense leaves; deltas are born
+    RowSparse on the client's sub-ids. Memory: K * capacity * D feature-table
+    HBM instead of the K * V * D dense-replica wall. Data layout and
+    ``prox_mu`` as :class:`ReplicatedLocal`.
+    """
+
+    prox_mu: Optional[float] = None
+    stacked = True
+
+
+LocalStep = Union[FedSgdLocal, ReplicatedLocal, SubmodelReplicatedLocal]
+
+
+@dataclass(frozen=True)
+class DenseTransport:
+    """Full dense update trees ship both ways (the classic FL layout)."""
+
+    sparse = False
+
+    def round_comm(self, rnd: int, meta: CommMeta, valid_counts: np.ndarray,
+                   num_features: int, capacity: Optional[int] = None,
+                   submodel_downlink: bool = False,
+                   local_iters: int = 1) -> Optional[CommStats]:
+        """Dense rounds have no sparse-plane pricing to log."""
+        return None
+
+
+@dataclass(frozen=True)
+class RowSparseTransport:
+    """Row-sparse ``(ids, rows)`` updates — the paper's submodel wire format.
+
+    ``topk``: keep only the k largest-L2 delta rows per client (0 = off).
+    ``int8``: unbiased stochastic-rounding int8 row payloads.
+    ``union_backend``: server segment-sum backend (``"auto"``/``"bitmap"``/
+    ``"sort"``/``"pallas"`` — see ``repro.sparse.aggregate``).
+    """
+
+    topk: int = 0
+    int8: bool = False
+    union_backend: str = "auto"
+    sparse = True
+
+    def __post_init__(self):
+        if self.topk < 0:
+            raise ValueError(f"topk must be >= 0 (0 disables), got {self.topk}")
+
+    def round_comm(self, rnd: int, meta: CommMeta, valid_counts: np.ndarray,
+                   num_features: int, capacity: Optional[int] = None,
+                   submodel_downlink: bool = False,
+                   local_iters: int = 1) -> CommStats:
+        """Price one round in exact bytes from per-client sub-id counts.
+
+        Uplink: top-k ships exactly ``min(topk, valid)`` delta rows per
+        client (int8 pricing applied when enabled). Downlink prices what the
+        execution actually ships: the gathered ``capacity``-row submodel
+        buffer (clamped to the table — pow2 padding past V never hits the
+        wire) when ``submodel_downlink``, else the full feature table. The
+        dense baseline carries the ``local_iters`` factor (the I=1 dense
+        protocol re-ships the model every local step).
+        """
+        valid_counts = np.asarray(valid_counts)
+        k = len(valid_counts)
+        up = (np.minimum(valid_counts, self.topk) if self.topk
+              else valid_counts)
+        if submodel_downlink:
+            if capacity is None:
+                raise ValueError("submodel downlink pricing needs the "
+                                 "gathered replica capacity")
+            down = np.full(k, min(int(capacity), int(num_features)))
+        else:
+            down = np.full(k, int(num_features))
+        return round_comm_stats(
+            rnd, meta.dense_bytes, meta.sparse_static_bytes,
+            meta.row_payload_bytes, valid_counts, num_features,
+            int8=self.int8, row_elems=meta.row_elems,
+            uplink_rows_per_client=up, downlink_rows_per_client=down,
+            local_iters=local_iters)
+
+
+Transport = Union[DenseTransport, RowSparseTransport]
+
+
+@dataclass(frozen=True)
+class ServerUpdate:
+    """Heat correction + the server algorithm that applies the update.
+
+    ``algorithm`` picks the apply slot: plain (``fedavg``/``fedprox``/
+    ``fedsubavg``) applies ``X += eta * update`` (sparse leaves via
+    scatter-add, never densified); the stateful optimizers (``scaffold``/
+    ``fedadam``) consume a dense mean delta — densified once at the server
+    boundary on the sparse plane. The FedSubAvg correction ``N / n_m`` is
+    applied iff ``algorithm == "fedsubavg"`` — fused into the sparse
+    aggregation, broadcast onto dense leaves.
+    """
+
+    algorithm: str = "fedsubavg"
+
+    def __post_init__(self):
+        if self.algorithm not in PLAN_ALGORITHMS:
+            raise ValueError(
+                f"unknown server algorithm {self.algorithm!r}: expected one "
+                f"of {PLAN_ALGORITHMS}")
+
+    @property
+    def correct(self) -> bool:
+        return self.algorithm == "fedsubavg"
+
+    @property
+    def stateless(self) -> bool:
+        return self.algorithm in ("fedavg", "fedprox", "fedsubavg")
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """One federated round as a composition of three orthogonal strategies."""
+
+    local: LocalStep
+    transport: Transport
+    server: ServerUpdate
+    feature_keys: Tuple[str, ...] = ("tokens",)
+
+    def describe(self) -> str:
+        return (f"{type(self.local).__name__} -> "
+                f"{type(self.transport).__name__} -> "
+                f"ServerUpdate({self.server.algorithm})")
+
+
+# ---------------------------------------------------------------------------
+# mode-string / config resolution (the two legacy dispatch systems, unified)
+# ---------------------------------------------------------------------------
+
+
+def resolve_plan(mode_or_plan, cfg: FedConfig, correct: bool = True,
+                 feature_key: str = "tokens") -> RoundPlan:
+    """Resolve a legacy ``make_round_step`` mode string into its RoundPlan.
+
+    The four strings are thin aliases — each names the composition that
+    reproduces the historical branch byte-for-byte. A RoundPlan passes
+    through unchanged (so callers can hand either to ``make_round_step``),
+    but then the plan is the whole truth: the string-mode knobs must not
+    silently contradict it.
+    """
+    if isinstance(mode_or_plan, RoundPlan):
+        plan = mode_or_plan
+        if not correct and plan.server.correct:
+            raise ValueError(
+                "correct=False conflicts with an explicit RoundPlan whose "
+                "ServerUpdate applies the heat correction — encode the "
+                "choice in the plan (ServerUpdate('fedavg'), etc.)")
+        if feature_key != "tokens" and feature_key not in plan.feature_keys:
+            raise ValueError(
+                f"feature_key={feature_key!r} conflicts with the explicit "
+                f"RoundPlan's feature_keys={plan.feature_keys} — set it on "
+                "the plan")
+        return plan
+    server = ServerUpdate("fedsubavg" if correct else "fedavg")
+    fk = (feature_key,)
+    if mode_or_plan == "fedsgd":
+        return RoundPlan(FedSgdLocal(max(cfg.microbatches, 1)),
+                         DenseTransport(), server, fk)
+    if mode_or_plan == "sparse":
+        if cfg.microbatches > 1:
+            raise ValueError(
+                "mode='sparse' composes with microbatches=1: the sparse "
+                "plane computes one fused cohort gradient per round")
+        return RoundPlan(FedSgdLocal(), RowSparseTransport(), server, fk)
+    if mode_or_plan == "replicated":
+        return RoundPlan(ReplicatedLocal(), DenseTransport(), server, fk)
+    if mode_or_plan == "sparse_replicated":
+        return RoundPlan(SubmodelReplicatedLocal(), RowSparseTransport(),
+                         server, fk)
+    raise ValueError(mode_or_plan)
+
+
+def plan_from_config(cfg: FedConfig, feature_keys: Tuple[str, ...] = ("tokens",),
+                     gatherable: bool = True) -> RoundPlan:
+    """Resolve ``FedConfig`` flags into the RoundPlan the trainer executes.
+
+    ``gatherable``: whether the model's axis-0 feature tables span the
+    dataset's id space (the precondition for submodel replicas) — decides
+    the ``sparse_local="auto"`` branch.
+    """
+    if cfg.algorithm == "central":
+        raise ValueError("central training is not a federated round plan")
+    server = ServerUpdate(cfg.algorithm)
+    if not cfg.sparse:
+        return RoundPlan(ReplicatedLocal(), DenseTransport(), server,
+                         tuple(feature_keys))
+    mode = cfg.sparse_local
+    if mode == "auto":
+        mode = "sparse_replicated" if gatherable else "replicated"
+    local = (SubmodelReplicatedLocal() if mode == "sparse_replicated"
+             else ReplicatedLocal())
+    transport = RowSparseTransport(topk=cfg.sparse_topk, int8=cfg.sparse_int8)
+    return RoundPlan(local, transport, server, tuple(feature_keys))
+
+
+def plan_comm_meta(boxed_params) -> CommMeta:
+    """Static comm geometry of a model for ``Transport.round_comm``."""
+    spec = heat_spec_from_axes(boxed_params)
+    paths = {p for p, _ in sparse_table_paths(spec)}
+    return model_comm_meta(unbox(boxed_params), paths)
+
+
+# ---------------------------------------------------------------------------
+# the compiler: plan -> jitted round step
+# ---------------------------------------------------------------------------
+
+
+def _scale_tree_f32(tree, s: float):
+    """``s * tree`` in float32, RowSparse-aware (the sparse-plane scaling)."""
+
+    def f(leaf):
+        if is_rowsparse(leaf):
+            return RowSparse(leaf.ids, leaf.rows.astype(jnp.float32) * s,
+                             leaf.num_rows)
+        return leaf.astype(jnp.float32) * s
+
+    return jax.tree.map(f, tree, is_leaf=is_rowsparse)
+
+
+def _densify_stacked(tree):
+    """Scatter per-client RowSparse leaves ``(K, R)`` back to dense ``(K, V)``."""
+    return jax.tree.map(
+        lambda l: jax.vmap(RowSparse.to_dense)(l) if is_rowsparse(l) else l,
+        tree, is_leaf=is_rowsparse)
+
+
+def _apply_plain(plain_params, update, eta: float):
+    """``X += eta * update`` leaf-wise, RowSparse leaves via scatter-add."""
+
+    def ap(p, u):
+        if is_rowsparse(u):
+            return apply_rowsparse(p, u, eta)
+        return p + (u * eta).astype(p.dtype)
+
+    return jax.tree.map(ap, plain_params, update)
+
+
+def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
+                     cfg: FedConfig, *, heat_counts: Optional[Dict] = None,
+                     total: Optional[float] = None,
+                     server_alg=None) -> Callable:
+    """Compile a :class:`RoundPlan` into the single jittable round step.
+
+    ``step(state, batch, sub_ids=None) -> (new_state, metrics)`` over a
+    ``ServerState``. ``batch`` carries the cohort data — flat ``(B, ...)``
+    for :class:`FedSgdLocal`, ``(K, I, B, ...)`` for the replicated locals —
+    plus, on the simulation entry point, the ``heat_*`` vectors.
+
+    ``heat_counts``/``total``: bake the heat statistics statically (the
+    trainer path); when omitted, counts are read from the batch's ``heat_*``
+    entries and ``total = cfg.num_clients`` (the simulation path).
+    ``sub_ids``: per-client submodel ids ``(K, capacity)`` (or the flat
+    union ``(capacity,)``); derived in-step from the batch's feature keys
+    when ``None``. ``server_alg``: pass an existing ``ServerAlgorithm`` so
+    the trainer's step applies through the exact object it initialised;
+    built on demand otherwise.
+
+    ``metrics`` always carries ``"loss"``; sparse transports add
+    ``"sub_rows"`` and ``"density"``.
+    """
+    local, transport, server = plan.local, plan.transport, plan.server
+    feature_keys = tuple(plan.feature_keys)
+    heat_spec = heat_spec_from_axes(boxed_params_template)
+    n_total = float(cfg.num_clients if total is None else total)
+    eta = cfg.server_lr
+    sparse = transport.sparse
+    static_heat = heat_counts is not None
+
+    # ---- static metadata + build-time validation --------------------------
+    paths = sparse_table_paths(heat_spec)
+    table_paths = [p for p, _ in paths]
+    plain_template = unbox(boxed_params_template)
+    vocabs = sorted({int(tree_leaf_at(plain_template, p).shape[0])
+                     for p in table_paths})
+    vocab = vocabs[-1] if vocabs else 0
+    if isinstance(local, SubmodelReplicatedLocal):
+        if not table_paths:
+            raise ValueError(
+                "submodel-replica local training needs at least one axis-0 "
+                "feature table")
+        if len(vocabs) != 1:
+            # one shared feature-id space is what lets a single per-client
+            # sub_ids vector cover every table's gradient support
+            raise ValueError(
+                f"submodel-replica feature tables disagree on vocab: {vocabs}")
+    if isinstance(local, FedSgdLocal) and not sparse:
+        if max(local.microbatches, 1) != max(cfg.microbatches, 1):
+            raise ValueError(
+                f"cfg.microbatches={cfg.microbatches} conflicts with "
+                f"FedSgdLocal(microbatches={local.microbatches}): an "
+                "explicit plan owns the knob — set it on the plan")
+    if sparse and isinstance(local, FedSgdLocal):
+        if max(local.microbatches, 1) > 1 or cfg.microbatches > 1:
+            raise ValueError(
+                "FedSgdLocal on the sparse transport computes one fused "
+                "cohort gradient: microbatches must be 1")
+        if len(table_paths) != 1:
+            # one table <-> one feature-id union is what keeps this path
+            # exact: with several tables a single batch union could not
+            # cover every table's gradient support (the replicated locals
+            # carry per-client sub_ids and handle multi-table models)
+            raise ValueError(
+                f"FedSgdLocal sparse mode supports exactly one axis-0 "
+                f"feature table, found {len(table_paths)}: {table_paths}")
+    if not server.stateless and server_alg is None:
+        acfg = dataclasses.replace(cfg, algorithm=server.algorithm)
+        server_alg = make_server_algorithm(acfg)
+    if server.stateless and not sparse and static_heat and server_alg is None:
+        # dense transport with baked heat: the ServerAlgorithm owns the
+        # correction (exactly the trainer's historical apply)
+        acfg = dataclasses.replace(cfg, algorithm=server.algorithm)
+        server_alg = make_server_algorithm(acfg, heat_spec=heat_spec,
+                                           heat_counts=heat_counts,
+                                           total=n_total)
+    base_key = jax.random.PRNGKey(cfg.seed + 17)  # int8 stochastic rounding
+
+    # ---- shared sub-plumbing ---------------------------------------------
+    def batch_counts(heat: Dict) -> Dict:
+        if static_heat:
+            return heat_counts
+        return {k[len("heat_"):]: v for k, v in heat.items()}
+
+    def derive_flat_ids(data: Dict) -> Array:
+        ids_size = sum(int(np.prod(data[k].shape)) for k in feature_keys)
+        capacity = round_capacity(vocab, ids_size)
+        return batch_union_ids(data, feature_keys, capacity)
+
+    def derive_cohort_ids(data: Dict) -> Array:
+        k = data[feature_keys[0]].shape[0]
+        feats = jnp.concatenate(
+            [jnp.asarray(data[fk]).reshape(k, -1) for fk in feature_keys],
+            axis=1)
+        capacity = round_capacity(vocab, feats.shape[1])
+        return jax.vmap(lambda f: unique_ids_padded(f, capacity))(feats)
+
+    def require_tables_for_ids():
+        if not table_paths or len(vocabs) != 1:
+            raise ValueError(
+                "in-step sub-id derivation needs feature tables sharing one "
+                f"axis-0 id space; found row counts {vocabs} — pass sub_ids "
+                "explicitly (as FederatedTrainer does)")
+
+    # ---- local step -------------------------------------------------------
+    # run_local(params, data, sub_ids) -> (update, forward_loss|None,
+    #                                      used_ids|None, data)
+    if isinstance(local, FedSgdLocal):
+        if sparse:
+            table_path = table_paths[0]
+
+            def run_local(params, data, sub_ids):
+                data = pin_labels(data, feature_keys[0])
+                if sub_ids is None:
+                    require_tables_for_ids()
+                    sub_ids = derive_flat_ids(data)
+                loss, grads = submodel_value_and_grad(
+                    loss_fn, params, data, table_path, feature_keys, sub_ids)
+                update = _scale_tree_f32(unbox(grads), -cfg.lr)
+                return update, loss, sub_ids, data
+        else:
+            nmb = max(local.microbatches, 1)
+
+            def run_local(params, data, sub_ids):
+                if nmb == 1:
+                    loss, grads = jax.value_and_grad(loss_fn)(params, data)
+                else:
+                    # gradient accumulation: cohort split into microbatches
+                    # so the live activation set stays within HBM at pod
+                    # scale. The batch axis is keyed on the entry NAME: only
+                    # "mrope_pos" carries a leading (3,) coordinate axis with
+                    # batch on axis 1 — keying on shape would misroute any
+                    # genuine batch-size-3 entry.
+                    def split(k, x):
+                        if x.ndim == 0:
+                            return x
+                        axis = 1 if k == "mrope_pos" else 0   # mrope (3,B,S)
+                        b = x.shape[axis]
+                        assert b % nmb == 0, (x.shape, nmb)
+                        xs = jnp.moveaxis(x, axis, 0).reshape(
+                            (nmb, b // nmb) + x.shape[:axis]
+                            + x.shape[axis + 1:])
+                        return xs
+
+                    # mrope needs its leading 3-axis restored per microbatch
+                    def restore(k, x):
+                        if k == "mrope_pos":
+                            return jnp.moveaxis(x, 1, 0)
+                        return x
+
+                    mb = {k: split(k, v) for k, v in data.items()}
+
+                    def acc_step(carry, mbatch):
+                        g_acc, l_acc = carry
+                        mbatch = {k: restore(k, v) for k, v in mbatch.items()}
+                        l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                        g32 = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                           g_acc, g)
+                        return (g32, l_acc + l), None
+
+                    g0 = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32),
+                        jax.tree.map(lambda x: x, params))
+                    (gsum, lsum), _ = jax.lax.scan(
+                        acc_step, (g0, jnp.zeros((), jnp.float32)), mb)
+                    grads = tree_scale(gsum, 1.0 / nmb)
+                    loss = lsum / nmb
+                update = tree_scale(grads, -cfg.lr)
+                return update, loss, None, data
+
+    elif isinstance(local, ReplicatedLocal):
+        local_train = make_local_trainer(loss_fn, cfg, prox_mu=local.prox_mu)
+
+        def run_local(params, data, sub_ids):
+            deltas = cohort_deltas(local_train, params, data)
+            if sparse:
+                if sub_ids is None:
+                    require_tables_for_ids()
+                    sub_ids = derive_cohort_ids(data)
+                deltas = encode_delta_tree(deltas, heat_spec, sub_ids)
+            return deltas, None, sub_ids, data
+
+    elif isinstance(local, SubmodelReplicatedLocal):
+        local_train = make_submodel_local_trainer(
+            loss_fn, cfg, table_paths, feature_keys, prox_mu=local.prox_mu)
+
+        def run_local(params, data, sub_ids):
+            data = pin_labels(data, feature_keys[0])
+            if sub_ids is None:
+                sub_ids = derive_cohort_ids(data)
+            deltas = cohort_submodel_deltas(local_train, params, data, sub_ids)
+            return deltas, None, sub_ids, data
+
+    else:
+        raise TypeError(f"unknown LocalStep: {local!r}")
+
+    # ---- the step ---------------------------------------------------------
+    def step(state: ServerState, batch: Dict, sub_ids: Optional[Array] = None):
+        params = state.params
+        heat, data = split_heat_batch(batch)
+        counts = batch_counts(heat)
+        update, fwd_loss, used_ids, data = run_local(params, data, sub_ids)
+
+        if sparse:
+            if transport.topk or transport.int8:
+                key = (jax.random.fold_in(base_key, state.rounds)
+                       if transport.int8 else None)
+                update = compress_delta_tree(update, topk=transport.topk,
+                                             int8=transport.int8, key=key)
+            if local.stacked:
+                k = data[feature_keys[0]].shape[0]
+                agg = sparse_cohort_aggregate(
+                    update, heat_spec, counts, n_total, k,
+                    correct=server.correct,
+                    union_backend=transport.union_backend)
+            else:
+                def fix(leaf, space):
+                    if is_rowsparse(leaf):
+                        h = (counts.get(space[0])
+                             if server.correct and space is not None else None)
+                        return correct_rowsparse(leaf, h, n_total)
+                    if server.correct:
+                        return correct_dense_leaf(leaf, space, counts, n_total)
+                    return leaf
+
+                agg = jax.tree.map(
+                    fix, update, heat_spec.leaf_spaces,
+                    is_leaf=lambda x: x is None or is_rowsparse(x))
+            if server.stateless:
+                plain = unbox(params)
+                new_plain = _apply_plain(plain, agg, eta)
+                new_state = ServerState(boxed_like(new_plain, params),
+                                        state.opt, state.rounds + 1)
+            else:
+                # stateful server optimizers consume the dense mean delta;
+                # densify once at the server boundary
+                dense = boxed_like(decode_delta_tree(agg), params)
+                new_state = server_alg.apply(state, dense)
+        else:
+            if isinstance(local, SubmodelReplicatedLocal):
+                # submodel replicas against a dense server transport: the
+                # born-sparse per-client deltas scatter back to dense stacks
+                update = _densify_stacked(update)
+            if local.stacked:
+                update = jax.tree.map(lambda d: d.mean(axis=0), update)
+                if isinstance(local, SubmodelReplicatedLocal):
+                    update = boxed_like(update, params)
+            if server_alg is not None:
+                new_state = server_alg.apply(state, update)
+            else:
+                corrected = (correct_update_tree(update, heat_spec, counts,
+                                                 n_total)
+                             if server.correct else update)
+                # cast back to each param's dtype before the add: the
+                # microbatch accumulator is f32, and bf16 params must not
+                # come back silently promoted
+                new_params = jax.tree.map(
+                    lambda p, c: p + c.astype(p.dtype) * eta,
+                    params, corrected)
+                new_state = ServerState(new_params, state.opt,
+                                        state.rounds + 1)
+
+        if local.stacked:
+            first = jax.tree.map(lambda x: x[:, 0], data)
+            loss = jax.vmap(lambda b: loss_fn(params, b))(first).mean()
+        else:
+            loss = fwd_loss
+        metrics = {"loss": loss}
+        if sparse and used_ids is not None and vocab:
+            sub_rows = (used_ids >= 0).sum()
+            denom = vocab if used_ids.ndim == 1 else used_ids.shape[0] * vocab
+            metrics["sub_rows"] = sub_rows
+            metrics["density"] = sub_rows / denom
+        return new_state, metrics
+
+    return step

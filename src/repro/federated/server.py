@@ -5,9 +5,17 @@
 aggregates deltas, applies the configured server algorithm, and tracks train
 loss / test metrics. CentralSGD (the paper's non-federated reference) shares
 the same interface.
+
+Since the RoundPlan redesign the trainer no longer re-derives the execution
+layout from ``FedConfig`` flags with its own branches: the flags resolve to a
+``repro.federated.plan.RoundPlan`` (``plan_from_config``), the jitted round
+step comes from the same ``build_round_step`` that backs ``make_round_step``,
+and an explicit ``plan=`` argument overrides the flag resolution entirely —
+one dispatch system, two entry points.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from dataclasses import dataclass, field
@@ -17,25 +25,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import tree_add, tree_path_keys, tree_scale
+from repro.common.pytree import tree_add, tree_scale
 from repro.configs.base import FedConfig
-from repro.core.aggregate import HeatSpec
 from repro.core.algorithms import ServerState, make_server_algorithm
 from repro.core.heat import HeatStats, estimate_heat_randomized_response
 from repro.data.batching import pooled_batches, sample_cohort_batch
 from repro.data.synthetic import FederatedDataset
-from repro.federated.client import (cohort_deltas, cohort_submodel_deltas,
-                                    make_local_trainer,
-                                    make_submodel_local_trainer)
+from repro.federated.plan import (RoundPlan, SubmodelReplicatedLocal,
+                                  build_round_step, heat_spec_from_axes,
+                                  plan_from_config, sparse_table_paths)
 from repro.federated.metrics import accuracy, auc
-from repro.federated.simulation import heat_spec_from_axes, sparse_table_paths
-from repro.sharding.logical import boxed_like, unbox
-from repro.sparse.aggregate import apply_rowsparse, sparse_cohort_aggregate
-from repro.sparse.comm import CommStats, round_comm_stats
-from repro.sparse.compress import (QuantRows, dequantize_rows,
-                                   quantize_tree_int8, topk_rows)
-from repro.sparse.encode import decode_delta_tree, encode_delta_tree
-from repro.sparse.rowsparse import is_rowsparse
+from repro.sharding.logical import unbox
+from repro.sparse.comm import CommStats, model_comm_meta
+from repro.sparse.encode import tree_leaf_at
 
 
 @dataclass
@@ -118,7 +120,8 @@ class FederatedTrainer:
     def __init__(self, ds: FederatedDataset, make_params: Callable,
                  loss_fn: Callable, cfg: FedConfig,
                  predict_fn: Optional[Callable] = None,
-                 metric: str = "auc", rng_seed: int = 0):
+                 metric: str = "auc", rng_seed: int = 0,
+                 plan: Optional[RoundPlan] = None):
         self.ds = ds
         self.cfg = cfg
         self.loss_fn = loss_fn
@@ -136,15 +139,32 @@ class FederatedTrainer:
         self.alg = make_server_algorithm(cfg, heat_spec=heat_spec,
                                          heat_counts=heat_counts, total=total)
         self.state = self.alg.init(params)
+        self.history: List[RoundRecord] = []
+        self.comm_log: List[CommStats] = []
+        self._rounds_run = 0
+        self._last_capacity: Optional[int] = None   # last sparse sub-id bucket
+        self.plan: Optional[RoundPlan] = None
+        self._sparse_local: Optional[str] = None
+        self._sparse_paths: List = []
+        self._is_sparse = False
 
         if cfg.algorithm == "central":
+            if plan is not None:
+                raise ValueError("central training takes no RoundPlan")
             self._central_step = jax.jit(self._make_central_step())
-        elif cfg.sparse:
+            return
+
+        self.plan = self._resolve_trainer_plan(params, plan)
+        self._is_sparse = self.plan.transport.sparse
+        round_step = build_round_step(self.plan, loss_fn, params, cfg,
+                                      heat_counts=heat_counts, total=total,
+                                      server_alg=self.alg)
+        if self._is_sparse:
             # jit caches one trace per sub_ids capacity (kept to O(log V)
             # variants by pow2_capacity bucketing); ServerState buffers are
             # donated through the step so the table is updated in place
-            self._prepare_sparse_plane(params)
-            round_step = self._make_sparse_round_step()
+            self._comm_meta = model_comm_meta(unbox(params),
+                                              set(self._sparse_paths))
             self._sparse_step = jax.jit(round_step, donate_argnums=(0,))
 
             def engine(state, cohorts, sub_ids):
@@ -155,11 +175,55 @@ class FederatedTrainer:
 
             self._sparse_engine = jax.jit(engine, donate_argnums=(0,))
         else:
-            self._round_step = jax.jit(self._make_round_step())
-        self.history: List[RoundRecord] = []
-        self.comm_log: List[CommStats] = []
-        self._rounds_run = 0
-        self._last_capacity: Optional[int] = None   # last sparse sub-id bucket
+            self._round_step = jax.jit(round_step)
+
+    # ------------------------------------------------------------------
+    def _resolve_trainer_plan(self, params,
+                              plan: Optional[RoundPlan]) -> RoundPlan:
+        """Resolve FedConfig flags (or validate an explicit plan) against the
+        model/dataset: which leaves ride the sparse plane, whether submodel
+        replicas are gatherable, and which batch keys carry feature ids."""
+        keys = [self.ds.feature_key]
+        if self.ds.feature_key == "hist" and "target" in self.ds.client_data:
+            keys.append("target")
+        self._feature_batch_keys = keys
+        ordered_paths = [p for p, _ in sparse_table_paths(self._heat_spec)]
+        self._sparse_paths = ordered_paths
+        plain = unbox(params)
+        table_rows = [int(tree_leaf_at(plain, p).shape[0])
+                      for p in ordered_paths]
+        # gathered submodel replicas need every feature table keyed by the
+        # dataset's id space (sub_ids index rows)
+        gatherable = (bool(ordered_paths)
+                      and all(r == self.ds.num_features for r in table_rows))
+        if plan is None:
+            plan = plan_from_config(self.cfg, feature_keys=tuple(keys),
+                                    gatherable=gatherable)
+        else:
+            if plan.server.algorithm != self.cfg.algorithm:
+                raise ValueError(
+                    f"plan.server.algorithm={plan.server.algorithm!r} "
+                    f"disagrees with cfg.algorithm={self.cfg.algorithm!r}: "
+                    "the trainer's server state is built from the config")
+            if not plan.local.stacked:
+                raise ValueError(
+                    f"{type(plan.local).__name__} consumes a flat pooled "
+                    "batch, but FederatedTrainer samples stacked "
+                    "(K, I, B, ...) cohorts with per-client sub_ids — drive "
+                    "flat plans through make_round_step/build_round_step")
+            # the dataset, not the caller, knows which batch keys carry
+            # feature ids — rebind so submodel remapping stays correct
+            plan = dataclasses.replace(plan, feature_keys=tuple(keys))
+        submodel = isinstance(plan.local, SubmodelReplicatedLocal)
+        if submodel and not gatherable:
+            raise ValueError(
+                "SubmodelReplicatedLocal (sparse_local='sparse_replicated') "
+                f"needs axis-0 feature tables of {self.ds.num_features} rows; "
+                f"found {table_rows}")
+        if plan.transport.sparse:
+            self._sparse_local = ("sparse_replicated" if submodel
+                                  else "replicated")
+        return plan
 
     # ------------------------------------------------------------------
     def _resolve_heat(self, ds: FederatedDataset, cfg: FedConfig) -> HeatStats:
@@ -200,123 +264,6 @@ class FederatedTrainer:
         return HeatStats(counts=np.asarray(counts, np.float64), total=float(total),
                          name="vocab")
 
-    # ------------------------------------------------------------------
-    def _make_round_step(self):
-        local_train = make_local_trainer(self.loss_fn, self.cfg)
-
-        def round_step(state: ServerState, cohort_batch):
-            deltas = cohort_deltas(local_train, state.params, cohort_batch)
-            mean_delta = jax.tree.map(lambda d: d.mean(axis=0), deltas)
-            new_state = self.alg.apply(state, mean_delta)
-            # monitoring loss: first minibatch of each client under old params
-            first = jax.tree.map(lambda x: x[:, 0], cohort_batch)
-            loss = jax.vmap(lambda b: self.loss_fn(state.params, b))(first).mean()
-            return new_state, loss
-
-        return round_step
-
-    # ------------------------------------------------------------------
-    # sparse submodel update plane (repro.sparse)
-    # ------------------------------------------------------------------
-    def _prepare_sparse_plane(self, params):
-        """Precompute static metadata and resolve the sparse local mode."""
-        plain = unbox(params)
-        ordered_paths = [p for p, _ in sparse_table_paths(self._heat_spec)]
-        sparse_paths = set(ordered_paths)
-        dense_bytes = sparse_static = row_payload = 0.0
-        row_elems = 0
-        table_rows = []
-        for path, leaf in jax.tree_util.tree_flatten_with_path(plain)[0]:
-            nbytes = float(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
-            dense_bytes += nbytes
-            if tree_path_keys(path) in sparse_paths:
-                row_payload += nbytes / leaf.shape[0]
-                row_elems += int(np.prod(leaf.shape)) // leaf.shape[0]
-                table_rows.append(int(leaf.shape[0]))
-            else:
-                sparse_static += nbytes
-        self._comm_meta = (dense_bytes, sparse_static, row_payload, row_elems)
-        keys = [self.ds.feature_key]
-        if self.ds.feature_key == "hist" and "target" in self.ds.client_data:
-            keys.append("target")
-        self._feature_batch_keys = keys
-        self._sparse_paths = ordered_paths
-        # local-training replica layout: gathered submodel replicas need every
-        # feature table keyed by the dataset's id space (sub_ids index rows)
-        gatherable = (bool(ordered_paths)
-                      and all(r == self.ds.num_features for r in table_rows))
-        mode = self.cfg.sparse_local
-        if mode not in ("auto", "replicated", "sparse_replicated"):
-            raise ValueError(f"unknown sparse_local mode: {mode!r}")
-        if mode == "auto":
-            mode = "sparse_replicated" if gatherable else "replicated"
-        elif mode == "sparse_replicated" and not gatherable:
-            raise ValueError(
-                "sparse_local='sparse_replicated' needs axis-0 feature tables "
-                f"of {self.ds.num_features} rows; found {table_rows}")
-        self._sparse_local = mode
-
-    def _make_sparse_round_step(self):
-        cfg = self.cfg
-        correct = cfg.algorithm == "fedsubavg"
-        sparse_apply = cfg.algorithm in ("fedavg", "fedprox", "fedsubavg")
-        eta = cfg.server_lr
-        base_key = jax.random.PRNGKey(cfg.seed + 17)
-        submodel = self._sparse_local == "sparse_replicated"
-        if submodel:
-            local_train = make_submodel_local_trainer(
-                self.loss_fn, cfg, self._sparse_paths,
-                self._feature_batch_keys)
-        else:
-            local_train = make_local_trainer(self.loss_fn, cfg)
-
-        def round_step(state: ServerState, cohort_batch, sub_ids):
-            if submodel:
-                # each client trains its gathered submodel; deltas are born
-                # RowSparse on sub_ids — no dense (K, V, D) stack, no encode
-                enc = cohort_submodel_deltas(local_train, state.params,
-                                             cohort_batch, sub_ids)
-            else:
-                deltas = cohort_deltas(local_train, state.params, cohort_batch)
-                enc = encode_delta_tree(deltas, self._heat_spec, sub_ids)
-            if cfg.sparse_topk:
-                enc = jax.tree.map(
-                    lambda l: jax.vmap(lambda rs: topk_rows(rs, cfg.sparse_topk))(l)
-                    if is_rowsparse(l) else l, enc, is_leaf=is_rowsparse)
-            if cfg.sparse_int8:
-                key = jax.random.fold_in(base_key, state.rounds)
-                enc = jax.tree.map(
-                    lambda l: dequantize_rows(l)
-                    if isinstance(l, QuantRows) else l,
-                    quantize_tree_int8(enc, key),
-                    is_leaf=lambda x: isinstance(x, QuantRows))
-            agg = sparse_cohort_aggregate(
-                enc, self._heat_spec, self._heat_counts, self.heat.total,
-                cfg.clients_per_round, correct=correct)
-            if sparse_apply:
-                # FedAvg/FedSubAvg server: scatter-add the union rows; the
-                # heat correction is already fused into the aggregate.
-                plain = unbox(state.params)
-
-                def ap(p, u):
-                    if is_rowsparse(u):
-                        return apply_rowsparse(p, u, eta)
-                    return p + (u * eta).astype(p.dtype)
-
-                new_plain = jax.tree.map(ap, plain, agg)
-                new_params = boxed_like(new_plain, state.params)
-                new_state = ServerState(new_params, state.opt, state.rounds + 1)
-            else:
-                # stateful server optimizers (scaffold/fedadam) consume the
-                # dense mean delta; densify once at the server boundary
-                dense = boxed_like(decode_delta_tree(agg), state.params)
-                new_state = self.alg.apply(state, dense)
-            first = jax.tree.map(lambda x: x[:, 0], cohort_batch)
-            loss = jax.vmap(lambda b: self.loss_fn(state.params, b))(first).mean()
-            return new_state, loss
-
-        return round_step
-
     def _sample_sparse_cohort(self):
         """One round's host work: sample the cohort and stack its feature ids.
 
@@ -337,31 +284,17 @@ class FederatedTrainer:
     def _log_sparse_comm(self, valid_counts: np.ndarray, capacity: int):
         """Comm accounting for one sparse round from per-client sub-id counts.
 
-        Uplink: top-k keeps exactly min(k, valid) delta rows per client.
-        Downlink prices what the execution actually ships: in
-        ``sparse_replicated`` mode each client receives its gathered
-        ``capacity``-row submodel buffer (clamped to the table size — the
-        pow2 bucket may exceed V, but the padding slots past the table are
-        never materialised on the wire); in dense-replica mode each client
-        receives the full feature table. The dense baseline carries the
-        ``local_iters`` factor (the I=1 dense protocol re-ships the model
-        every local step).
+        The pricing itself lives on the plan's transport
+        (``RowSparseTransport.round_comm``); this method feeds it the
+        trainer's host-side metadata: the model's byte geometry, the round's
+        sub-id counts, and whether the downlink ships gathered submodel
+        buffers (submodel-replica local training) or the full table.
         """
-        cfg = self.cfg
-        k = len(valid_counts)
-        up_counts = (np.minimum(valid_counts, cfg.sparse_topk)
-                     if cfg.sparse_topk else valid_counts)
-        down_counts = np.full(
-            k, min(capacity, self.ds.num_features)
-            if self._sparse_local == "sparse_replicated"
-            else self.ds.num_features)
-        dense_bytes, sparse_static, row_payload, row_elems = self._comm_meta
-        self.comm_log.append(round_comm_stats(
-            self._rounds_run, dense_bytes, sparse_static, row_payload,
-            valid_counts, self.ds.num_features, int8=cfg.sparse_int8,
-            row_elems=row_elems, uplink_rows_per_client=up_counts,
-            downlink_rows_per_client=down_counts,
-            local_iters=cfg.local_iters))
+        self.comm_log.append(self.plan.transport.round_comm(
+            self._rounds_run, self._comm_meta, valid_counts,
+            self.ds.num_features, capacity=capacity,
+            submodel_downlink=self._sparse_local == "sparse_replicated",
+            local_iters=self.cfg.local_iters))
 
     def _run_sparse_round(self) -> float:
         cohort, feats = self._sample_sparse_cohort()
@@ -371,10 +304,10 @@ class FederatedTrainer:
         capacity = pow2_capacity(int(valid_counts.max()))
         sub_ids = derive_sub_ids(feats, self.ds.num_features, capacity)
         cohort = {k: jnp.asarray(v) for k, v in cohort.items()}
-        self.state, loss = self._sparse_step(self.state, cohort, sub_ids)
+        self.state, metrics = self._sparse_step(self.state, cohort, sub_ids)
         self._last_capacity = capacity
         self._log_sparse_comm(valid_counts, capacity)
-        return float(loss)
+        return float(metrics["loss"])
 
     def run_rounds(self, n: int) -> List[float]:
         """Drive ``n`` rounds through the in-jit engine (one ``lax.scan``).
@@ -396,7 +329,7 @@ class FederatedTrainer:
         if n <= 0:
             return []
         cfg = self.cfg
-        if cfg.algorithm == "central" or not cfg.sparse:
+        if cfg.algorithm == "central" or not self._is_sparse:
             return [self.run_round() for _ in range(n)]
         k = cfg.clients_per_round
         cohorts, feats = [], []
@@ -412,8 +345,8 @@ class FederatedTrainer:
         capacity = pow2_capacity(int(valid_counts.max()))
         sub_ids = derive_sub_ids(flat_feats, self.ds.num_features,
                                  capacity).reshape(n, k, capacity)
-        self.state, losses = self._sparse_engine(self.state, stacked, sub_ids)
-        losses = np.asarray(losses)
+        self.state, metrics = self._sparse_engine(self.state, stacked, sub_ids)
+        losses = np.asarray(metrics["loss"])
         self._last_capacity = capacity
         for r in range(n):
             self._rounds_run += 1
@@ -442,15 +375,15 @@ class FederatedTrainer:
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
             self.state, loss = self._central_step(self.state, batches)
             return float(loss)
-        if cfg.sparse:
+        if self._is_sparse:
             return self._run_sparse_round()
         ids = self.np_rng.choice(self.ds.num_clients, size=cfg.clients_per_round,
                                  replace=False)
         cohort = sample_cohort_batch(self.ds, ids, cfg.local_iters, cfg.local_batch,
                                      self.np_rng)
         cohort = {k: jnp.asarray(v) for k, v in cohort.items()}
-        self.state, loss = self._round_step(self.state, cohort)
-        return float(loss)
+        self.state, metrics = self._round_step(self.state, cohort)
+        return float(metrics["loss"])
 
     def evaluate(self) -> float:
         if self.predict_fn is None:

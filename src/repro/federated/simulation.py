@@ -1,104 +1,58 @@
 """Pod-scale federated simulation: the jitted round step the dry-run lowers.
 
-At LLM scale a cohort client's local data is one (or a few) sequences and the
-cohort is sharded across the ``data`` mesh axis. Four modes:
+``make_round_step`` is the (params, batch) -> (params, metrics) entry point;
+since the RoundPlan redesign it is a thin alias layer over
+``repro.federated.plan``: every mode string resolves to the RoundPlan
+composition that reproduces the historical branch (``resolve_plan``), and
+``build_round_step`` compiles it. The four string modes:
 
 ``fedsgd`` (default for the big architectures): I = 1 local step, so the
     cohort-mean delta equals ``-lr * grad`` of the cohort-mean loss — no
     per-client model replicas are needed. This is exactly Algorithm 1 with
     I=1; the FedSubAvg correction applies verbatim.
+    = RoundPlan(FedSgdLocal(microbatches), DenseTransport(), ...)
 
 ``replicated``: true I>1 local SGD with per-client parameter replicas
     (vmap). Memory scales with clients-in-flight x model size, so this is for
     models that fit K replicas (the paper's own models, or ~100M LMs in the
     examples); the dry-run uses fedsgd. This memory wall is real in
     production too — documented in DESIGN.md.
+    = RoundPlan(ReplicatedLocal(), DenseTransport(), ...)
 
 ``sparse``: fedsgd semantics on the row-sparse update plane — the feature
     table's dense gradient never exists (gather-before-backward).
+    = RoundPlan(FedSgdLocal(), RowSparseTransport(), ...)
 
 ``sparse_replicated``: the paper's actual protocol — I>1 local SGD where
     each client's replica is its *submodel* only (gathered ``(capacity, D)``
     feature rows + dense leaves), deltas emitted RowSparse. Breaks the
     ``replicated`` memory wall: K * capacity * D instead of K * V * D.
+    = RoundPlan(SubmodelReplicatedLocal(), RowSparseTransport(), ...)
 
-The FedSubAvg correction consults the boxed parameters' logical axes: any
-leaf with a "vocab" axis is feature-keyed by token id; any "experts" axis is
-keyed by expert id (our beyond-paper extension of heat to MoE experts).
+``mode`` also accepts a ``RoundPlan`` directly, which opens every other
+composition the strings never expressed (e.g. ``RowSparseTransport(topk=8)``
+under the fedsgd sparse path). The FedSubAvg correction consults the boxed
+parameters' logical axes: any leaf with a "vocab" axis is feature-keyed by
+token id; any "experts" axis is keyed by expert id (our beyond-paper
+extension of heat to MoE experts).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Callable
 
-import jax
 import jax.numpy as jnp
 
-from repro.common.pytree import tree_add, tree_path_keys, tree_scale
 from repro.configs.base import FedConfig
-from repro.core.aggregate import HeatSpec, correct_dense_leaf, correct_update_tree
-from repro.federated.client import (cohort_deltas, cohort_submodel_deltas,
-                                    make_local_trainer,
-                                    make_submodel_local_trainer)
-from repro.sharding.logical import axes_tree, boxed_like, unbox
-from repro.sparse.aggregate import (apply_rowsparse, heat_factor_at,
-                                    sparse_cohort_aggregate)
-from repro.sparse.encode import (DEFAULT_SPARSE_SPACES, batch_union_ids,
-                                 sparse_eligible, submodel_value_and_grad,
-                                 tree_leaf_at)
-from repro.sparse.rowsparse import is_rowsparse, unique_ids_padded
-
-
-def heat_spec_from_axes(boxed_params,
-                        spaces: Dict[str, str] = None) -> HeatSpec:
-    """Derive the HeatSpec from Param logical axes.
-
-    spaces maps logical axis name -> heat space name; default:
-    "vocab" axis -> "vocab" space, "experts" axis -> "expert" space.
-    """
-    spaces = spaces or {"vocab": "vocab", "experts": "expert"}
-    axes = axes_tree(boxed_params)
-
-    def is_axes(x):
-        return x is None or (isinstance(x, tuple)
-                             and all(e is None or isinstance(e, str) for e in x))
-
-    def leaf_space(ax):
-        if ax is None:
-            return None
-        for i, name in enumerate(ax):
-            if name in spaces:
-                return (spaces[name], i)
-        return None
-
-    return HeatSpec(jax.tree.map(leaf_space, axes, is_leaf=is_axes))
-
-
-def _is_space(x) -> bool:
-    return x is None or (isinstance(x, tuple) and len(x) == 2
-                         and isinstance(x[0], str) and isinstance(x[1], int))
-
-
-def sparse_table_paths(heat_spec: HeatSpec, spaces=None):
-    """Paths of the leaves that ride the sparse plane (axis-0 feature tables)."""
-    if spaces is None:
-        spaces = DEFAULT_SPARSE_SPACES
-    flat, _ = jax.tree_util.tree_flatten_with_path(heat_spec.leaf_spaces,
-                                                   is_leaf=_is_space)
-    return [(tree_path_keys(path), space) for path, space in flat
-            if sparse_eligible(space, spaces)]
-
-
-def round_capacity(vocab: int, ids_size: int, align: int = 8) -> int:
-    """Union-id capacity for one sparse round step.
-
-    ``min(vocab, ids_size)`` rounded up to a multiple of ``align`` for tiling,
-    then clamped back to ``vocab`` — the rounding must never allocate union
-    slots past the feature table (e.g. V=50257 would otherwise get 50264
-    slots, gathering rows that don't exist in the table's id space).
-    """
-    cap = min(int(vocab), int(ids_size))
-    cap += (-cap) % align
-    return min(cap, int(vocab))
+from repro.core.algorithms import ServerState
+from repro.federated.plan import (  # noqa: F401 (historical re-exports)
+    RoundPlan,
+    build_round_step,
+    heat_spec_from_axes,
+    resolve_plan,
+    round_capacity,
+    sparse_table_paths,
+    split_heat_batch,
+)
 
 
 def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
@@ -110,216 +64,41 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
 
     ``batch`` carries the cohort data plus the static heat vectors
     (``heat_vocab``, and ``heat_expert`` for MoE). ``correct=False`` gives the
-    FedAvg baseline under the identical execution path.
+    FedAvg baseline under the identical execution path. ``mode`` is a legacy
+    string alias or an explicit :class:`repro.federated.plan.RoundPlan`;
+    both compile through :func:`repro.federated.plan.build_round_step`.
+
+    This entry point is stateless — it threads bare parameters, not a
+    ``ServerState`` — so plans with stateful server optimizers (scaffold /
+    fedadam) must run under ``FederatedTrainer`` or ``build_round_step``.
     """
-    heat_spec = heat_spec_from_axes(boxed_params_template)
+    plan = resolve_plan(mode, cfg, correct=correct, feature_key=feature_key)
+    if not plan.server.stateless:
+        raise ValueError(
+            f"make_round_step is stateless; ServerUpdate("
+            f"{plan.server.algorithm!r}) carries optimizer slots — drive "
+            f"this plan through FederatedTrainer or build_round_step")
+    step = build_round_step(plan, loss_fn, boxed_params_template, cfg)
+    int8 = getattr(plan.transport, "int8", False)
 
-    def apply_correction(delta, batch):
-        if not correct:
-            return delta
-        counts = {"vocab": batch["heat_vocab"]}
-        if "heat_expert" in batch:
-            counts["expert"] = batch["heat_expert"]
-        # spaces without stats (e.g. expert heat disabled) pass through, factor 1
-        return correct_update_tree(delta, heat_spec, counts, float(cfg.num_clients))
+    def round_step(params, batch):
+        # the int8 transport keys its stochastic rounding off
+        # ``ServerState.rounds``; this wrapper is stateless, so a constant
+        # would draw the SAME rounding noise every round. Seed the counter
+        # with a batch fingerprint instead: distinct cohorts draw
+        # independent noise (and reruns on the same cohort stay
+        # deterministic).
+        rounds = jnp.zeros((), jnp.int32)
+        if int8:
+            entropy = jnp.zeros((), jnp.uint32)
+            for k in plan.feature_keys:
+                if k in batch:
+                    entropy += jnp.sum(batch[k].astype(jnp.uint32))
+            # 31 bits: fold_in consumes the value as PRNG data; keep it a
+            # valid non-negative int32 counter
+            rounds = (entropy & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+        state = ServerState(params, (), rounds)
+        new_state, metrics = step(state, batch)
+        return new_state.params, metrics
 
-    if mode == "fedsgd":
-        nmb = max(cfg.microbatches, 1)
-
-        def round_step(params, batch):
-            heat = {k: v for k, v in batch.items() if k.startswith("heat_")}
-            data = {k: v for k, v in batch.items() if not k.startswith("heat_")}
-            if nmb == 1:
-                loss, grads = jax.value_and_grad(loss_fn)(params, data)
-            else:
-                # gradient accumulation: cohort split into microbatches so the
-                # live activation set stays within HBM at pod scale. The batch
-                # axis is keyed on the entry NAME: only "mrope_pos" carries a
-                # leading (3,) coordinate axis with batch on axis 1 — keying
-                # on shape would misroute any genuine batch-size-3 entry.
-                def split(k, x):
-                    if x.ndim == 0:
-                        return x
-                    axis = 1 if k == "mrope_pos" else 0      # mrope (3,B,S)
-                    b = x.shape[axis]
-                    assert b % nmb == 0, (x.shape, nmb)
-                    xs = jnp.moveaxis(x, axis, 0).reshape(
-                        (nmb, b // nmb) + x.shape[:axis] + x.shape[axis + 1:])
-                    return xs
-
-                # mrope needs its leading 3-axis restored per microbatch
-                def restore(k, x):
-                    if k == "mrope_pos":
-                        return jnp.moveaxis(x, 1, 0)
-                    return x
-
-                mb = {k: split(k, v) for k, v in data.items()}
-
-                def acc_step(carry, mbatch):
-                    g_acc, l_acc = carry
-                    mbatch = {k: restore(k, v) for k, v in mbatch.items()}
-                    l, g = jax.value_and_grad(loss_fn)(params, mbatch)
-                    g32 = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
-                    return (g32, l_acc + l), None
-
-                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                  jax.tree.map(lambda x: x, params))
-                (gsum, lsum), _ = jax.lax.scan(acc_step, (g0, jnp.zeros((), jnp.float32)), mb)
-                grads = tree_scale(gsum, 1.0 / nmb)
-                loss = lsum / nmb
-            delta = tree_scale(grads, -cfg.lr)
-            corrected = apply_correction(delta, {**heat})
-            new = jax.tree.map(lambda p, c: (p + c.astype(p.dtype) * cfg.server_lr),
-                               params, corrected)
-            return new, {"loss": loss}
-
-        return round_step
-
-    if mode == "sparse":
-        # fedsgd semantics on the sparse update plane: the feature-table
-        # update is computed, corrected, and applied in (ids, rows) form —
-        # the dense (V, D) delta never exists. Gather-before-backward (the
-        # submodel swap in repro.sparse.encode) is used when the model has a
-        # single axis-0 feature table, which covers the LM zoo; otherwise
-        # dense grads are encoded post-hoc (still exact: lookup-table grads
-        # are supported on the batch ids).
-        assert cfg.microbatches <= 1, "sparse mode composes with microbatches=1"
-        paths = sparse_table_paths(heat_spec)
-        if len(paths) != 1:
-            # one table <-> one feature key is what keeps this path exact:
-            # with several tables the single batch_union_ids could not cover
-            # every table's gradient support (FederatedTrainer's sparse path
-            # handles multi-key models; it derives ids per client host-side)
-            raise ValueError(
-                f"sparse mode supports exactly one axis-0 feature table, "
-                f"found {len(paths)}: {[p for p, _ in paths]}")
-        n_total = float(cfg.num_clients)
-        plain_template = unbox(boxed_params_template)
-        vocab = int(tree_leaf_at(plain_template, paths[0][0]).shape[0])
-
-        def round_step(params, batch):
-            heat = {k: v for k, v in batch.items() if k.startswith("heat_")}
-            data = {k: v for k, v in batch.items() if not k.startswith("heat_")}
-            tokens = data[feature_key]
-            if "labels" not in data and tokens.ndim == 2:
-                # pin CE targets to the ORIGINAL token ids before the
-                # submodel swap remaps them to row slots (every LM family's
-                # loss falls back to next-token targets from batch["tokens"])
-                data = {**data,
-                        "labels": jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))}
-            capacity = round_capacity(vocab, tokens.size)
-            ids = batch_union_ids(data, (feature_key,), capacity)
-            loss, grads = submodel_value_and_grad(
-                loss_fn, params, data, paths[0][0], (feature_key,), ids)
-
-            plain_params = unbox(params)
-            plain_grads = unbox(grads)
-
-            def apply_leaf(p, g, space):
-                if is_rowsparse(g):
-                    if correct:
-                        factor = heat_factor_at(heat[f"heat_{space[0]}"],
-                                                g.ids, n_total)
-                    else:
-                        factor = jnp.where(g.ids >= 0, 1.0, 0.0)
-                    bshape = factor.shape + (1,) * (g.rows.ndim - 1)
-                    rows = (g.rows.astype(jnp.float32)
-                            * factor.reshape(bshape) * (-cfg.lr) * cfg.server_lr)
-                    safe = jnp.where(g.ids >= 0, g.ids, g.num_rows)
-                    return p.at[safe].add(rows.astype(p.dtype), mode="drop")
-                delta = g.astype(jnp.float32) * (-cfg.lr)
-                if correct:
-                    counts = {k[len("heat_"):]: v for k, v in heat.items()}
-                    delta = correct_dense_leaf(delta, space, counts, n_total)
-                return p + delta.astype(p.dtype) * cfg.server_lr
-
-            new_plain = jax.tree.map(apply_leaf, plain_params, plain_grads,
-                                     heat_spec.leaf_spaces)
-            new = boxed_like(new_plain, params)
-            sub_rows = (ids >= 0).sum()
-            metrics = {"loss": loss, "sub_rows": sub_rows,
-                       "density": sub_rows / vocab}
-            return new, metrics
-
-        return round_step
-
-    if mode == "replicated":
-        local_train = make_local_trainer(loss_fn, cfg)
-
-        def round_step(params, batch):
-            data = {k: v for k, v in batch.items() if not k.startswith("heat_")}
-            deltas = cohort_deltas(local_train, params, data)
-            mean_delta = jax.tree.map(lambda d: d.mean(axis=0), deltas)
-            corrected = apply_correction(mean_delta, batch)
-            new = tree_add(params, tree_scale(corrected, cfg.server_lr))
-            first = jax.tree.map(lambda x: x[:, 0], data)
-            loss = jax.vmap(lambda b: loss_fn(params, b))(first).mean()
-            return new, {"loss": loss}
-
-        return round_step
-
-    if mode == "sparse_replicated":
-        # replicated (true I>1 local SGD) on per-client SUBMODEL replicas:
-        # each client's replica holds the gathered (capacity, D) rows of the
-        # feature tables at its own batch ids plus the dense leaves, so the
-        # cohort costs K * capacity * D of feature-table HBM instead of the
-        # K * V * D dense-replica wall. Deltas come out RowSparse and feed
-        # aggregate_rowsparse directly — the dense (K, V, D) stack and the
-        # dense (V, D) mean never exist. Math matches mode="replicated" to
-        # f32 tolerance for lookup-table models (tested).
-        paths = sparse_table_paths(heat_spec)
-        if not paths:
-            raise ValueError(
-                "sparse_replicated needs at least one axis-0 feature table")
-        plain_template = unbox(boxed_params_template)
-        vocabs = {int(tree_leaf_at(plain_template, p).shape[0])
-                  for p, _ in paths}
-        if len(vocabs) != 1:
-            # one shared feature-id space is what lets a single per-client
-            # sub_ids vector cover every table's gradient support
-            raise ValueError(
-                f"sparse_replicated feature tables disagree on vocab: {vocabs}")
-        vocab = vocabs.pop()
-        n_total = float(cfg.num_clients)
-        table_paths = [p for p, _ in paths]
-        local_train = make_submodel_local_trainer(loss_fn, cfg, table_paths,
-                                                  (feature_key,))
-
-        def round_step(params, batch):
-            heat = {k: v for k, v in batch.items() if k.startswith("heat_")}
-            data = {k: v for k, v in batch.items() if not k.startswith("heat_")}
-            tokens = data[feature_key]                       # (K, I, B, ...)
-            if "labels" not in data and tokens.ndim == 4:
-                # pin CE targets to the ORIGINAL token ids before the
-                # submodel gather remaps them to row slots (same rule as
-                # mode="sparse")
-                data = {**data, "labels": jnp.pad(
-                    tokens[..., 1:], ((0, 0), (0, 0), (0, 0), (0, 1)))}
-            k = tokens.shape[0]
-            per_client = 1
-            for d in tokens.shape[1:]:
-                per_client *= int(d)
-            capacity = round_capacity(vocab, per_client)
-            sub_ids = jax.vmap(
-                lambda f: unique_ids_padded(f, capacity))(tokens.reshape(k, -1))
-            deltas = cohort_submodel_deltas(local_train, params, data, sub_ids)
-            counts = {name[len("heat_"):]: v for name, v in heat.items()}
-            agg = sparse_cohort_aggregate(deltas, heat_spec, counts, n_total,
-                                          k, correct=correct)
-            plain = unbox(params)
-
-            def ap(p, u):
-                if is_rowsparse(u):
-                    return apply_rowsparse(p, u, cfg.server_lr)
-                return p + (u * cfg.server_lr).astype(p.dtype)
-
-            new = boxed_like(jax.tree.map(ap, plain, agg), params)
-            first = jax.tree.map(lambda x: x[:, 0], data)
-            loss = jax.vmap(lambda b: loss_fn(params, b))(first).mean()
-            sub_rows = (sub_ids >= 0).sum()
-            return new, {"loss": loss, "sub_rows": sub_rows,
-                         "density": sub_rows / (k * vocab)}
-
-        return round_step
-
-    raise ValueError(mode)
+    return round_step

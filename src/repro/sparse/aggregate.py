@@ -44,6 +44,23 @@ def heat_factor_at(heat: Array, ids: Array, total: float,
     return jnp.where(ids >= 0, f * scale, 0.0)
 
 
+def correct_rowsparse(rs: RowSparse, heat: Optional[Array], total: float,
+                      scale: float = 1.0) -> RowSparse:
+    """Scale an unbatched RowSparse by ``scale * N / n_m`` (heat given) or by
+    ``scale`` with padding rows zeroed (heat ``None`` — the FedAvg baseline).
+
+    The RowSparse twin of ``correct_dense_leaf``: both sparse server paths
+    (fused aggregation and the flat fedsgd-on-sparse plan) route through it,
+    so the correction can never drift between them.
+    """
+    if heat is not None:
+        factor = heat_factor_at(jnp.asarray(heat), rs.ids, total, scale)
+    else:
+        factor = jnp.where(rs.ids >= 0, scale, 0.0)
+    bshape = factor.shape + (1,) * (rs.rows.ndim - rs.ids.ndim)
+    return RowSparse(rs.ids, rs.rows * factor.reshape(bshape), rs.num_rows)
+
+
 #: dense-bitmap union is O(V) vectorised work and V bits of scratch — the
 #: fast path whenever the feature space fits comfortably in cache-adjacent
 #: memory; beyond this the O(T log T) sort path takes over.
@@ -131,13 +148,8 @@ def aggregate_rowsparse(stacked: RowSparse, heat: Optional[Array] = None,
     union, pos = _union_and_slots(flat_ids, stacked.num_rows, cap, union_backend)
     summed = jnp.zeros((cap,) + tuple(flat_rows.shape[1:]), jnp.float32)
     summed = summed.at[pos].add(flat_rows.astype(jnp.float32), mode="drop")
-
-    if heat is not None:
-        factor = heat_factor_at(jnp.asarray(heat), union, total, scale)
-    else:
-        factor = jnp.where(union >= 0, scale, 0.0)
-    summed = summed * factor.reshape((cap,) + (1,) * (summed.ndim - 1))
-    return RowSparse(union, summed, stacked.num_rows)
+    return correct_rowsparse(RowSparse(union, summed, stacked.num_rows),
+                             heat, total, scale)
 
 
 def aggregate_rowsparse_dense(stacked: RowSparse, heat: Array, total: float,
@@ -167,7 +179,8 @@ def aggregate_rowsparse_dense(stacked: RowSparse, heat: Array, total: float,
 def sparse_cohort_aggregate(updates, heat_spec: HeatSpec,
                             heat_counts: Dict[str, Array], total: float,
                             num_clients_in_cohort: int, correct: bool = True,
-                            spaces: Sequence[str] = DEFAULT_SPARSE_SPACES):
+                            spaces: Sequence[str] = DEFAULT_SPARSE_SPACES,
+                            union_backend: str = "auto"):
     """Tree-level cohort aggregation mixing RowSparse and dense leaves.
 
     ``updates``: per-client stack — RowSparse leaves carry ``(K, R)`` ids,
@@ -187,7 +200,8 @@ def sparse_cohort_aggregate(updates, heat_spec: HeatSpec,
             heat = None
             if correct and space is not None and space[0] in heat_counts:
                 heat = heat_counts[space[0]]
-            return aggregate_rowsparse(leaf, heat, total, scale)
+            return aggregate_rowsparse(leaf, heat, total, scale,
+                                       union_backend=union_backend)
         mean = leaf.mean(axis=0)
         if correct:
             mean = correct_dense_leaf(mean, space, heat_counts, total)

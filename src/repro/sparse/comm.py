@@ -12,16 +12,52 @@ summarised by ``repro.federated.metrics.comm_summary``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Set
 
 import jax
 import numpy as np
 
+from repro.common.pytree import tree_path_keys
 from repro.sparse.compress import QuantRows
 from repro.sparse.rowsparse import RowSparse, is_rowsparse
 
 _ID_BYTES = 4          # int32 row ids
 _SCALE_BYTES = 4       # f32 per-row dequant scale
+
+
+class CommMeta(NamedTuple):
+    """Static byte geometry of one model, the input to per-round pricing.
+
+    ``dense_bytes``: full parameter tree (the dense baseline's per-client
+    payload). ``sparse_static_bytes``: the non-feature-keyed leaves the
+    sparse plane still ships whole. ``row_payload_bytes``: bytes of one row
+    summed over the sparse-plane tables; ``row_elems``: elements of one row
+    (for int8 pricing at 1 byte/element regardless of table dtype).
+    """
+
+    dense_bytes: float
+    sparse_static_bytes: float
+    row_payload_bytes: float
+    row_elems: int
+
+
+def model_comm_meta(plain_params, sparse_paths: Set) -> CommMeta:
+    """Derive :class:`CommMeta` from an (unboxed) parameter tree.
+
+    ``sparse_paths``: set of ``tree_path_keys`` paths of the leaves riding
+    the sparse plane (axis-0 feature tables).
+    """
+    dense_bytes = sparse_static = row_payload = 0.0
+    row_elems = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(plain_params)[0]:
+        nbytes = float(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        dense_bytes += nbytes
+        if tree_path_keys(path) in sparse_paths:
+            row_payload += nbytes / leaf.shape[0]
+            row_elems += int(np.prod(leaf.shape)) // leaf.shape[0]
+        else:
+            sparse_static += nbytes
+    return CommMeta(dense_bytes, sparse_static, row_payload, row_elems)
 
 
 @dataclass

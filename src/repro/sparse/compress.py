@@ -14,6 +14,8 @@ Both schemes compose with the aggregator because they stay in the
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -85,6 +87,47 @@ def dequantize_rows(qr: QuantRows, dtype=jnp.float32) -> RowSparse:
     flat = qr.q.reshape(lead + (-1,)).astype(jnp.float32)
     rows = (flat * qr.scales[..., None]).reshape(qr.q.shape).astype(dtype)
     return RowSparse(qr.ids, rows, qr.num_rows)
+
+
+def topk_tree(tree, k: int):
+    """Apply ``topk_rows`` to every RowSparse leaf of an update tree.
+
+    Leaves may be unbatched ``(R,)`` ids or a per-client stack ``(K, R)``
+    (vmapped). Dense leaves pass through unchanged.
+    """
+
+    def cut(leaf):
+        if not is_rowsparse(leaf):
+            return leaf
+        if leaf.ids.ndim == 1:
+            return topk_rows(leaf, k)
+        return jax.vmap(lambda rs: topk_rows(rs, k))(leaf)
+
+    return jax.tree.map(cut, tree, is_leaf=is_rowsparse)
+
+
+def compress_delta_tree(tree, topk: int = 0, int8: bool = False,
+                        key: Optional[Array] = None):
+    """Wire-format compression of an update tree, RowSparse leaves only.
+
+    The single client->server compression pipeline shared by every sparse
+    execution path: optional top-k row selection, then optional int8
+    stochastic-rounding quantisation *immediately dequantised* — what reaches
+    the aggregator is exactly what a real wire round-trip would deliver, while
+    the comm accounting prices the compressed form. Identity when both knobs
+    are off.
+    """
+    if topk:
+        tree = topk_tree(tree, topk)
+    if int8:
+        if key is None:
+            raise ValueError("int8 compression draws stochastic-rounding "
+                             "noise: pass a PRNG key")
+        tree = jax.tree.map(
+            lambda l: dequantize_rows(l) if isinstance(l, QuantRows) else l,
+            quantize_tree_int8(tree, key),
+            is_leaf=lambda x: isinstance(x, QuantRows))
+    return tree
 
 
 def quantize_tree_int8(tree, key: Array):

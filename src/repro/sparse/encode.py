@@ -152,6 +152,28 @@ def batch_union_ids(batch: Dict, feature_keys: Sequence[str], capacity: int) -> 
     return unique_ids_padded(flat, capacity)
 
 
+def pin_labels(data: Dict, feature_key: str = "tokens") -> Dict:
+    """Pin CE targets to the ORIGINAL feature ids before a submodel remap.
+
+    Every LM family's loss falls back to next-token targets derived from
+    ``batch["tokens"]``; once ``remap_feature_batch`` (or the gather-before-
+    backward swap) rewrites the token ids to submodel row slots, those derived
+    targets would be row slots too — silently wrong. The fix is the same for
+    every layout: when ``"labels"`` is absent, materialise them from the
+    un-remapped ids by shifting the sequence (last) axis left and
+    zero-padding, so ``(B, S)`` and ``(K, I, B, S)`` batches produce identical
+    labels for identical sequences. No-op when labels are already present or
+    the feature leaf has no sequence axis.
+    """
+    if "labels" in data or feature_key not in data:
+        return data
+    tokens = data[feature_key]
+    if getattr(tokens, "ndim", 0) < 2:
+        return data
+    pad = [(0, 0)] * (tokens.ndim - 1) + [(0, 1)]
+    return {**data, "labels": jnp.pad(tokens[..., 1:], pad)}
+
+
 # ---------------------------------------------------------------------------
 # Submodel replicas (shared by mode="sparse_replicated" and the trainer)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,497 @@
+"""RoundPlan API: plan-equivalence matrix vs the legacy mode strings, the
+previously inexpressible compositions, FedConfig validation, label-pinning
+unification, and the pinned public surface of repro.federated."""
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FedConfig
+from repro.data import make_movielens_like
+from repro.federated import (DenseTransport, FederatedTrainer, FedSgdLocal,
+                             ReplicatedLocal, RoundPlan, RowSparseTransport,
+                             ServerUpdate, SubmodelReplicatedLocal,
+                             build_round_step, make_round_step, plan_comm_meta,
+                             plan_from_config, resolve_plan)
+from repro.models.recsys import (lr_logits, lr_loss, lstm_loss, make_lr_params,
+                                 make_lstm_params)
+from repro.sharding.logical import unbox
+from repro.sparse.encode import pin_labels
+
+
+# ---------------------------------------------------------------------------
+# fixtures: a tiny LSTM (one axis-0 feature table) + batches in both layouts
+# ---------------------------------------------------------------------------
+
+V, E = 128, 6
+
+
+def _params():
+    return make_lstm_params(V, emb_dim=E, hidden=8, layers=1,
+                            rng=jax.random.PRNGKey(1))
+
+
+def _flat_batch(seed, b=6, s=8):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, V, (b, s)), jnp.int32),
+            "label": jnp.asarray(rng.integers(0, 2, b), jnp.int32),
+            "heat_vocab": jnp.maximum(jnp.asarray(
+                rng.integers(0, 6, V), jnp.float32), 0)}
+
+
+def _cohort_batch(seed, k=3, i=2, b=2, s=6):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(-1, V, (k, i, b, s)), jnp.int32),
+            "label": jnp.asarray(rng.integers(0, 2, (k, i, b)), jnp.int32),
+            "heat_vocab": jnp.maximum(jnp.asarray(
+                rng.integers(0, 6, V), jnp.float32), 0)}
+
+
+_COHORT_MODES = {"replicated", "sparse_replicated"}
+
+#: every legacy mode string and the RoundPlan composition it aliases
+_MATRIX = {
+    "fedsgd": lambda server: RoundPlan(FedSgdLocal(), DenseTransport(),
+                                       server),
+    "sparse": lambda server: RoundPlan(FedSgdLocal(), RowSparseTransport(),
+                                       server),
+    "replicated": lambda server: RoundPlan(ReplicatedLocal(),
+                                           DenseTransport(), server),
+    "sparse_replicated": lambda server: RoundPlan(SubmodelReplicatedLocal(),
+                                                  RowSparseTransport(),
+                                                  server),
+}
+
+
+def _run(step_builder, mode_or_plan, correct, rounds=3):
+    params = _params()
+    fed = FedConfig(num_clients=16, clients_per_round=3, local_iters=2,
+                    lr=0.1, algorithm="fedsubavg")
+    step = jax.jit(make_round_step(lstm_loss, params, fed, mode=mode_or_plan,
+                                   correct=correct))
+    mk = (_cohort_batch if step_builder in _COHORT_MODES else _flat_batch)
+    losses = []
+    for r in range(rounds):
+        params, m = step(params, mk(100 + r))
+        losses.append(float(m["loss"]))
+    return params, losses
+
+
+@pytest.mark.parametrize("mode", sorted(_MATRIX))
+@pytest.mark.parametrize("correct", [True, False])
+def test_plan_matrix_matches_mode_strings(mode, correct):
+    """ISSUE 4 acceptance: every legacy mode string x correct flag reproduces
+    its explicit RoundPlan composition to 1e-5 over a multi-round run."""
+    server = ServerUpdate("fedsubavg" if correct else "fedavg")
+    plan = _MATRIX[mode](server)
+    p_str, l_str = _run(mode, mode, correct)
+    p_plan, l_plan = _run(mode, plan, correct)
+    np.testing.assert_allclose(l_plan, l_str, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(unbox(p_str)),
+                    jax.tree.leaves(unbox(p_plan))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_resolve_plan_compositions_and_passthrough():
+    cfg = FedConfig(num_clients=8, microbatches=2)
+    p = resolve_plan("fedsgd", cfg)
+    assert isinstance(p.local, FedSgdLocal) and p.local.microbatches == 2
+    assert isinstance(p.transport, DenseTransport)
+    assert p.server.correct and p.server.stateless
+    p = resolve_plan("sparse_replicated", cfg, correct=False)
+    assert isinstance(p.local, SubmodelReplicatedLocal)
+    assert isinstance(p.transport, RowSparseTransport)
+    assert not p.server.correct
+    # a RoundPlan passes through untouched
+    assert resolve_plan(p, cfg) is p
+    with pytest.raises(ValueError):
+        resolve_plan("warp", cfg)
+    # mode="sparse" rejects microbatched configs up front
+    with pytest.raises(ValueError, match="microbatches"):
+        resolve_plan("sparse", cfg)
+
+
+def test_make_round_step_rejects_stateful_server():
+    params = _params()
+    fed = FedConfig(num_clients=8, algorithm="fedadam")
+    plan = RoundPlan(ReplicatedLocal(), DenseTransport(),
+                     ServerUpdate("fedadam"))
+    with pytest.raises(ValueError, match="stateless"):
+        make_round_step(lstm_loss, params, fed, mode=plan)
+
+
+def test_build_round_step_drives_stateful_server():
+    """What the stateless wrapper can't express, build_round_step can: a
+    fedadam ServerUpdate threads its optimizer slots through ServerState."""
+    from repro.core.algorithms import make_server_algorithm
+
+    params = _params()
+    fed = FedConfig(num_clients=16, clients_per_round=3, local_iters=2,
+                    lr=0.1, algorithm="fedadam", server_lr=0.05)
+    plan = RoundPlan(SubmodelReplicatedLocal(), RowSparseTransport(),
+                     ServerUpdate("fedadam"))
+    step = jax.jit(build_round_step(plan, lstm_loss, params, fed))
+    state = make_server_algorithm(fed).init(params)
+    for r in range(3):
+        state, m = step(state, _cohort_batch(70 + r))
+        assert np.isfinite(float(m["loss"]))
+    assert int(state.rounds) == 3
+    m0, _ = state.opt
+    assert any(float(jnp.abs(l).max()) > 0 for l in jax.tree.leaves(m0))
+
+
+# ---------------------------------------------------------------------------
+# previously inexpressible compositions
+# ---------------------------------------------------------------------------
+
+
+def test_topk_int8_on_simulation_sparse_path_with_comm_bytes():
+    """ISSUE 4 acceptance: top-k / int8 compression under build_round_step's
+    sparse path — a composition no mode string could express — runs
+    end-to-end and its comm bytes are priced by the transport."""
+    params = _params()
+    fed = FedConfig(num_clients=16, clients_per_round=3, lr=0.1,
+                    algorithm="fedsubavg")
+    base = RoundPlan(FedSgdLocal(), RowSparseTransport(),
+                     ServerUpdate("fedsubavg"))
+    batch = _flat_batch(7)
+    p_base, m_base = jax.jit(make_round_step(
+        lstm_loss, params, fed, mode=base))(params, batch)
+
+    for transport in (RowSparseTransport(topk=4),
+                      RowSparseTransport(int8=True),
+                      RowSparseTransport(topk=4, int8=True)):
+        plan = RoundPlan(FedSgdLocal(), transport, ServerUpdate("fedsubavg"))
+        step = jax.jit(make_round_step(lstm_loss, params, fed, mode=plan))
+        p_c, m_c = step(params, batch)
+        assert np.isfinite(float(m_c["loss"]))
+        assert int(m_c["sub_rows"]) == int(m_base["sub_rows"])
+        # compression changes the applied update
+        emb_base = np.asarray(unbox(p_base)["embedding"])
+        emb_c = np.asarray(unbox(p_c)["embedding"])
+        assert not np.allclose(emb_base, emb_c, atol=1e-12)
+        if transport.topk:
+            # at most topk embedding rows moved
+            moved = (np.abs(emb_c - np.asarray(unbox(params)["embedding"]))
+                     .max(axis=1) > 0).sum()
+            assert moved <= transport.topk
+
+        # comm pricing: the transport owns the bytes
+        meta = plan_comm_meta(params)
+        counts = np.asarray([int(m_c["sub_rows"])])
+        stats = transport.round_comm(0, meta, counts, V)
+        assert stats.bytes_up_sparse > 0
+        assert stats.bytes_up_sparse < stats.bytes_up_dense
+        per_row_f32 = 4 + meta.row_payload_bytes
+        per_row = (4 + meta.row_elems + 4) if transport.int8 else per_row_f32
+        rows_up = min(counts[0], transport.topk) if transport.topk else counts[0]
+        want = meta.sparse_static_bytes + rows_up * per_row
+        assert stats.bytes_up_sparse == pytest.approx(want)
+
+
+def test_submodel_local_training_with_dense_transport():
+    """The other unlocked combination: submodel-replica local training against
+    a dense server transport reproduces dense-replica training exactly."""
+    params = _params()
+    fed = FedConfig(num_clients=16, clients_per_round=3, local_iters=2,
+                    lr=0.1, algorithm="fedsubavg")
+    plan_sub = RoundPlan(SubmodelReplicatedLocal(), DenseTransport(),
+                         ServerUpdate("fedsubavg"))
+    step_sub = jax.jit(make_round_step(lstm_loss, params, fed, mode=plan_sub))
+    step_rep = jax.jit(make_round_step(lstm_loss, params, fed,
+                                       mode="replicated"))
+    p_s, p_r = params, params
+    for r in range(3):
+        batch = _cohort_batch(50 + r)
+        p_s, m_s = step_sub(p_s, batch)
+        p_r, m_r = step_rep(p_r, batch)
+        np.testing.assert_allclose(float(m_s["loss"]), float(m_r["loss"]),
+                                   rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(unbox(p_r)), jax.tree.leaves(unbox(p_s))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fedprox_style_plan_via_local_prox():
+    """A FedProx-style variant is a LocalStep knob, not a new branch: the
+    prox_mu override reproduces cfg.algorithm='fedprox' local training."""
+    params = _params()
+    mu = 0.05
+    fed_prox = FedConfig(num_clients=16, clients_per_round=3, local_iters=3,
+                         lr=0.1, algorithm="fedprox", prox_mu=mu)
+    fed_avg = FedConfig(num_clients=16, clients_per_round=3, local_iters=3,
+                        lr=0.1, algorithm="fedavg")
+    plan = RoundPlan(ReplicatedLocal(prox_mu=mu), DenseTransport(),
+                     ServerUpdate("fedavg"))
+    batch = _cohort_batch(9)
+    p_cfg, _ = jax.jit(make_round_step(
+        lstm_loss, params, fed_prox, mode="replicated",
+        correct=False))(params, batch)
+    p_plan, _ = jax.jit(make_round_step(
+        lstm_loss, params, fed_avg, mode=plan))(params, batch)
+    for a, b in zip(jax.tree.leaves(unbox(p_cfg)),
+                    jax.tree.leaves(unbox(p_plan))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    # and the prox term actually bites (differs from plain fedavg locals)
+    p_plain, _ = jax.jit(make_round_step(
+        lstm_loss, params, fed_avg, mode="replicated",
+        correct=False))(params, batch)
+    diffs = [float(jnp.abs(a - b).max()) for a, b in
+             zip(jax.tree.leaves(unbox(p_plain)),
+                 jax.tree.leaves(unbox(p_plan)))]
+    assert max(diffs) > 0
+
+
+# ---------------------------------------------------------------------------
+# FederatedTrainer consumes the same plans
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def plan_ds():
+    return make_movielens_like(num_clients=40, num_items=40, mean_samples=15)
+
+
+def _trainer(ds, cfg, plan=None):
+    mk = functools.partial(make_lr_params, ds.num_features)
+    return FederatedTrainer(
+        ds, mk, lr_loss, cfg,
+        predict_fn=lambda p, t: lr_logits(p, jnp.asarray(t["features"])),
+        metric="auc", plan=plan)
+
+
+def test_trainer_explicit_plan_matches_config_flags(plan_ds):
+    """One dispatch system: an explicit RoundPlan reproduces the FedConfig
+    flag resolution exactly (same RNG stream, same losses/params)."""
+    cfg = FedConfig(num_clients=plan_ds.num_clients, clients_per_round=6,
+                    local_iters=3, local_batch=4, lr=0.5,
+                    algorithm="fedsubavg", sparse=True, sparse_topk=6)
+    tr_flags = _trainer(plan_ds, cfg)
+    plan = RoundPlan(SubmodelReplicatedLocal(),
+                     RowSparseTransport(topk=6),
+                     ServerUpdate("fedsubavg"), ("features",))
+    tr_plan = _trainer(plan_ds, cfg, plan=plan)
+    assert tr_flags.plan == tr_plan.plan
+    l_flags = [tr_flags.run_round() for _ in range(4)]
+    l_plan = [tr_plan.run_round() for _ in range(4)]
+    np.testing.assert_allclose(l_plan, l_flags, rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(unbox(tr_flags.state.params)),
+                    jax.tree.leaves(unbox(tr_plan.state.params))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    # comm accounting rides the plan's transport
+    assert len(tr_plan.comm_log) == 4
+    assert tr_plan.comm_log[-1].bytes_up_sparse == pytest.approx(
+        tr_flags.comm_log[-1].bytes_up_sparse)
+
+
+def test_trainer_plan_algorithm_must_match_config(plan_ds):
+    cfg = FedConfig(num_clients=plan_ds.num_clients, algorithm="fedsubavg")
+    plan = RoundPlan(ReplicatedLocal(), DenseTransport(),
+                     ServerUpdate("fedavg"))
+    with pytest.raises(ValueError, match="algorithm"):
+        _trainer(plan_ds, cfg, plan=plan)
+
+
+def test_trainer_rejects_flat_local_plans(plan_ds):
+    """The trainer samples stacked (K, I, B, ...) cohorts; a FedSgdLocal plan
+    would be fed shapes it cannot consume — rejected at construction."""
+    cfg = FedConfig(num_clients=plan_ds.num_clients, algorithm="fedsubavg")
+    for transport in (DenseTransport(), RowSparseTransport()):
+        plan = RoundPlan(FedSgdLocal(), transport, ServerUpdate("fedsubavg"))
+        with pytest.raises(ValueError, match="flat pooled"):
+            _trainer(plan_ds, cfg, plan=plan)
+
+
+def test_fedsgd_microbatched_keeps_param_dtype():
+    """Regression: the f32 microbatch gradient accumulator must be cast back
+    to each param's dtype before the server add — bf16 params were coming
+    back silently promoted to float32 (legacy fedsgd always cast)."""
+    from repro.sharding.logical import Param
+
+    params = {"w": Param(jnp.ones((4, 4), jnp.bfloat16), (None, None))}
+
+    def loss_fn(p, batch):
+        return jnp.mean((batch["x"] @ p["w"].value.astype(jnp.float32)) ** 2)
+
+    fed = FedConfig(num_clients=4, lr=0.1, microbatches=2)
+    step = jax.jit(make_round_step(loss_fn, params, fed, mode="fedsgd",
+                                   correct=False))
+    batch = {"x": jnp.ones((4, 4), jnp.float32)}
+    new_params, _ = step(params, batch)
+    assert unbox(new_params)["w"].dtype == jnp.bfloat16
+
+
+def test_dense_plan_rejects_conflicting_microbatches():
+    """Consistent with the sparse branch: an explicit dense FedSgdLocal plan
+    must not silently discard cfg.microbatches."""
+    params = _params()
+    fed = FedConfig(num_clients=8, microbatches=4)
+    plan = RoundPlan(FedSgdLocal(), DenseTransport(), ServerUpdate("fedavg"))
+    with pytest.raises(ValueError, match="microbatches"):
+        make_round_step(lstm_loss, params, fed, mode=plan)
+    # the matching plan passes
+    ok = RoundPlan(FedSgdLocal(microbatches=4), DenseTransport(),
+                   ServerUpdate("fedavg"))
+    make_round_step(lstm_loss, params, fed, mode=ok)
+
+
+def test_resolve_plan_rejects_conflicting_args():
+    """An explicit RoundPlan is the whole truth: the string-mode knobs must
+    not silently contradict it."""
+    cfg = FedConfig(num_clients=8)
+    plan = RoundPlan(FedSgdLocal(), RowSparseTransport(),
+                     ServerUpdate("fedsubavg"))
+    with pytest.raises(ValueError, match="correct=False"):
+        resolve_plan(plan, cfg, correct=False)
+    with pytest.raises(ValueError, match="feature_key"):
+        resolve_plan(plan, cfg, feature_key="hist")
+    # consistent values pass through
+    assert resolve_plan(plan, cfg, feature_key="tokens") is plan
+    avg = RoundPlan(FedSgdLocal(), RowSparseTransport(), ServerUpdate("fedavg"))
+    assert resolve_plan(avg, cfg, correct=False) is avg
+
+
+def test_stateless_int8_keys_off_batch_fingerprint():
+    """Regression: the stateless make_round_step wrapper must not pin the
+    int8 stochastic-rounding key to rounds=0 forever (correlated noise every
+    round) — it seeds the counter with a batch fingerprint instead."""
+    from repro.core.algorithms import ServerState
+
+    params = _params()
+    fed = FedConfig(num_clients=16, clients_per_round=3, lr=0.1,
+                    algorithm="fedsubavg")
+    plan = RoundPlan(FedSgdLocal(), RowSparseTransport(int8=True),
+                     ServerUpdate("fedavg"))
+    wrapper = jax.jit(make_round_step(lstm_loss, params, fed, mode=plan,
+                                      correct=False))
+    inner = jax.jit(build_round_step(plan, lstm_loss, params, fed))
+    batch = _flat_batch(1)
+    p_w, _ = wrapper(params, batch)
+
+    def inner_emb(rounds):
+        s = ServerState(params, (), jnp.asarray(rounds, jnp.int32))
+        ns, _ = inner(s, batch)
+        return np.asarray(unbox(ns.params)["embedding"])
+
+    fp = int(np.asarray(batch["tokens"], np.uint32).sum()
+             & np.uint32(0x7FFFFFFF))
+    assert fp != 0
+    # the wrapper's noise comes from the fingerprint-seeded counter...
+    np.testing.assert_array_equal(np.asarray(unbox(p_w)["embedding"]),
+                                  inner_emb(fp))
+    # ...not the pre-fix constant 0 (distinct keys -> distinct noise)
+    assert not np.array_equal(np.asarray(unbox(p_w)["embedding"]),
+                              inner_emb(0))
+    # same batch -> same key -> deterministic
+    p_w2, _ = wrapper(params, batch)
+    np.testing.assert_array_equal(np.asarray(unbox(p_w)["embedding"]),
+                                  np.asarray(unbox(p_w2)["embedding"]))
+
+
+def test_plan_from_config_resolution():
+    cfg = FedConfig(num_clients=8)
+    p = plan_from_config(cfg)
+    assert isinstance(p.local, ReplicatedLocal)
+    assert isinstance(p.transport, DenseTransport)
+    p = plan_from_config(FedConfig(num_clients=8, sparse=True,
+                                   sparse_int8=True), gatherable=True)
+    assert isinstance(p.local, SubmodelReplicatedLocal)
+    assert p.transport == RowSparseTransport(int8=True)
+    p = plan_from_config(FedConfig(num_clients=8, sparse=True),
+                         gatherable=False)
+    assert isinstance(p.local, ReplicatedLocal)
+    with pytest.raises(ValueError, match="central"):
+        plan_from_config(FedConfig(num_clients=8, algorithm="central"))
+
+
+# ---------------------------------------------------------------------------
+# satellite: FedConfig construction-time validation
+# ---------------------------------------------------------------------------
+
+
+def test_fedconfig_rejects_unknown_algorithm():
+    with pytest.raises(ValueError, match="algorithm"):
+        FedConfig(algorithm="sgd")
+
+
+def test_fedconfig_rejects_unknown_heat_estimator():
+    with pytest.raises(ValueError, match="heat_estimator"):
+        FedConfig(heat_estimator="oracle")
+
+
+def test_fedconfig_rejects_unknown_sparse_local():
+    with pytest.raises(ValueError, match="sparse_local"):
+        FedConfig(sparse_local="dense")
+
+
+def test_fedconfig_rejects_negative_topk():
+    with pytest.raises(ValueError, match="sparse_topk"):
+        FedConfig(sparse_topk=-1)
+
+
+def test_fedconfig_rejects_microbatched_sparse():
+    with pytest.raises(ValueError, match="microbatches"):
+        FedConfig(sparse=True, microbatches=4)
+    # each constraint alone stays legal
+    FedConfig(sparse=True, microbatches=1)
+    FedConfig(sparse=False, microbatches=4)
+
+
+# ---------------------------------------------------------------------------
+# satellite: unified CE-label pinning
+# ---------------------------------------------------------------------------
+
+
+def test_pin_labels_layouts_agree():
+    """The (B, S) and (K, I, B, S) layouts produce identical labels for the
+    same sequences — the rule that used to be re-implemented per mode."""
+    rng = np.random.default_rng(0)
+    b, s = 4, 9
+    toks = jnp.asarray(rng.integers(0, 50, (b, s)), jnp.int32)
+    flat = pin_labels({"tokens": toks})["labels"]
+    nested = pin_labels({"tokens": toks.reshape(1, 1, b, s)})["labels"]
+    np.testing.assert_array_equal(np.asarray(flat),
+                                  np.asarray(nested)[0, 0])
+    # shifted-left next-token targets, zero-padded at the sequence end
+    np.testing.assert_array_equal(np.asarray(flat[:, :-1]),
+                                  np.asarray(toks[:, 1:]))
+    assert np.all(np.asarray(flat[:, -1]) == 0)
+
+
+def test_pin_labels_noop_cases():
+    toks = jnp.ones((2, 3), jnp.int32)
+    labels = jnp.zeros((2, 3), jnp.int32)
+    d = pin_labels({"tokens": toks, "labels": labels})
+    assert d["labels"] is labels
+    d = pin_labels({"label": jnp.ones((4,), jnp.int32)})  # no feature key
+    assert "labels" not in d
+    d = pin_labels({"tokens": jnp.ones((4,), jnp.int32)})  # no sequence axis
+    assert "labels" not in d
+
+
+# ---------------------------------------------------------------------------
+# satellite: pinned public surface
+# ---------------------------------------------------------------------------
+
+
+def test_federated_public_api_surface():
+    import repro.federated as fed
+
+    assert sorted(fed.__all__) == sorted([
+        "RoundPlan", "FedSgdLocal", "ReplicatedLocal",
+        "SubmodelReplicatedLocal", "DenseTransport", "RowSparseTransport",
+        "ServerUpdate", "build_round_step", "resolve_plan",
+        "plan_from_config", "plan_comm_meta", "split_heat_batch",
+        "make_round_step", "FederatedTrainer", "cohort_submodel_deltas",
+        "make_local_trainer", "make_submodel_local_trainer", "RoundRecord",
+        "comm_summary", "count_sub_ids", "derive_sub_ids", "pow2_capacity",
+        "heat_spec_from_axes", "round_capacity", "sparse_table_paths",
+    ])
+    for name in fed.__all__:
+        assert getattr(fed, name) is not None
