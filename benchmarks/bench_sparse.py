@@ -22,9 +22,17 @@ Three sections, all emitted to the CSV stream and to
    submodel replicas (``"sparse_replicated"``, K*capacity*D) — time per
    round and the analytic replica-memory curve at V in {65k, 262k}.
 
+5. cohort-sharded rounds: the ``run_rounds`` engine driven single-device vs
+   through ``CohortSharding`` meshes of every available power-of-two device
+   count — per-round wall time vs device count, ``speedup_vs_1dev`` per
+   mesh. Force virtual CPU devices with
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI smoke job
+   does); with one visible device only the plain unsharded 1-device
+   baseline is measured (no shard_map runs).
+
 ``REPRO_BENCH_SMOKE=1`` shrinks every section to seconds of runtime (tiny V,
 2 rounds, interpret-mode kernel) — the CI smoke job runs that on every PR so
-the pallas backend and the scan engine stay exercised.
+the pallas backend, the scan engine and the sharded engine stay exercised.
 """
 from __future__ import annotations
 
@@ -236,6 +244,56 @@ def _bench_replicated(out, records):
         records.append(row)
 
 
+def _bench_sharded(out, records):
+    """Section 5: cohort-sharded run_rounds engine vs single-device.
+
+    The cohort is sized local-phase-heavy (I=4, B=8, hidden=64): sharding
+    parallelises the K clients' local training, so the win grows with local
+    compute and saturates at the physical core count; the replicated server
+    apply and the collectives are the fixed sharded overhead the tiny smoke
+    shapes expose (speedup < 1 there is expected and gated relatively).
+    """
+    from repro.launch.mesh import make_cohort_mesh
+
+    if SMOKE:
+        vocab, clients, kpr, n_rounds, mean_samples, emb, hid, li, lb = (
+            512, 16, 8, 2, 8, 8, 32, 2, 4)
+    else:
+        vocab, clients, kpr, n_rounds, mean_samples, emb, hid, li, lb = (
+            65_536, 32, 16, 8, 25, 16, 64, 4, 8)
+    ds = make_sent140_like(num_clients=clients, vocab=vocab,
+                           mean_samples=mean_samples, seq_len=24)
+    cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=kpr,
+                    local_iters=li, local_batch=lb, lr=0.3,
+                    algorithm="fedsubavg", sparse=True)
+
+    def make_trainer(mesh):
+        return FederatedTrainer(
+            ds, functools.partial(make_lstm_params, ds.num_features,
+                                  emb_dim=emb, hidden=hid, layers=1),
+            lstm_loss, cfg, mesh=mesh)
+
+    n_avail = len(jax.devices())
+    ndevs = [n for n in (1, 2, 4, 8) if n <= n_avail]
+    us_1dev = None
+    for ndev in ndevs:
+        mesh = None if ndev == 1 else make_cohort_mesh(ndev)
+        tr = make_trainer(mesh)
+        tr.run_rounds(n_rounds)                          # warmup/compile
+        t0 = time.perf_counter()
+        tr.run_rounds(n_rounds)
+        us = (time.perf_counter() - t0) / n_rounds * 1e6
+        if ndev == 1:
+            us_1dev = us
+        speedup = us_1dev / us
+        out.append((f"sparse/sharded_engine_{ndev}dev", us,
+                    f"V={vocab};K={kpr};rounds={n_rounds};ndev={ndev};"
+                    f"speedup_vs_1dev={speedup:.2f}x"))
+        records.append(dict(section="sharded", v=vocab, k=kpr,
+                            rounds=n_rounds, ndev=ndev, us_per_round=us,
+                            speedup_vs_1dev=speedup))
+
+
 def run():
     out = []
     records = []
@@ -247,6 +305,7 @@ def run():
     _bench_union_backends(rng, out, records)
     _bench_engine(out, records)
     _bench_replicated(out, records)
+    _bench_sharded(out, records)
 
     # Pallas kernel (dense-output TPU path) at a kernel-friendly shape
     k, d, total = (4, 8, 100.0) if SMOKE else (16, 64, 100.0)

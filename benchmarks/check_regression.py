@@ -16,6 +16,12 @@ speed cancels:
   without an in-run reference) are skipped.
 - engine: the host-loop / in-jit ``speedup`` column. The in-jit scan losing
   ground against the per-round loop is a regression regardless of runner.
+- sharded: each mesh size's ``speedup_vs_1dev`` column (sharded engine time
+  normalised by the SAME run's 1-device engine time). The sharded round step
+  losing ground against its own single-device baseline is a regression
+  regardless of runner. Both runs must see the same device count
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in CI); a mesh
+  size present in the baseline but absent from the fresh run fails the gate.
 
 Both runs must use the same smoke shapes (``REPRO_BENCH_SMOKE=1``); records
 are matched on their shape keys and a missing match fails the gate.
@@ -32,6 +38,7 @@ import sys
 
 _UNION_KEY = ("v", "density", "k", "d")
 _ENGINE_KEY = ("v", "k", "rounds")
+_SHARDED_KEY = ("v", "k", "rounds", "ndev")
 
 
 def _index(records, section, key_fields):
@@ -93,6 +100,26 @@ def check(fresh: dict, baseline: dict, threshold: float):
         elif bsp and fsp < bsp / (1.0 + threshold):
             failures.append(
                 f"engine {key} in-jit speedup regressed "
+                f"{bsp:.2f}x -> {fsp:.2f}x (>{threshold:.0%})")
+
+    fresh_s = _index(fresh.get("records", []), "sharded", _SHARDED_KEY)
+    base_s = _index(baseline.get("records", []), "sharded", _SHARDED_KEY)
+    if base_s and not fresh_s:
+        failures.append("fresh run has no sharded records")
+    for key, brec in base_s.items():
+        frec = fresh_s.get(key)
+        if frec is None:
+            failures.append(f"sharded record missing from fresh run: {key} "
+                            "(device-count mismatch? run under the same "
+                            "XLA_FLAGS forced device count)")
+            continue
+        bsp, fsp = brec.get("speedup_vs_1dev"), frec.get("speedup_vs_1dev")
+        if bsp and not fsp:
+            failures.append(f"sharded {key}: fresh run lacks a usable "
+                            f"speedup_vs_1dev (got {fsp!r})")
+        elif bsp and fsp < bsp / (1.0 + threshold):
+            failures.append(
+                f"sharded {key} speedup_vs_1dev regressed "
                 f"{bsp:.2f}x -> {fsp:.2f}x (>{threshold:.0%})")
     return failures
 

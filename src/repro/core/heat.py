@@ -51,7 +51,8 @@ def compute_heat_exact(
 
 
 def estimate_heat_secure_agg(indicators: np.ndarray, rng: Optional[np.random.Generator] = None,
-                             modulus: int = 1 << 32) -> np.ndarray:
+                             modulus: int = 1 << 32,
+                             return_masked: bool = False):
     """Secure-aggregation simulation: pairwise additive masks that cancel.
 
     Each client i adds masks ``m_{ij}`` for j>i and subtracts ``m_{ji}`` for
@@ -60,6 +61,14 @@ def estimate_heat_secure_agg(indicators: np.ndarray, rng: Optional[np.random.Gen
     recovering the exact heat without seeing any individual indicator. This
     simulates the Bonawitz et al. protocol's arithmetic; the crypto key
     agreement is out of scope (there is no adversary inside a simulation).
+
+    ``rng`` selects the mask stream: its entropy is folded into every pair's
+    seed, so different generators mask the per-client vectors differently
+    (what the simulated server sees changes) while the unmasked sum — the
+    return value — is exact either way. ``rng=None`` keeps the documented
+    legacy stream, pair seeds ``SeedSequence((i, j))`` — bit-identical across
+    processes and pinned by test. ``return_masked=True`` additionally returns
+    the per-client masked vectors (the server's actual inputs).
 
     ``modulus`` must be a power of two (at most 2**63): the per-client
     vectors are reduced mod ``modulus`` as each mask is applied, but the
@@ -74,31 +83,37 @@ def estimate_heat_secure_agg(indicators: np.ndarray, rng: Optional[np.random.Gen
             f"modulus must be a power of two <= 2**63, got {modulus}: the "
             "uint64 wraparound arithmetic is only congruent mod a divisor "
             "of 2**64")
-    rng = rng or np.random.default_rng(0)
     n, m = indicators.shape
     if modulus <= n:
         raise ValueError(
             f"modulus {modulus} must exceed the client count {n}: the true "
             "heat reaches n for a feature every client holds and would wrap")
+    # one entropy draw folds the caller's generator into every pair seed;
+    # both endpoints of a pair still derive the SAME mask, so cancellation
+    # (and hence exactness) is unaffected
+    salt = (None if rng is None
+            else (int(rng.integers(0, 1 << 63, dtype=np.uint64)),))
     # per-client masked vectors; both endpoints of a pair share the mask
-    # derived from SeedSequence((min(i,j), max(i,j))) — a stable function of
-    # the pair (unlike Python's per-process-salted hash()), so runs reproduce
-    # bit-identically across processes. Each pair mask is generated exactly
-    # once and applied with opposite signs to its two endpoints (the old
-    # O(N^2) loop re-derived every mask from both sides); the final server
-    # sum is one vectorised reduction. All arithmetic is mod `modulus`
-    # carried in uint64 (modulus divides 2^64 — validated above — so
-    # wraparound preserves the residue), hence this is bit-identical to the
-    # per-client accumulation it replaces.
+    # derived from SeedSequence((*salt, min(i,j), max(i,j))) — a stable
+    # function of the pair (unlike Python's per-process-salted hash()), so
+    # runs reproduce bit-identically across processes. Each pair mask is
+    # generated exactly once and applied with opposite signs to its two
+    # endpoints (the old O(N^2) loop re-derived every mask from both sides);
+    # the final server sum is one vectorised reduction. All arithmetic is mod
+    # `modulus` carried in uint64 (modulus divides 2^64 — validated above —
+    # so wraparound preserves the residue), hence this is bit-identical to
+    # the per-client accumulation it replaces.
     vecs = indicators.astype(np.uint64) % modulus
     for i in range(n):
         for j in range(i + 1, n):
-            pair_rng = np.random.default_rng(np.random.SeedSequence((i, j)))
+            seed = (i, j) if salt is None else salt + (i, j)
+            pair_rng = np.random.default_rng(np.random.SeedSequence(seed))
             mask = pair_rng.integers(0, modulus, size=m, dtype=np.uint64)
             vecs[i] = (vecs[i] + mask) % modulus
             vecs[j] = (vecs[j] - mask) % modulus
     acc = vecs.sum(axis=0, dtype=np.uint64)
-    return (acc % modulus).astype(np.float64)
+    est = (acc % modulus).astype(np.float64)
+    return (est, vecs) if return_masked else est
 
 
 def estimate_heat_randomized_response(
@@ -134,6 +149,22 @@ def estimate_heat_randomized_response(
 # ---------------------------------------------------------------------------
 # Correction factors
 # ---------------------------------------------------------------------------
+
+
+def clamp_heat_estimate(est, total: float, min_count: float = 1.0) -> np.ndarray:
+    """Clamp a PRIVATE heat estimate into ``[min_count, total]``.
+
+    Randomized response is unbiased but noisy: a genuinely hot feature can
+    draw an estimate <= 0, and the correction gates (``counts > 0`` in
+    :func:`heat_correction_factors`, ``h > 0`` in its gathered twin
+    ``repro.sparse.aggregate.heat_factor_at``) would then zero that row's
+    aggregated update entirely — a silently dropped hot row. Any feature a
+    client involves has true heat in ``[1, N]``, so the estimate is clamped
+    there before it reaches either gate. Exact estimators must NOT be
+    clamped: their zero genuinely means cold, and factor 0 is the documented
+    inf-avoiding behavior.
+    """
+    return np.clip(np.asarray(est, np.float64), min_count, total)
 
 
 def heat_correction_factors(counts, total, min_count: float = 1.0) -> Array:

@@ -5,6 +5,7 @@ from repro.federated.client import (  # noqa: F401
 )
 from repro.federated.metrics import comm_summary  # noqa: F401
 from repro.federated.plan import (  # noqa: F401
+    CohortSharding,
     DenseTransport,
     FedSgdLocal,
     ReplicatedLocal,
@@ -36,6 +37,7 @@ from repro.federated.simulation import (  # noqa: F401
 __all__ = [
     # plan strategies + compiler (the one dispatch system)
     "RoundPlan",
+    "CohortSharding",
     "FedSgdLocal",
     "ReplicatedLocal",
     "SubmodelReplicatedLocal",

@@ -9,26 +9,23 @@ import numpy as np
 
 
 def auc(labels: np.ndarray, scores: np.ndarray) -> float:
-    """Mann-Whitney AUC; 0.5 when degenerate."""
+    """Mann-Whitney AUC; 0.5 when degenerate.
+
+    Tied ranks are averaged fully vectorised: a value group occupying sorted
+    ranks ``start..end`` has average rank ``end - (count - 1) / 2``, computed
+    straight from ``np.unique`` group counts. (The old per-group Python loop
+    was O(n^2) on heavily tied score vectors — the common case early in
+    training, when a barely-moved model emits near-constant logits.)
+    """
     labels = np.asarray(labels).astype(bool)
     scores = np.asarray(scores, dtype=np.float64)
     pos, neg = scores[labels], scores[~labels]
     if len(pos) == 0 or len(neg) == 0:
         return 0.5
-    order = np.argsort(np.concatenate([pos, neg]), kind="mergesort")
-    ranks = np.empty_like(order, dtype=np.float64)
-    ranks[order] = np.arange(1, len(order) + 1)
-    # average ranks for ties
     allv = np.concatenate([pos, neg])
-    sortv = allv[order]
-    i = 0
-    while i < len(sortv):
-        j = i
-        while j + 1 < len(sortv) and sortv[j + 1] == sortv[i]:
-            j += 1
-        if j > i:
-            ranks[order[i:j + 1]] = ranks[order[i:j + 1]].mean()
-        i = j + 1
+    _, inv, cnt = np.unique(allv, return_inverse=True, return_counts=True)
+    end = np.cumsum(cnt)                       # 1-indexed last rank per group
+    ranks = (end - (cnt - 1) / 2.0)[inv]       # average rank of each element
     r_pos = ranks[: len(pos)].sum()
     return float((r_pos - len(pos) * (len(pos) + 1) / 2) / (len(pos) * len(neg)))
 

@@ -29,6 +29,13 @@ aggregated update: plain (fedavg / fedprox / fedsubavg) or the stateful
 server optimizers (scaffold / fedadam), reusing
 ``repro.core.algorithms.make_server_algorithm`` slots.
 
+``CohortSharding`` — the optional fourth strategy, orthogonal to the other
+three: split the cohort axis over a device mesh. ``build_round_step`` wraps
+the local phase in ``shard_map``; each shard runs its K/dev clients and a
+per-shard partial aggregation, a cross-device combine produces the global
+update, and the (replicated) server apply is identical on every shard —
+exact vs the single-device step to 1e-5 under the same RNG stream.
+
 :func:`build_round_step` compiles a plan into the single jitted round step
 both entry points run: ``make_round_step`` (mode strings are thin aliases via
 :func:`resolve_plan`) and ``FederatedTrainer`` (``FedConfig`` flags resolve
@@ -61,7 +68,10 @@ from repro.federated.client import (cohort_deltas, cohort_submodel_deltas,
                                     make_local_trainer,
                                     make_submodel_local_trainer)
 from repro.sharding.logical import axes_tree, boxed_like, unbox
-from repro.sparse.aggregate import (apply_rowsparse, correct_rowsparse,
+from repro.sparse.aggregate import (aggregate_rowsparse_partial,
+                                    apply_rowsparse,
+                                    combine_rowsparse_partials,
+                                    correct_rowsparse,
                                     sparse_cohort_aggregate)
 from repro.sparse.comm import CommMeta, CommStats, model_comm_meta, round_comm_stats
 from repro.sparse.compress import compress_delta_tree
@@ -69,7 +79,8 @@ from repro.sparse.encode import (DEFAULT_SPARSE_SPACES, batch_union_ids,
                                  decode_delta_tree, encode_delta_tree,
                                  pin_labels, sparse_eligible,
                                  submodel_value_and_grad, tree_leaf_at)
-from repro.sparse.rowsparse import RowSparse, is_rowsparse, unique_ids_padded
+from repro.sparse.rowsparse import (RowSparse, count_unique_ids, is_rowsparse,
+                                    unique_ids_padded)
 
 Array = jax.Array
 
@@ -297,18 +308,66 @@ class ServerUpdate:
 
 
 @dataclass(frozen=True)
+class CohortSharding:
+    """Shard one round's cohort axis over a device mesh (FedAvg-style rounds
+    are embarrassingly parallel over clients until the union segment-sum).
+
+    ``mesh``/``axis`` name the data-parallel mesh axis the cohort is split
+    over; ``build_round_step`` wraps the local phase in ``shard_map`` so each
+    device shard runs its K/dev clients' local steps and a *per-shard*
+    partial aggregation, then a cross-device combine produces the global
+    update before the (replicated, identical-on-all-shards) server apply.
+
+    ``combine`` picks the sparse-plane cross-shard reduction: ``"psum"``
+    (densify + all-reduce, small tables), ``"union"`` (all-gather the shard
+    unions, second RowSparse segment-sum, large tables) or ``"auto"``
+    (byte-budget heuristic — see ``repro.sparse.aggregate.pick_combine``).
+    """
+
+    mesh: jax.sharding.Mesh
+    axis: str = "data"
+    combine: str = "auto"
+
+    def __post_init__(self):
+        if self.axis not in self.mesh.axis_names:
+            raise ValueError(
+                f"CohortSharding axis {self.axis!r} not in mesh axes "
+                f"{self.mesh.axis_names}")
+        if self.combine not in ("auto", "psum", "union"):
+            raise ValueError(
+                f"unknown combine strategy {self.combine!r}: expected "
+                "'auto', 'psum' or 'union'")
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+
+@dataclass(frozen=True)
 class RoundPlan:
-    """One federated round as a composition of three orthogonal strategies."""
+    """One federated round as a composition of three orthogonal strategies.
+
+    ``sharding`` is the optional fourth, orthogonal to all of them: a
+    :class:`CohortSharding` runs the SAME plan multi-device by splitting the
+    cohort over a mesh axis — every local/transport/server composition gains
+    multi-device execution without changing its math (parity to 1e-5 against
+    the single-device step, same RNG stream).
+    """
 
     local: LocalStep
     transport: Transport
     server: ServerUpdate
     feature_keys: Tuple[str, ...] = ("tokens",)
+    sharding: Optional[CohortSharding] = None
 
     def describe(self) -> str:
-        return (f"{type(self.local).__name__} -> "
+        base = (f"{type(self.local).__name__} -> "
                 f"{type(self.transport).__name__} -> "
                 f"ServerUpdate({self.server.algorithm})")
+        if self.sharding is not None:
+            base += (f" [sharded x{self.sharding.num_shards} over "
+                     f"'{self.sharding.axis}']")
+        return base
 
 
 # ---------------------------------------------------------------------------
@@ -620,6 +679,254 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
     else:
         raise TypeError(f"unknown LocalStep: {local!r}")
 
+    # ---- server apply (shared by the single-device and sharded paths) -----
+    def apply_sparse(state, agg):
+        """Apply an aggregated sparse-plane update (RowSparse or dense leaves,
+        correction already fused)."""
+        if server.stateless:
+            plain = unbox(state.params)
+            new_plain = _apply_plain(plain, agg, eta)
+            return ServerState(boxed_like(new_plain, state.params),
+                               state.opt, state.rounds + 1)
+        # stateful server optimizers consume the dense mean delta;
+        # densify once at the server boundary
+        dense = boxed_like(decode_delta_tree(agg), state.params)
+        return server_alg.apply(state, dense)
+
+    def apply_dense(state, update, counts):
+        """Apply a dense-transport cohort-mean update (correction pending)."""
+        if server_alg is not None:
+            return server_alg.apply(state, update)
+        corrected = (correct_update_tree(update, heat_spec, counts, n_total)
+                     if server.correct else update)
+        # cast back to each param's dtype before the add: the microbatch
+        # accumulator is f32, and bf16 params must not come back silently
+        # promoted
+        new_params = jax.tree.map(
+            lambda p, c: p + c.astype(p.dtype) * eta, state.params, corrected)
+        return ServerState(new_params, state.opt, state.rounds + 1)
+
+    # ---- cohort-sharded execution (plan.sharding) -------------------------
+    sharding = plan.sharding
+    if sharding is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh, s_axis = sharding.mesh, sharding.axis
+        ndev = sharding.num_shards
+        if sparse and transport.int8:
+            raise ValueError(
+                "CohortSharding does not compose with int8 transport yet: "
+                "the stochastic-rounding noise is drawn over the full cohort "
+                "stack and would not reproduce the single-device stream "
+                "per shard")
+        if sparse and transport.topk and isinstance(local, FedSgdLocal):
+            raise ValueError(
+                "CohortSharding does not compose with top-k on the flat "
+                "fused-gradient sparse path: top-k there selects rows of the "
+                "whole-cohort union, which no per-shard selection reproduces "
+                "— use a replicated local (per-client top-k shards exactly)")
+
+        def _mask_clients(tree, wmask):
+            """Zero padded clients' contributions (RowSparse-aware)."""
+
+            def m(leaf):
+                if is_rowsparse(leaf):
+                    w = wmask.reshape((-1,) + (1,) * (leaf.rows.ndim - 1))
+                    return RowSparse(leaf.ids,
+                                     leaf.rows * w.astype(leaf.rows.dtype),
+                                     leaf.num_rows)
+                return leaf * wmask.reshape(
+                    (-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+            return jax.tree.map(m, tree, is_leaf=is_rowsparse)
+
+        def _stacked_shard_body(params, data, sub_ids, wmask, counts, k_real):
+            """One shard's K/ndev clients: local steps, per-shard partial
+            aggregation, cross-shard combine. Returns the REPLICATED global
+            aggregate (identical on every shard) + loss / sub-row stats."""
+            update, _, used_ids, data = run_local(params, data, sub_ids)
+            if sparse and transport.topk:
+                # per-client row selection shards exactly (no cohort state)
+                update = compress_delta_tree(update, topk=transport.topk)
+            update = _mask_clients(update, wmask)
+            scale = 1.0 / float(k_real)
+
+            if sparse:
+                def agg_leaf(leaf, space):
+                    if is_rowsparse(leaf):
+                        h = (counts.get(space[0])
+                             if server.correct and space is not None else None)
+                        part = aggregate_rowsparse_partial(
+                            leaf, union_backend=transport.union_backend)
+                        return combine_rowsparse_partials(
+                            part, s_axis, ndev, h, n_total, scale,
+                            combine=sharding.combine,
+                            union_backend=transport.union_backend)
+                    mean = jax.lax.psum(leaf.sum(axis=0), s_axis) * scale
+                    if server.correct:
+                        mean = correct_dense_leaf(mean, space, counts, n_total)
+                    return mean
+
+                agg = jax.tree.map(
+                    agg_leaf, update, heat_spec.leaf_spaces,
+                    is_leaf=lambda x: x is None or is_rowsparse(x))
+            else:
+                if isinstance(local, SubmodelReplicatedLocal):
+                    update = _densify_stacked(update)
+                agg = jax.tree.map(
+                    lambda d: jax.lax.psum(d.sum(axis=0), s_axis) * scale,
+                    update)
+
+            first = jax.tree.map(lambda x: x[:, 0], data)
+            losses = jax.vmap(lambda b: loss_fn(params, b))(first)
+            loss = jax.lax.psum((losses * wmask).sum(), s_axis) / k_real
+            if sparse and used_ids is not None:
+                valid = (used_ids >= 0) & (wmask > 0)[:, None]
+                sub_rows = jax.lax.psum(valid.sum(), s_axis)
+            else:
+                sub_rows = jnp.zeros((), jnp.int32)
+            return agg, loss, sub_rows
+
+        def _flat_shard_body(params, data, sub_ids, counts):
+            """One shard's B/ndev examples of the pooled cohort batch.
+
+            Exactness contract (the standard data-parallel one): ``loss_fn``
+            is a uniform mean over the batch axis, so the cohort gradient is
+            the mean of equal-size shard gradients. A caller-provided
+            ``sub_ids`` union is replicated to every shard (each shard's
+            gradient support is a subset of it), exactly as the
+            single-device step consumes it.
+            """
+            update, fwd_loss, used_ids, _ = run_local(params, data, sub_ids)
+            loss = jax.lax.pmean(fwd_loss, s_axis)
+            scale = 1.0 / float(ndev)
+            if sparse:
+                def fix(leaf, space):
+                    if is_rowsparse(leaf):
+                        h = (counts.get(space[0])
+                             if server.correct and space is not None else None)
+                        return combine_rowsparse_partials(
+                            leaf, s_axis, ndev, h, n_total, scale,
+                            combine=sharding.combine,
+                            union_backend=transport.union_backend)
+                    leaf = jax.lax.pmean(leaf, s_axis)
+                    if server.correct:
+                        leaf = correct_dense_leaf(leaf, space, counts, n_total)
+                    return leaf
+
+                agg = jax.tree.map(
+                    fix, update, heat_spec.leaf_spaces,
+                    is_leaf=lambda x: x is None or is_rowsparse(x))
+                # the single-device union count: distinct ids across shards
+                sub_rows = count_unique_ids(
+                    jax.lax.all_gather(used_ids, s_axis))
+                return agg, loss, sub_rows
+            update = jax.tree.map(lambda g: jax.lax.pmean(g, s_axis), update)
+            return update, loss, jnp.zeros((), jnp.int32)
+
+        def sharded_cohort_update(params, data, counts, sub_ids):
+            """Wrap the shard body in shard_map over the cohort axis.
+
+            Stacked locals shard (and, for non-divisible cohorts, pad + mask)
+            the client axis; flat locals shard the pooled batch axis. The
+            returned aggregate is replicated — bitwise identical on every
+            shard — so the server apply that follows needs no resharding.
+            """
+            if local.stacked:
+                k_real = data[feature_keys[0]].shape[0]
+                kp = -(-k_real // ndev) * ndev
+                wmask = (jnp.arange(kp) < k_real).astype(jnp.float32)
+                if kp != k_real:
+                    # shard-major padding: repeat clients cyclically so every
+                    # pad slot computes finite values, then mask them out of
+                    # every reduction (scale stays 1/k_real)
+                    idx = jnp.arange(kp) % k_real
+                    data = jax.tree.map(lambda x: jnp.take(x, idx, axis=0),
+                                        data)
+                    if sub_ids is not None:
+                        sub_ids = jnp.take(sub_ids, idx, axis=0)
+                dspec = jax.tree.map(lambda _: P(s_axis), data)
+
+                def body(p, d, si, w, c):
+                    return _stacked_shard_body(p, d, si, w, c, k_real)
+
+                if sub_ids is None:
+                    fn = shard_map(
+                        lambda p, d, w, c: body(p, d, None, w, c), mesh=mesh,
+                        in_specs=(P(), dspec, P(s_axis), P()),
+                        out_specs=(P(), P(), P()), check_rep=False)
+                    agg, loss, sub_rows = fn(params, data, wmask, counts)
+                else:
+                    fn = shard_map(
+                        body, mesh=mesh,
+                        in_specs=(P(), dspec, P(s_axis), P(s_axis), P()),
+                        out_specs=(P(), P(), P()), check_rep=False)
+                    agg, loss, sub_rows = fn(params, data, sub_ids, wmask,
+                                             counts)
+                return agg, loss, sub_rows, k_real
+            # flat pooled batch: shard the example axis
+            bleaf = (feature_keys[0] if feature_keys[0] in data
+                     else next(iter(data)))
+            bsz = data[bleaf].shape[0]
+            if bsz % ndev:
+                raise ValueError(
+                    f"flat cohort batch of {bsz} examples does not divide "
+                    f"over {ndev} shards: pad the batch to a multiple of the "
+                    "mesh axis, or use a replicated local (which pads and "
+                    "masks per-client automatically)")
+            nmb = max(getattr(local, "microbatches", 1), 1)
+            if nmb > 1 and (bsz // ndev) % nmb:
+                raise ValueError(
+                    f"per-shard batch of {bsz // ndev} examples (batch {bsz} "
+                    f"over {ndev} shards) does not divide into "
+                    f"{nmb} microbatches — each shard runs its own gradient "
+                    "accumulation, so B must be a multiple of ndev * "
+                    "microbatches")
+
+            def fspec(k, x):
+                if getattr(x, "ndim", 0) == 0:
+                    return P()
+                # mrope carries a leading (3,) coordinate axis; batch on 1
+                return P(None, s_axis) if k == "mrope_pos" else P(s_axis)
+
+            dspec = {k: fspec(k, v) for k, v in data.items()}
+            if sub_ids is None:
+                fn = shard_map(
+                    lambda p, d, c: _flat_shard_body(p, d, None, c),
+                    mesh=mesh, in_specs=(P(), dspec, P()),
+                    out_specs=(P(), P(), P()), check_rep=False)
+                agg, loss, sub_rows = fn(params, data, counts)
+            else:
+                fn = shard_map(_flat_shard_body, mesh=mesh,
+                               in_specs=(P(), dspec, P(), P()),
+                               out_specs=(P(), P(), P()), check_rep=False)
+                agg, loss, sub_rows = fn(params, data, sub_ids, counts)
+            return agg, loss, sub_rows, None
+
+        def sharded_step(state: ServerState, batch: Dict,
+                         sub_ids: Optional[Array] = None):
+            params = state.params
+            heat, data = split_heat_batch(batch)
+            counts = batch_counts(heat)
+            agg, loss, sub_rows, k_real = sharded_cohort_update(
+                params, data, counts, sub_ids)
+            if sparse:
+                new_state = apply_sparse(state, agg)
+            else:
+                if local.stacked and isinstance(local,
+                                                SubmodelReplicatedLocal):
+                    agg = boxed_like(agg, params)
+                new_state = apply_dense(state, agg, counts)
+            metrics = {"loss": loss}
+            if sparse and vocab:
+                denom = vocab if k_real is None else k_real * vocab
+                metrics["sub_rows"] = sub_rows
+                metrics["density"] = sub_rows / denom
+            return new_state, metrics
+
+        return sharded_step
+
     # ---- the step ---------------------------------------------------------
     def step(state: ServerState, batch: Dict, sub_ids: Optional[Array] = None):
         params = state.params
@@ -652,16 +959,7 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 agg = jax.tree.map(
                     fix, update, heat_spec.leaf_spaces,
                     is_leaf=lambda x: x is None or is_rowsparse(x))
-            if server.stateless:
-                plain = unbox(params)
-                new_plain = _apply_plain(plain, agg, eta)
-                new_state = ServerState(boxed_like(new_plain, params),
-                                        state.opt, state.rounds + 1)
-            else:
-                # stateful server optimizers consume the dense mean delta;
-                # densify once at the server boundary
-                dense = boxed_like(decode_delta_tree(agg), params)
-                new_state = server_alg.apply(state, dense)
+            new_state = apply_sparse(state, agg)
         else:
             if isinstance(local, SubmodelReplicatedLocal):
                 # submodel replicas against a dense server transport: the
@@ -671,20 +969,7 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 update = jax.tree.map(lambda d: d.mean(axis=0), update)
                 if isinstance(local, SubmodelReplicatedLocal):
                     update = boxed_like(update, params)
-            if server_alg is not None:
-                new_state = server_alg.apply(state, update)
-            else:
-                corrected = (correct_update_tree(update, heat_spec, counts,
-                                                 n_total)
-                             if server.correct else update)
-                # cast back to each param's dtype before the add: the
-                # microbatch accumulator is f32, and bf16 params must not
-                # come back silently promoted
-                new_params = jax.tree.map(
-                    lambda p, c: p + c.astype(p.dtype) * eta,
-                    params, corrected)
-                new_state = ServerState(new_params, state.opt,
-                                        state.rounds + 1)
+            new_state = apply_dense(state, update, counts)
 
         if local.stacked:
             first = jax.tree.map(lambda x: x[:, 0], data)

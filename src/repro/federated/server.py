@@ -28,16 +28,19 @@ import numpy as np
 from repro.common.pytree import tree_add, tree_scale
 from repro.configs.base import FedConfig
 from repro.core.algorithms import ServerState, make_server_algorithm
-from repro.core.heat import HeatStats, estimate_heat_randomized_response
+from repro.core.heat import (HeatStats, clamp_heat_estimate,
+                             estimate_heat_randomized_response)
 from repro.data.batching import pooled_batches, sample_cohort_batch
 from repro.data.synthetic import FederatedDataset
-from repro.federated.plan import (RoundPlan, SubmodelReplicatedLocal,
-                                  build_round_step, heat_spec_from_axes,
-                                  plan_from_config, sparse_table_paths)
+from repro.federated.plan import (CohortSharding, RoundPlan,
+                                  SubmodelReplicatedLocal, build_round_step,
+                                  heat_spec_from_axes, plan_from_config,
+                                  sparse_table_paths)
 from repro.federated.metrics import accuracy, auc
 from repro.sharding.logical import unbox
 from repro.sparse.comm import CommStats, model_comm_meta
 from repro.sparse.encode import tree_leaf_at
+from repro.sparse.rowsparse import count_unique_ids, unique_ids_padded
 
 
 @dataclass
@@ -72,6 +75,12 @@ def pow2_capacity(max_count: int, floor: int = 8) -> int:
     return cap
 
 
+def _valid_ids(flat: jax.Array, num_features: int) -> jax.Array:
+    """Ids outside ``[0, num_features)`` become -1 (the padding convention)."""
+    flat = flat.astype(jnp.int32)
+    return jnp.where((flat >= 0) & (flat < num_features), flat, -1)
+
+
 @functools.partial(jax.jit, static_argnames=("num_features",))
 def count_sub_ids(feats: jax.Array, num_features: int) -> jax.Array:
     """Per-client distinct-feature counts ``(K,)`` from stacked id leaves.
@@ -79,12 +88,12 @@ def count_sub_ids(feats: jax.Array, num_features: int) -> jax.Array:
     ``feats``: ``(K, M)`` int feature ids, negatives are padding. The count
     is over distinct non-negative ids — the size of client k's submodel
     S(k), i.e. the number of valid slots ``derive_sub_ids`` will fill.
+    Sort-based (``count_unique_ids``), so the per-client cost is O(M log M)
+    in the client's own id count, never O(V) in the feature-space size.
     """
 
     def one(flat):
-        safe = jnp.where(flat >= 0, flat, num_features)
-        mark = jnp.zeros((num_features,), bool).at[safe].set(True, mode="drop")
-        return mark.sum(dtype=jnp.int32)
+        return count_unique_ids(_valid_ids(flat, num_features))
 
     return jax.vmap(one)(feats)
 
@@ -95,21 +104,17 @@ def derive_sub_ids(feats: jax.Array, num_features: int,
     """Per-client sorted unique feature ids ``(K, capacity)``, -1 padded.
 
     The jitted replacement for the trainer's former host-side per-client
-    ``np.unique`` loops: mark each client's touched rows in a (V,) bitmap,
-    rank the marks by cumsum, and scatter row indices to their rank — one
-    fused vectorised program per (K, M, capacity) shape bucket instead of K
-    numpy passes per round. ``capacity`` must come from ``pow2_capacity`` of
-    ``count_sub_ids(...).max()`` so the jit cache stays O(log V).
+    ``np.unique`` loops, now sort-based (``unique_ids_padded`` under vmap):
+    O(M log M) per client in its own id count M. The earlier bitmap-rank
+    variant paid O(V) per client — a (V,) bitmap, cumsum and scatter — which
+    at V=65k dominated the whole sharded round (~60 ms/round of host-shared
+    work no mesh could parallelise). ``capacity`` must come from
+    ``pow2_capacity`` of ``count_sub_ids(...).max()`` so the jit cache stays
+    O(log V).
     """
 
     def one(flat):
-        safe = jnp.where(flat >= 0, flat, num_features)
-        mark = jnp.zeros((num_features,), bool).at[safe].set(True, mode="drop")
-        rank = jnp.cumsum(mark) - 1
-        slot = jnp.where(mark, rank, capacity)          # unmarked -> dropped
-        out = jnp.full((capacity,), -1, jnp.int32)
-        return out.at[slot].set(jnp.arange(num_features, dtype=jnp.int32),
-                                mode="drop")
+        return unique_ids_padded(_valid_ids(flat, num_features), capacity)
 
     return jax.vmap(one)(feats)
 
@@ -121,7 +126,15 @@ class FederatedTrainer:
                  loss_fn: Callable, cfg: FedConfig,
                  predict_fn: Optional[Callable] = None,
                  metric: str = "auc", rng_seed: int = 0,
-                 plan: Optional[RoundPlan] = None):
+                 plan: Optional[RoundPlan] = None,
+                 mesh: Optional[Any] = None):
+        """``mesh``: a device mesh (e.g. ``make_cohort_mesh()``) to shard the
+        cohort axis of every round over its ``"data"`` axis. The host-side
+        pipeline is untouched — cohorts are sampled from the same RNG stream
+        and laid out shard-major (device d owns the contiguous client block
+        d), so sharded rounds reproduce single-device rounds to 1e-5. Pass a
+        plan with an explicit ``CohortSharding`` for a non-default axis or
+        combine strategy."""
         self.ds = ds
         self.cfg = cfg
         self.loss_fn = loss_fn
@@ -151,10 +164,21 @@ class FederatedTrainer:
         if cfg.algorithm == "central":
             if plan is not None:
                 raise ValueError("central training takes no RoundPlan")
+            if mesh is not None:
+                raise ValueError("central training takes no cohort mesh")
             self._central_step = jax.jit(self._make_central_step())
             return
 
         self.plan = self._resolve_trainer_plan(params, plan)
+        if mesh is not None:
+            if (self.plan.sharding is not None
+                    and self.plan.sharding.mesh is not mesh):
+                raise ValueError(
+                    "mesh= conflicts with the explicit plan's CohortSharding "
+                    "— set the mesh on the plan only")
+            if self.plan.sharding is None:
+                self.plan = dataclasses.replace(
+                    self.plan, sharding=CohortSharding(mesh))
         self._is_sparse = self.plan.transport.sparse
         round_step = build_round_step(self.plan, loss_fn, params, cfg,
                                       heat_counts=heat_counts, total=total,
@@ -162,10 +186,15 @@ class FederatedTrainer:
         if self._is_sparse:
             # jit caches one trace per sub_ids capacity (kept to O(log V)
             # variants by pow2_capacity bucketing); ServerState buffers are
-            # donated through the step so the table is updated in place
+            # donated through the step so the table is updated in place.
+            # Donation is skipped for cohort-sharded plans: donating the
+            # replicated state through a shard_map program forces a full
+            # buffer round-trip per call on the multi-device CPU backend
+            # (measured ~20x per-round regression), defeating the sharding
+            donate = () if self.plan.sharding is not None else (0,)
             self._comm_meta = model_comm_meta(unbox(params),
                                               set(self._sparse_paths))
-            self._sparse_step = jax.jit(round_step, donate_argnums=(0,))
+            self._sparse_step = jax.jit(round_step, donate_argnums=donate)
 
             def engine(state, cohorts, sub_ids):
                 # multi-round driver: scan the round step over stacked
@@ -173,9 +202,20 @@ class FederatedTrainer:
                 return jax.lax.scan(lambda s, xs: round_step(s, *xs), state,
                                     (cohorts, sub_ids))
 
-            self._sparse_engine = jax.jit(engine, donate_argnums=(0,))
+            self._sparse_engine = jax.jit(engine, donate_argnums=donate)
         else:
             self._round_step = jax.jit(round_step)
+        if self.plan.sharding is not None:
+            # commit the server state replicated over the cohort mesh BEFORE
+            # the first step: the executable then compiles for (and returns)
+            # that layout, so threading the state through rounds never
+            # reshards. (Compiling against the initial single-device layout
+            # instead makes every later call copy the replicated output back
+            # to one device — a measured ~6x per-round penalty.)
+            self.state = jax.device_put(
+                self.state,
+                jax.sharding.NamedSharding(self.plan.sharding.mesh,
+                                           jax.sharding.PartitionSpec()))
 
     # ------------------------------------------------------------------
     def _resolve_trainer_plan(self, params,
@@ -252,7 +292,10 @@ class FederatedTrainer:
                 ind, cfg.rr_flip_prob, np.random.default_rng(cfg.seed),
                 weights=w)
             total = float(ds.num_clients) if w is None else float(w.sum())
-            counts = np.clip(est, 0, total)
+            # clamp into [min_count, total], NOT [0, total]: a noisy estimate
+            # <= 0 for a genuinely hot feature would hit the counts > 0 /
+            # h > 0 gates and silently zero that row's update every round
+            counts = clamp_heat_estimate(est, total)
         elif cfg.weighted:
             # exact / secure_agg: sum involving clients' weights (App. D.4)
             counts = np.zeros(ds.num_features)

@@ -8,7 +8,29 @@ device state — the dry-run sets XLA_FLAGS *before* any jax initialisation.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+import numpy as np
+
+
+def make_cohort_mesh(num_devices: Optional[int] = None, axis: str = "data"):
+    """1-D data mesh for cohort-sharded federated rounds.
+
+    The cohort axis of a federated round is embarrassingly parallel over
+    clients; ``CohortSharding(make_cohort_mesh())`` splits it over every
+    visible device (or the first ``num_devices``). On CPU, force virtual
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    *before* jax initialises — exactly how the shard-parity tests and the
+    sharded bench section run.
+    """
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"num_devices={num_devices} out of range: {len(devs)} devices "
+            "visible")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

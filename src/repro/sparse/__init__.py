@@ -8,6 +8,7 @@ of the paper's submodel story. See DESIGN.md for the architecture.
 from repro.sparse.rowsparse import (  # noqa: F401
     PAD_ID,
     RowSparse,
+    count_unique_ids,
     is_rowsparse,
     remap_ids,
     unique_ids_padded,
@@ -27,8 +28,11 @@ from repro.sparse.encode import (  # noqa: F401
 from repro.sparse.aggregate import (  # noqa: F401
     aggregate_rowsparse,
     aggregate_rowsparse_dense,
+    aggregate_rowsparse_partial,
     apply_rowsparse,
+    combine_rowsparse_partials,
     heat_factor_at,
+    pick_combine,
     sparse_cohort_aggregate,
 )
 from repro.sparse.compress import (  # noqa: F401

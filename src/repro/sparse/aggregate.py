@@ -17,6 +17,14 @@ Three union backends, selected at runtime (``union_backend="auto"``):
 
 ``aggregate_rowsparse_dense`` additionally routes through the dense-output
 ``rowsparse_scatter`` kernel when the server applies into a dense table.
+
+Cohort-sharded rounds split the segment-sum in two: each device shard runs
+``aggregate_rowsparse_partial`` over its own clients (a plain union
+segment-sum — no heat, no cohort scale), and ``combine_rowsparse_partials``
+reduces the per-shard partial unions across the mesh axis inside
+``shard_map`` — either a ``psum`` of the densified rows (small tables) or a
+gathered union-of-unions that stays RowSparse (large tables), with the heat
+correction and cohort mean fused exactly once at the combine.
 """
 from __future__ import annotations
 
@@ -24,8 +32,10 @@ from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core.aggregate import HeatSpec, correct_dense_leaf
+from repro.core.heat import heat_correction_factors
 from repro.sparse.encode import DEFAULT_SPARSE_SPACES
 from repro.sparse.rowsparse import RowSparse, is_rowsparse, remap_ids, unique_ids_padded
 
@@ -150,6 +160,91 @@ def aggregate_rowsparse(stacked: RowSparse, heat: Optional[Array] = None,
     summed = summed.at[pos].add(flat_rows.astype(jnp.float32), mode="drop")
     return correct_rowsparse(RowSparse(union, summed, stacked.num_rows),
                              heat, total, scale)
+
+
+#: psum-densify combine budget (bytes of one dense ``(V, row_elems)`` f32
+#: buffer). Mirrors the ``fits_vmem`` philosophy of the pallas backend pick:
+#: below the budget an all-reduce of the densified union rows is one fused
+#: collective; above it the gathered union-of-unions keeps the RowSparse form
+#: and never materialises the (V, D) table — every shard would otherwise pay
+#: an O(V * D) densify + all-reduce per table per round (V=65k x D=16 is
+#: already 4 MiB of dense traffic for a union of a few hundred rows).
+_PSUM_COMBINE_MAX_BYTES = 1 << 21
+
+
+def pick_combine(num_rows: int, row_elems: int, combine: str = "auto") -> str:
+    """Resolve the cross-shard combine strategy for a sharded aggregation.
+
+    ``"psum"``: densify each shard's partial union to ``(V, ...)`` and
+    all-reduce — cheapest when the dense buffer is small. ``"union"``:
+    all-gather the per-shard partial unions and run a second (replicated)
+    union segment-sum — the RowSparse form survives, so huge feature spaces
+    never pay a dense ``(V, D)`` collective. ``"auto"`` picks by the dense
+    buffer's byte size, the same budget-style heuristic the union backend
+    uses for its VMEM fit.
+    """
+    if combine != "auto":
+        if combine not in ("psum", "union"):
+            raise ValueError(f"unknown combine strategy {combine!r}: "
+                             "expected 'auto', 'psum' or 'union'")
+        return combine
+    dense_bytes = int(num_rows) * max(int(row_elems), 1) * 4
+    return "psum" if dense_bytes <= _PSUM_COMBINE_MAX_BYTES else "union"
+
+
+def aggregate_rowsparse_partial(stacked: RowSparse,
+                                union_capacity: Optional[int] = None,
+                                union_backend: str = "auto") -> RowSparse:
+    """Per-shard partial reduction: union segment-sum with NO heat, NO scale.
+
+    One device shard's half of the sharded cohort aggregation: its clients'
+    stacked ``(K_shard, R)`` deltas collapse onto the shard's union ids.
+    The FedSubAvg correction and the ``1/K`` cohort mean are deliberately NOT
+    applied — they are per-row multiplicative and must enter exactly once, at
+    :func:`combine_rowsparse_partials`, after the cross-shard sum.
+    """
+    return aggregate_rowsparse(stacked, heat=None, total=1.0, scale=1.0,
+                               union_capacity=union_capacity,
+                               union_backend=union_backend)
+
+
+def combine_rowsparse_partials(partial: RowSparse, axis_name: str,
+                               num_shards: int, heat: Optional[Array],
+                               total: float, scale: float = 1.0,
+                               combine: str = "auto",
+                               union_backend: str = "auto"):
+    """Cross-device combine of per-shard partial unions (shard_map only).
+
+    ``partial`` is this shard's :func:`aggregate_rowsparse_partial` output;
+    the return value is the SAME on every shard (the replicated global
+    aggregate), so the server apply that follows is identical everywhere:
+
+    ``psum``   densify the shard partial and all-reduce; returns the dense
+               corrected ``(V, ...)`` update (cold rows are exact zeros).
+    ``union``  all-gather the shard unions into a ``(num_shards, cap)`` stack
+               and run the ordinary :func:`aggregate_rowsparse` over it —
+               every shard computes the same global union; returns RowSparse.
+
+    Either way the heat correction (``total / n_m``) and ``scale`` are fused
+    here, once, exactly as the single-device fused aggregation applies them.
+    """
+    row_elems = 1
+    for d in partial.rows.shape[1:]:
+        row_elems *= int(d)
+    mode = pick_combine(partial.num_rows, row_elems, combine)
+    if mode == "psum":
+        dense = lax.psum(partial.to_dense().astype(jnp.float32), axis_name)
+        if heat is not None:
+            factors = heat_correction_factors(heat, total) * scale
+        else:
+            factors = jnp.full((partial.num_rows,), scale, jnp.float32)
+        return dense * factors.reshape((-1,) + (1,) * (dense.ndim - 1))
+    ids_g = lax.all_gather(partial.ids, axis_name)        # (ndev, cap)
+    rows_g = lax.all_gather(partial.rows, axis_name)      # (ndev, cap, ...)
+    stacked = RowSparse(ids_g, rows_g, partial.num_rows)
+    cap = min(partial.num_rows, int(num_shards) * partial.capacity)
+    return aggregate_rowsparse(stacked, heat, total, scale,
+                               union_capacity=cap, union_backend=union_backend)
 
 
 def aggregate_rowsparse_dense(stacked: RowSparse, heat: Array, total: float,

@@ -123,6 +123,22 @@ def unique_ids_padded(ids: Array, capacity: int) -> Array:
     return out.at[slot].set(jnp.where(first, s, PAD_ID), mode="drop")
 
 
+def count_unique_ids(ids: Array) -> Array:
+    """Number of distinct non-negative ids in ``ids`` (traced scalar).
+
+    The counting half of :func:`unique_ids_padded` — same sort +
+    first-occurrence convention, single-sourced so the sub-id counters
+    (``count_sub_ids``, the sharded union statistics) can never drift from
+    the union builder. O(T log T) in the input size, never in the feature
+    space.
+    """
+    flat = ids.reshape(-1).astype(jnp.int32)
+    sentinel = jnp.iinfo(jnp.int32).max
+    s = jnp.sort(jnp.where(flat >= 0, flat, sentinel))
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    return (first & (s != sentinel)).sum(dtype=jnp.int32)
+
+
 def remap_ids(tokens: Array, ids: Array) -> Array:
     """Map feature ids to their slot in ``ids`` (sorted uniques then -1 pads).
 

@@ -296,10 +296,11 @@ def test_weighted_composes_with_randomized_response(ds):
     assert not np.allclose(tr.heat.counts, exact_w), \
         "weighted heat bypassed the randomized-response mechanism"
 
-    # and it matches the weighted RR estimator run under the trainer's seed
+    # and it matches the weighted RR estimator run under the trainer's seed,
+    # clamped into [1, W] (an estimate <= 0 must never zero a hot row's gate)
     want = estimate_heat_randomized_response(
         ind, 0.2, np.random.default_rng(tr.cfg.seed), weights=w)
-    want = np.clip(want, 0, w.sum())
+    want = np.clip(want, 1.0, w.sum())
     np.testing.assert_allclose(tr.heat.counts, want)
     assert tr.heat.total == pytest.approx(w.sum())
     assert np.isfinite(tr.history[-1].train_loss)

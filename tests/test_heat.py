@@ -14,7 +14,8 @@ except ImportError:                                    # pragma: no cover
 
 import jax.numpy as jnp
 
-from repro.core.heat import (HeatStats, client_indicator, compute_heat_exact,
+from repro.core.heat import (HeatStats, clamp_heat_estimate, client_indicator,
+                             compute_heat_exact,
                              estimate_heat_randomized_response,
                              estimate_heat_secure_agg, heat_correction_factors)
 
@@ -122,6 +123,100 @@ def test_secure_agg_rejects_non_pow2_modulus():
     # non-default powers of two still recover the exact heat
     est = estimate_heat_secure_agg(ind, modulus=1 << 20)
     np.testing.assert_array_equal(est, ind.sum(axis=0))
+
+
+def test_secure_agg_honors_rng():
+    """Regression (ISSUE 5 satellite): the ``rng`` argument used to be dead —
+    assigned a default and never consulted, masks coming solely from the
+    fixed pair SeedSequence. It now selects the mask stream: the per-client
+    masked vectors (what the simulated server sees) change with the
+    generator, reproduce for an equal seed, and the unmasked sum stays exact
+    for every stream."""
+    rng = np.random.default_rng(5)
+    ind = (rng.random((6, 17)) < 0.4).astype(np.int64)
+    true = ind.sum(axis=0)
+
+    est_d, vecs_default = estimate_heat_secure_agg(ind, return_masked=True)
+    est_a, vecs_a = estimate_heat_secure_agg(ind, np.random.default_rng(1),
+                                             return_masked=True)
+    est_a2, vecs_a2 = estimate_heat_secure_agg(ind, np.random.default_rng(1),
+                                               return_masked=True)
+    est_b, vecs_b = estimate_heat_secure_agg(ind, np.random.default_rng(2),
+                                             return_masked=True)
+    # exact under every mask stream (the masks cancel)
+    for est in (est_d, est_a, est_b):
+        np.testing.assert_array_equal(est, true)
+    # the rng is honored: distinct generators -> distinct masked vectors ...
+    assert not np.array_equal(vecs_a, vecs_default)
+    assert not np.array_equal(vecs_a, vecs_b)
+    # ... and an equal seed reproduces the stream bit-identically
+    np.testing.assert_array_equal(vecs_a, vecs_a2)
+
+
+def test_secure_agg_default_stream_pinned():
+    """The documented rng=None behavior stays bit-identical to the legacy
+    SeedSequence((i, j)) pair masks (companion to the reference-loop pin)."""
+    ind = np.eye(4, 9, dtype=np.int64)
+    modulus = 1 << 32
+    _, vecs = estimate_heat_secure_agg(ind, return_masked=True)
+    want = ind.astype(np.uint64) % modulus
+    for i in range(4):
+        for j in range(i + 1, 4):
+            pair_rng = np.random.default_rng(np.random.SeedSequence((i, j)))
+            mask = pair_rng.integers(0, modulus, size=9, dtype=np.uint64)
+            want[i] = (want[i] + mask) % modulus
+            want[j] = (want[j] - mask) % modulus
+    np.testing.assert_array_equal(vecs, want)
+
+
+def test_clamped_estimate_never_zeroes_hot_rows():
+    """Regression (ISSUE 5 satellite): a noisy randomized-response estimate
+    <= 0 for a genuinely hot feature used to reach the counts > 0 /
+    h > 0 gates and zero that row's update in BOTH correction twins. The
+    clamp into [min_count, total] keeps every row's factor positive."""
+    from repro.sparse.aggregate import heat_factor_at
+
+    total = 10.0
+    raw_est = np.array([-2.3, 0.0, 0.4, 5.0])     # rows 0-2: hot, bad draws
+
+    # the pre-fix pipeline (clip at 0) drops rows 0 and 1 entirely
+    pre_fix = np.clip(raw_est, 0, total)
+    f_dense_pre = np.asarray(heat_correction_factors(pre_fix, total))
+    assert f_dense_pre[0] == 0.0 and f_dense_pre[1] == 0.0
+
+    counts = clamp_heat_estimate(raw_est, total)
+    np.testing.assert_allclose(counts, [1.0, 1.0, 1.0, 5.0])
+    # dense twin
+    f_dense = np.asarray(heat_correction_factors(counts, total))
+    assert np.all(f_dense > 0)
+    np.testing.assert_allclose(f_dense, [10.0, 10.0, 10.0, 2.0])
+    # gathered twin (ids index the same counts; -1 stays the pad zero)
+    ids = jnp.asarray([0, 1, 2, 3, -1], jnp.int32)
+    f_gather = np.asarray(heat_factor_at(jnp.asarray(counts, jnp.float32),
+                                         ids, total))
+    np.testing.assert_allclose(f_gather[:4], f_dense)
+    assert f_gather[4] == 0.0
+
+
+def test_trainer_randomized_response_counts_are_clamped():
+    """End-to-end: the trainer's RR heat never carries a zero (pre-fix the
+    lower clip bound was 0, so unlucky hot features were droppable)."""
+    import functools
+
+    from repro.configs import FedConfig
+    from repro.data import make_movielens_like
+    from repro.federated import FederatedTrainer
+    from repro.models.recsys import lr_loss, make_lr_params
+
+    ds = make_movielens_like(num_clients=12, num_items=30, mean_samples=4)
+    cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=4,
+                    heat_estimator="randomized_response", rr_flip_prob=0.45)
+    tr = FederatedTrainer(ds, functools.partial(make_lr_params,
+                                                ds.num_features),
+                          lr_loss, cfg)
+    # p=0.45 makes negative raw estimates near-certain at N=12
+    assert tr.heat.counts.min() >= 1.0
+    assert tr.heat.counts.max() <= tr.heat.total
 
 
 def test_randomized_response_weighted_unbiased():

@@ -484,7 +484,7 @@ def test_federated_public_api_surface():
     import repro.federated as fed
 
     assert sorted(fed.__all__) == sorted([
-        "RoundPlan", "FedSgdLocal", "ReplicatedLocal",
+        "RoundPlan", "CohortSharding", "FedSgdLocal", "ReplicatedLocal",
         "SubmodelReplicatedLocal", "DenseTransport", "RowSparseTransport",
         "ServerUpdate", "build_round_step", "resolve_plan",
         "plan_from_config", "plan_comm_meta", "split_heat_batch",
