@@ -30,6 +30,14 @@ Three sections, all emitted to the CSV stream and to
    does); with one visible device only the plain unsharded 1-device
    baseline is measured (no shard_map runs).
 
+6. telemetry plane: the same fedsubavg sparse round with the in-jit
+   ``RoundTelemetry`` counters off vs on — per-round wall time for both,
+   the on/off overhead ratio, and the run-level counter summary (drop
+   totals, mean union size / density). The telemetry-on trainer streams
+   its round events through a ``TraceSink`` into ``BENCH_telemetry.jsonl``
+   (CI uploads it as an artifact; ``check_regression`` validates the
+   section's schema and that trainer-derived rounds report zero drops).
+
 ``REPRO_BENCH_SMOKE=1`` shrinks every section to seconds of runtime (tiny V,
 2 rounds, interpret-mode kernel) — the CI smoke job runs that on every PR so
 the pallas backend, the scan engine and the sharded engine stay exercised.
@@ -294,6 +302,71 @@ def _bench_sharded(out, records):
                             speedup_vs_1dev=speedup))
 
 
+def _bench_telemetry(out, records):
+    """Section 6: in-jit telemetry counters off vs on, plus the counters.
+
+    Same fedsubavg sparse shapes as section 3. The counters are pure reads
+    of values the round already computes, so the overhead ratio should hover
+    near 1.0x; the JSONL sink receives one round event per dispatched round
+    (warmup included) and lands wherever ``REPRO_BENCH_TELEMETRY_JSONL``
+    points (default ``BENCH_telemetry.jsonl``).
+    """
+    from repro.telemetry import TraceSink
+
+    if SMOKE:
+        vocab, clients, kpr, n_rounds, mean_samples = 512, 16, 4, 2, 8
+    else:
+        vocab, clients, kpr, n_rounds, mean_samples = 65_536, 32, 8, 8, 25
+    ds = make_sent140_like(num_clients=clients, vocab=vocab,
+                           mean_samples=mean_samples, seq_len=24)
+    cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=kpr,
+                    local_iters=2, local_batch=4, lr=0.3,
+                    algorithm="fedsubavg", sparse=True)
+
+    def make_trainer(telemetry, sink=None):
+        return FederatedTrainer(
+            ds, functools.partial(make_lstm_params, ds.num_features,
+                                  emb_dim=16, hidden=32, layers=1),
+            lstm_loss, cfg, telemetry=telemetry, sink=sink)
+
+    tr_off = make_trainer(False)
+    tr_off.run_round()                                   # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n_rounds):
+        tr_off.run_round()
+    us_off = (time.perf_counter() - t0) / n_rounds * 1e6
+
+    jsonl_path = os.environ.get("REPRO_BENCH_TELEMETRY_JSONL",
+                                "BENCH_telemetry.jsonl")
+    with TraceSink(jsonl_path) as sink:
+        tr_on = make_trainer(True, sink=sink)
+        tr_on.run_round()                                # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(n_rounds):
+            tr_on.run_round()
+        us_on = (time.perf_counter() - t0) / n_rounds * 1e6
+        n_events = len(sink.events)
+    summary = tr_on.telemetry_summary()
+
+    overhead = us_on / us_off
+    out.append(("sparse/telemetry_off", us_off,
+                f"V={vocab};K={kpr};rounds={n_rounds}"))
+    out.append(("sparse/telemetry_on", us_on,
+                f"V={vocab};K={kpr};rounds={n_rounds};"
+                f"overhead={overhead:.2f}x;"
+                f"dropped_ids={summary['dropped_ids']};"
+                f"mean_union={summary['mean_union_size']:.1f};"
+                f"jsonl={jsonl_path}"))
+    records.append(dict(section="telemetry", v=vocab, k=kpr, rounds=n_rounds,
+                        us_per_round_off=us_off, us_per_round_on=us_on,
+                        overhead=overhead,
+                        dropped_ids=summary["dropped_ids"],
+                        dropped_mass=summary["dropped_mass"],
+                        mean_union_size=summary["mean_union_size"],
+                        mean_density=summary["mean_density"],
+                        jsonl_events=n_events, jsonl=jsonl_path))
+
+
 def run():
     out = []
     records = []
@@ -306,6 +379,7 @@ def run():
     _bench_engine(out, records)
     _bench_replicated(out, records)
     _bench_sharded(out, records)
+    _bench_telemetry(out, records)
 
     # Pallas kernel (dense-output TPU path) at a kernel-friendly shape
     k, d, total = (4, 8, 100.0) if SMOKE else (16, 64, 100.0)

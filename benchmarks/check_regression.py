@@ -26,6 +26,14 @@ speed cancels:
 Both runs must use the same smoke shapes (``REPRO_BENCH_SMOKE=1``); records
 are matched on their shape keys and a missing match fails the gate.
 
+The telemetry section is validated on the FRESH run only (no baseline
+ratio): the record must carry the full counter schema, a trainer-derived
+run must report zero capacity drops (the trainer sizes ``sub_ids`` to fit,
+so any nonzero ``dropped_ids`` means the accounting or the capacity
+derivation broke), union size must be positive, and the JSONL sink must
+have received at least one event per timed round. The existing ratio gates
+above are untouched.
+
 Usage:
     python -m benchmarks.check_regression BENCH_sparse_engine.json \
         [--baseline benchmarks/BENCH_baseline_smoke.json] [--threshold 0.25]
@@ -39,6 +47,13 @@ import sys
 _UNION_KEY = ("v", "density", "k", "d")
 _ENGINE_KEY = ("v", "k", "rounds")
 _SHARDED_KEY = ("v", "k", "rounds", "ndev")
+
+#: every field a telemetry record must carry (section 6 of bench_sparse)
+_TELEMETRY_FIELDS = (
+    "v", "k", "rounds", "us_per_round_off", "us_per_round_on", "overhead",
+    "dropped_ids", "dropped_mass", "mean_union_size", "mean_density",
+    "jsonl_events", "jsonl",
+)
 
 
 def _index(records, section, key_fields):
@@ -121,6 +136,45 @@ def check(fresh: dict, baseline: dict, threshold: float):
             failures.append(
                 f"sharded {key} speedup_vs_1dev regressed "
                 f"{bsp:.2f}x -> {fsp:.2f}x (>{threshold:.0%})")
+
+    failures.extend(check_telemetry(fresh))
+    return failures
+
+
+def check_telemetry(fresh: dict):
+    """Fresh-only validation of the telemetry section (no baseline ratio)."""
+    failures = []
+    recs = [r for r in fresh.get("records", [])
+            if r.get("section") == "telemetry"]
+    if not recs:
+        failures.append("fresh run has no telemetry records")
+    for rec in recs:
+        key = (rec.get("v"), rec.get("k"), rec.get("rounds"))
+        missing = [f for f in _TELEMETRY_FIELDS if f not in rec]
+        if missing:
+            failures.append(f"telemetry {key}: record missing fields "
+                            f"{missing}")
+            continue
+        # trainer-derived sub_ids always fit their pow2 capacity: any drop
+        # means the accounting or the capacity derivation broke
+        if rec["dropped_ids"] != 0 or rec["dropped_mass"] != 0.0:
+            failures.append(
+                f"telemetry {key}: trainer-derived run reports nonzero "
+                f"capacity drops (dropped_ids={rec['dropped_ids']}, "
+                f"dropped_mass={rec['dropped_mass']})")
+        if not rec["mean_union_size"] > 0:
+            failures.append(f"telemetry {key}: mean_union_size must be "
+                            f"positive (got {rec['mean_union_size']!r})")
+        if not 0.0 < rec["mean_density"] <= 1.0:
+            failures.append(f"telemetry {key}: mean_density out of (0, 1] "
+                            f"(got {rec['mean_density']!r})")
+        # warmup + timed rounds each emit one JSONL round event
+        if rec["jsonl_events"] < rec["rounds"]:
+            failures.append(
+                f"telemetry {key}: JSONL sink saw {rec['jsonl_events']} "
+                f"events for {rec['rounds']} timed rounds")
+        if not rec["us_per_round_on"] > 0 or not rec["us_per_round_off"] > 0:
+            failures.append(f"telemetry {key}: non-positive per-round times")
     return failures
 
 

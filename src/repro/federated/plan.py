@@ -77,10 +77,14 @@ from repro.sparse.comm import CommMeta, CommStats, model_comm_meta, round_comm_s
 from repro.sparse.compress import compress_delta_tree
 from repro.sparse.encode import (DEFAULT_SPARSE_SPACES, batch_union_ids,
                                  decode_delta_tree, encode_delta_tree,
-                                 pin_labels, sparse_eligible,
-                                 submodel_value_and_grad, tree_leaf_at)
+                                 flat_feature_ids, pin_labels, sparse_eligible,
+                                 stacked_feature_ids, submodel_value_and_grad,
+                                 tree_leaf_at)
 from repro.sparse.rowsparse import (RowSparse, count_unique_ids, is_rowsparse,
                                     unique_ids_padded)
+from repro.telemetry.round import (HEAT_BUCKETS, RoundTelemetry, drop_stats,
+                                   heat_histogram, tree_agg_rows, tree_sq_sum,
+                                   union_ids_vec)
 
 Array = jax.Array
 
@@ -485,7 +489,7 @@ def _apply_plain(plain_params, update, eta: float):
 def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                      cfg: FedConfig, *, heat_counts: Optional[Dict] = None,
                      total: Optional[float] = None,
-                     server_alg=None) -> Callable:
+                     server_alg=None, telemetry: bool = False) -> Callable:
     """Compile a :class:`RoundPlan` into the single jittable round step.
 
     ``step(state, batch, sub_ids=None) -> (new_state, metrics)`` over a
@@ -503,7 +507,12 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
     built on demand otherwise.
 
     ``metrics`` always carries ``"loss"``; sparse transports add
-    ``"sub_rows"`` and ``"density"``.
+    ``"sub_rows"`` and ``"density"``. ``telemetry=True`` additionally puts a
+    :class:`repro.telemetry.round.RoundTelemetry` pytree under
+    ``metrics["telemetry"]`` — computed in-jit from values the step already
+    produces (no extra PRNG draws, no change to losses or parameters), so it
+    stacks along the scan axis under a multi-round ``lax.scan`` engine and
+    crosses ``shard_map`` boundaries via psums/all-gathers.
     """
     local, transport, server = plan.local, plan.transport, plan.server
     feature_keys = tuple(plan.feature_keys)
@@ -573,10 +582,7 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
         return batch_union_ids(data, feature_keys, capacity)
 
     def derive_cohort_ids(data: Dict) -> Array:
-        k = data[feature_keys[0]].shape[0]
-        feats = jnp.concatenate(
-            [jnp.asarray(data[fk]).reshape(k, -1) for fk in feature_keys],
-            axis=1)
+        feats = stacked_feature_ids(data, feature_keys)
         capacity = round_capacity(vocab, feats.shape[1])
         return jax.vmap(lambda f: unique_ids_padded(f, capacity))(feats)
 
@@ -586,6 +592,50 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 "in-step sub-id derivation needs feature tables sharing one "
                 f"axis-0 id space; found row counts {vocabs} — pass sub_ids "
                 "explicitly (as FederatedTrainer does)")
+
+    # ---- telemetry (in-jit observability; pure reads of existing values) --
+    heat_space = paths[0][1][0] if paths else None
+
+    def _cohort_drop_tel(data: Dict, used_ids: Optional[Array]):
+        """``(union ids, dropped, mass, per_client)`` from the round's ids.
+
+        ``used_ids`` is what the step actually consumed: the per-client
+        ``(K, R)`` sub-id stack or the flat ``(R,)`` cohort union. Drops are
+        priced against the raw batch feature ids — exactly what
+        ``unique_ids_padded``'s capacity contract silently discarded.
+        """
+        zi, zf = jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32)
+        if not (sparse and vocab) or used_ids is None:
+            return None, zi, zf, None
+        if used_ids.ndim == 2:
+            feats = stacked_feature_ids(data, feature_keys)
+            d_pc, m_pc = drop_stats(feats, used_ids, vocab)
+            return (union_ids_vec(used_ids, vocab),
+                    d_pc.sum(dtype=jnp.int32), m_pc.sum(),
+                    d_pc.astype(jnp.int32))
+        dropped, mass = drop_stats(flat_feature_ids(data, feature_keys),
+                                   used_ids, vocab)
+        return used_ids, dropped.astype(jnp.int32), mass, None
+
+    def _assemble_tel(union, dropped, mass, per_client, agg, counts,
+                      pre_sq, post_sq, shard_union_sizes=None):
+        union_size = ((union >= 0).sum(dtype=jnp.int32)
+                      if union is not None else jnp.zeros((), jnp.int32))
+        hv = counts.get(heat_space) if (counts and heat_space) else None
+        hist = (heat_histogram(hv, union)
+                if union is not None and hv is not None
+                else jnp.zeros((HEAT_BUCKETS,), jnp.float32))
+        dens = (union_size.astype(jnp.float32) / vocab if vocab
+                else jnp.zeros((), jnp.float32))
+        return RoundTelemetry(
+            dropped_ids=dropped, dropped_mass=mass,
+            dropped_per_client=per_client, union_size=union_size,
+            agg_rows=tree_agg_rows(agg) if (sparse and agg is not None)
+            else None,
+            shard_union_sizes=shard_union_sizes,
+            delta_norm_pre=jnp.sqrt(pre_sq),
+            delta_norm_post=jnp.sqrt(post_sq),
+            heat_hist=hist, density=dens)
 
     # ---- local step -------------------------------------------------------
     # run_local(params, data, sub_ids) -> (update, forward_loss|None,
@@ -746,6 +796,7 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
             aggregation, cross-shard combine. Returns the REPLICATED global
             aggregate (identical on every shard) + loss / sub-row stats."""
             update, _, used_ids, data = run_local(params, data, sub_ids)
+            raw = update
             if sparse and transport.topk:
                 # per-client row selection shards exactly (no cohort state)
                 update = compress_delta_tree(update, topk=transport.topk)
@@ -786,7 +837,19 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 sub_rows = jax.lax.psum(valid.sum(), s_axis)
             else:
                 sub_rows = jnp.zeros((), jnp.int32)
-            return agg, loss, sub_rows
+            if not telemetry:
+                return agg, loss, sub_rows
+            # pre/post-compression norms over the REAL clients only (pad
+            # clients are cyclic repeats; masking keeps them out of both)
+            pre_sq = jax.lax.psum(tree_sq_sum(_mask_clients(raw, wmask)),
+                                  s_axis)
+            post_sq = jax.lax.psum(tree_sq_sum(update), s_axis)
+            tel = {"norm_pre_sq": pre_sq, "norm_post_sq": post_sq}
+            if sparse:
+                masked = jnp.where((wmask > 0)[:, None], used_ids, -1)
+                tel["used_ids"] = masked
+                tel["shard_union"] = count_unique_ids(masked)[None]
+            return agg, loss, sub_rows, tel
 
         def _flat_shard_body(params, data, sub_ids, counts):
             """One shard's B/ndev examples of the pooled cohort batch.
@@ -821,9 +884,40 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 # the single-device union count: distinct ids across shards
                 sub_rows = count_unique_ids(
                     jax.lax.all_gather(used_ids, s_axis))
-                return agg, loss, sub_rows
-            update = jax.tree.map(lambda g: jax.lax.pmean(g, s_axis), update)
-            return update, loss, jnp.zeros((), jnp.int32)
+                out = (agg, loss, sub_rows)
+            else:
+                update = jax.tree.map(lambda g: jax.lax.pmean(g, s_axis),
+                                      update)
+                out = (update, loss, jnp.zeros((), jnp.int32))
+            if not telemetry:
+                return out
+            # the flat path never compresses under sharding (topk/int8 are
+            # rejected combos above), so pre == post: the L2 of the combined
+            # replicated aggregate is the honest per-round figure here
+            sq = tree_sq_sum(out[0])
+            tel = {"norm_pre_sq": sq, "norm_post_sq": sq}
+            if sparse:
+                tel["used_ids"] = used_ids[None]
+                tel["shard_union"] = (used_ids >= 0).sum(
+                    dtype=jnp.int32)[None]
+            return out + (tel,)
+
+        def _shard_out_specs():
+            """out_specs of a shard body: (agg, loss, sub_rows[, telemetry]).
+
+            Telemetry parts: psum'd norms are replicated (``P()``); the
+            per-shard union size and the shard's used sub-ids keep their
+            shard axis (``P(s_axis)``) so the host sees one value per device
+            and the full reassembled id stack.
+            """
+            base = (P(), P(), P())
+            if not telemetry:
+                return base
+            tspec = {"norm_pre_sq": P(), "norm_post_sq": P()}
+            if sparse:
+                tspec["used_ids"] = P(s_axis)
+                tspec["shard_union"] = P(s_axis)
+            return base + (tspec,)
 
         def sharded_cohort_update(params, data, counts, sub_ids):
             """Wrap the shard body in shard_map over the cohort axis.
@@ -832,7 +926,10 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
             the client axis; flat locals shard the pooled batch axis. The
             returned aggregate is replicated — bitwise identical on every
             shard — so the server apply that follows needs no resharding.
+            Returns ``(agg, loss, sub_rows, k_real, tel)`` with ``tel`` the
+            shard-body telemetry parts (``None`` when telemetry is off).
             """
+            ospecs = _shard_out_specs()
             if local.stacked:
                 k_real = data[feature_keys[0]].shape[0]
                 kp = -(-k_real // ndev) * ndev
@@ -855,16 +952,17 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                     fn = shard_map(
                         lambda p, d, w, c: body(p, d, None, w, c), mesh=mesh,
                         in_specs=(P(), dspec, P(s_axis), P()),
-                        out_specs=(P(), P(), P()), check_rep=False)
-                    agg, loss, sub_rows = fn(params, data, wmask, counts)
+                        out_specs=ospecs, check_rep=False)
+                    res = fn(params, data, wmask, counts)
                 else:
                     fn = shard_map(
                         body, mesh=mesh,
                         in_specs=(P(), dspec, P(s_axis), P(s_axis), P()),
-                        out_specs=(P(), P(), P()), check_rep=False)
-                    agg, loss, sub_rows = fn(params, data, sub_ids, wmask,
-                                             counts)
-                return agg, loss, sub_rows, k_real
+                        out_specs=ospecs, check_rep=False)
+                    res = fn(params, data, sub_ids, wmask, counts)
+                agg, loss, sub_rows = res[:3]
+                return agg, loss, sub_rows, k_real, (res[3] if telemetry
+                                                     else None)
             # flat pooled batch: shard the example axis
             bleaf = (feature_keys[0] if feature_keys[0] in data
                      else next(iter(data)))
@@ -895,22 +993,24 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 fn = shard_map(
                     lambda p, d, c: _flat_shard_body(p, d, None, c),
                     mesh=mesh, in_specs=(P(), dspec, P()),
-                    out_specs=(P(), P(), P()), check_rep=False)
-                agg, loss, sub_rows = fn(params, data, counts)
+                    out_specs=ospecs, check_rep=False)
+                res = fn(params, data, counts)
             else:
                 fn = shard_map(_flat_shard_body, mesh=mesh,
                                in_specs=(P(), dspec, P(), P()),
-                               out_specs=(P(), P(), P()), check_rep=False)
-                agg, loss, sub_rows = fn(params, data, sub_ids, counts)
-            return agg, loss, sub_rows, None
+                               out_specs=ospecs, check_rep=False)
+                res = fn(params, data, sub_ids, counts)
+            agg, loss, sub_rows = res[:3]
+            return agg, loss, sub_rows, None, (res[3] if telemetry else None)
 
         def sharded_step(state: ServerState, batch: Dict,
                          sub_ids: Optional[Array] = None):
             params = state.params
             heat, data = split_heat_batch(batch)
             counts = batch_counts(heat)
-            agg, loss, sub_rows, k_real = sharded_cohort_update(
+            agg, loss, sub_rows, k_real, tel = sharded_cohort_update(
                 params, data, counts, sub_ids)
+            agg_tree = agg if sparse else None
             if sparse:
                 new_state = apply_sparse(state, agg)
             else:
@@ -923,6 +1023,22 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 denom = vocab if k_real is None else k_real * vocab
                 metrics["sub_rows"] = sub_rows
                 metrics["density"] = sub_rows / denom
+            if telemetry:
+                used = None
+                if sparse and vocab:
+                    u = tel["used_ids"]
+                    # stacked: pad clients sit at the END of the reassembled
+                    # (kp, R) stack (cyclic-repeat padding), so [:k_real]
+                    # recovers the real cohort. Flat: one per-shard id vector
+                    # per device — their union is the cohort union.
+                    used = (u[:k_real] if k_real is not None
+                            else union_ids_vec(u, vocab))
+                union, dropped, mass, per_client = _cohort_drop_tel(
+                    data, used)
+                metrics["telemetry"] = _assemble_tel(
+                    union, dropped, mass, per_client, agg_tree, counts,
+                    tel["norm_pre_sq"], tel["norm_post_sq"],
+                    shard_union_sizes=tel.get("shard_union"))
             return new_state, metrics
 
         return sharded_step
@@ -933,13 +1049,16 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
         heat, data = split_heat_batch(batch)
         counts = batch_counts(heat)
         update, fwd_loss, used_ids, data = run_local(params, data, sub_ids)
+        pre_sq = tree_sq_sum(update) if telemetry else None
 
+        agg_tree = None
         if sparse:
             if transport.topk or transport.int8:
                 key = (jax.random.fold_in(base_key, state.rounds)
                        if transport.int8 else None)
                 update = compress_delta_tree(update, topk=transport.topk,
                                              int8=transport.int8, key=key)
+            post_sq = tree_sq_sum(update) if telemetry else None
             if local.stacked:
                 k = data[feature_keys[0]].shape[0]
                 agg = sparse_cohort_aggregate(
@@ -959,8 +1078,10 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 agg = jax.tree.map(
                     fix, update, heat_spec.leaf_spaces,
                     is_leaf=lambda x: x is None or is_rowsparse(x))
+            agg_tree = agg
             new_state = apply_sparse(state, agg)
         else:
+            post_sq = pre_sq          # dense transport: no wire compression
             if isinstance(local, SubmodelReplicatedLocal):
                 # submodel replicas against a dense server transport: the
                 # born-sparse per-client deltas scatter back to dense stacks
@@ -982,6 +1103,11 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
             denom = vocab if used_ids.ndim == 1 else used_ids.shape[0] * vocab
             metrics["sub_rows"] = sub_rows
             metrics["density"] = sub_rows / denom
+        if telemetry:
+            union, dropped, mass, per_client = _cohort_drop_tel(data, used_ids)
+            metrics["telemetry"] = _assemble_tel(
+                union, dropped, mass, per_client, agg_tree, counts,
+                pre_sq, post_sq)
         return new_state, metrics
 
     return step

@@ -15,6 +15,7 @@ one dispatch system, two entry points.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -41,6 +42,9 @@ from repro.sharding.logical import unbox
 from repro.sparse.comm import CommStats, model_comm_meta
 from repro.sparse.encode import tree_leaf_at
 from repro.sparse.rowsparse import count_unique_ids, unique_ids_padded
+from repro.telemetry import PhaseTimer, TraceSink
+from repro.telemetry.round import (RoundTelemetry, split_rounds,
+                                   telemetry_to_host)
 
 
 @dataclass
@@ -52,7 +56,12 @@ class RoundRecord:
     bytes_up: float = 0.0            # cumulative sparse-plane uplink bytes
     bytes_down: float = 0.0          # cumulative sparse-plane downlink bytes
     density: float = 1.0             # mean per-client submodel density so far
-    wall_time: float = 0.0           # mean seconds/round since the last record
+    wall_time: float = 0.0           # STEADY-STATE mean seconds/round since
+                                     # the last record (compiling dispatches
+                                     # excluded; blended mean only when every
+                                     # dispatch of the stretch compiled)
+    compile_time: float = 0.0        # seconds spent in compiling dispatches
+                                     # since the last record (0 once warm)
 
 
 # ---------------------------------------------------------------------------
@@ -127,14 +136,24 @@ class FederatedTrainer:
                  predict_fn: Optional[Callable] = None,
                  metric: str = "auc", rng_seed: int = 0,
                  plan: Optional[RoundPlan] = None,
-                 mesh: Optional[Any] = None):
+                 mesh: Optional[Any] = None,
+                 telemetry: bool = True,
+                 sink: Optional[TraceSink] = None):
         """``mesh``: a device mesh (e.g. ``make_cohort_mesh()``) to shard the
         cohort axis of every round over its ``"data"`` axis. The host-side
         pipeline is untouched — cohorts are sampled from the same RNG stream
         and laid out shard-major (device d owns the contiguous client block
         d), so sharded rounds reproduce single-device rounds to 1e-5. Pass a
         plan with an explicit ``CohortSharding`` for a non-default axis or
-        combine strategy."""
+        combine strategy.
+
+        ``telemetry``: compute the in-jit :class:`RoundTelemetry` counters
+        each round (pure reads — losses, parameters and the RNG stream are
+        bit-identical either way) and collect them in ``telemetry_log``.
+        ``sink``: a :class:`repro.telemetry.TraceSink` receiving structured
+        round/record events (and the verbose reporting); an in-memory sink
+        is created when omitted — pass ``TraceSink(path)`` to persist JSONL.
+        """
         self.ds = ds
         self.cfg = cfg
         self.loss_fn = loss_fn
@@ -160,6 +179,12 @@ class FederatedTrainer:
         self._sparse_local: Optional[str] = None
         self._sparse_paths: List = []
         self._is_sparse = False
+        self.telemetry_enabled = bool(telemetry)
+        self.sink = sink if sink is not None else TraceSink()
+        self.timer = PhaseTimer()
+        self.telemetry_log: List[Dict[str, Any]] = []
+        self._compiled_keys: set = set()      # jit-cache keys seen -> warm
+        self._last_dispatch_compiled = False
 
         if cfg.algorithm == "central":
             if plan is not None:
@@ -182,7 +207,8 @@ class FederatedTrainer:
         self._is_sparse = self.plan.transport.sparse
         round_step = build_round_step(self.plan, loss_fn, params, cfg,
                                       heat_counts=heat_counts, total=total,
-                                      server_alg=self.alg)
+                                      server_alg=self.alg,
+                                      telemetry=self.telemetry_enabled)
         if self._is_sparse:
             # jit caches one trace per sub_ids capacity (kept to O(log V)
             # variants by pow2_capacity bucketing); ServerState buffers are
@@ -307,6 +333,38 @@ class FederatedTrainer:
         return HeatStats(counts=np.asarray(counts, np.float64), total=float(total),
                          name="vocab")
 
+    def _mark_dispatch(self, key) -> None:
+        """Record whether the NEXT jitted dispatch will compile.
+
+        ``key`` names the executable variant about to run — ``("step", cap)``,
+        ``("engine", n, cap)``, ``("dense",)``, ``("central",)`` — mirroring
+        the static arguments that actually key the jit cache, so ``run()``
+        can attribute wall time to compile vs steady state without poking
+        jit internals.
+        """
+        self._last_dispatch_compiled = key not in self._compiled_keys
+        self._compiled_keys.add(key)
+
+    def _record_telemetry(self, tel, rnd: int,
+                          comm: Optional[CommStats] = None) -> None:
+        """Append one round's telemetry to ``telemetry_log`` and the sink.
+
+        ``tel`` is the in-jit :class:`RoundTelemetry` (or an already-host
+        dict split from a scan-stacked engine run); ``comm`` attaches the
+        round's byte accounting under a ``"comm"`` sub-object (its
+        ``round``/``density`` keys would collide with telemetry fields
+        at the top level).
+        """
+        if tel is None:
+            return
+        if isinstance(tel, RoundTelemetry):
+            tel = telemetry_to_host(tel)
+        event = {"event": "round", "round": int(rnd), **tel}
+        if comm is not None:
+            event["comm"] = comm.as_dict()
+        self.telemetry_log.append(event)
+        self.sink.emit(event)
+
     def _sample_sparse_cohort(self):
         """One round's host work: sample the cohort and stack its feature ids.
 
@@ -347,9 +405,12 @@ class FederatedTrainer:
         capacity = pow2_capacity(int(valid_counts.max()))
         sub_ids = derive_sub_ids(feats, self.ds.num_features, capacity)
         cohort = {k: jnp.asarray(v) for k, v in cohort.items()}
+        self._mark_dispatch(("step", capacity))
         self.state, metrics = self._sparse_step(self.state, cohort, sub_ids)
         self._last_capacity = capacity
         self._log_sparse_comm(valid_counts, capacity)
+        self._record_telemetry(metrics.get("telemetry"), self._rounds_run,
+                               comm=self.comm_log[-1])
         return float(metrics["loss"])
 
     def run_rounds(self, n: int) -> List[float]:
@@ -388,12 +449,18 @@ class FederatedTrainer:
         capacity = pow2_capacity(int(valid_counts.max()))
         sub_ids = derive_sub_ids(flat_feats, self.ds.num_features,
                                  capacity).reshape(n, k, capacity)
+        self._mark_dispatch(("engine", n, capacity))
         self.state, metrics = self._sparse_engine(self.state, stacked, sub_ids)
         losses = np.asarray(metrics["loss"])
         self._last_capacity = capacity
+        # telemetry rode the scan: each field gained a leading round axis
+        tel_events = (split_rounds(metrics["telemetry"], n)
+                      if "telemetry" in metrics else [None] * n)
         for r in range(n):
             self._rounds_run += 1
             self._log_sparse_comm(valid_counts[r], capacity)
+            self._record_telemetry(tel_events[r], self._rounds_run,
+                                   comm=self.comm_log[-1])
         return [float(l) for l in losses]
 
     def _make_central_step(self):
@@ -416,6 +483,7 @@ class FederatedTrainer:
                                      cfg.local_batch * cfg.clients_per_round,
                                      self.np_rng)
             batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            self._mark_dispatch(("central",))
             self.state, loss = self._central_step(self.state, batches)
             return float(loss)
         if self._is_sparse:
@@ -425,7 +493,9 @@ class FederatedTrainer:
         cohort = sample_cohort_batch(self.ds, ids, cfg.local_iters, cfg.local_batch,
                                      self.np_rng)
         cohort = {k: jnp.asarray(v) for k, v in cohort.items()}
+        self._mark_dispatch(("dense",))
         self.state, metrics = self._round_step(self.state, cohort)
+        self._record_telemetry(metrics.get("telemetry"), self._rounds_run)
         return float(metrics["loss"])
 
     def evaluate(self) -> float:
@@ -450,43 +520,105 @@ class FederatedTrainer:
         from repro.federated.metrics import comm_summary
         return comm_summary(self.comm_log)
 
+    def telemetry_summary(self) -> Dict[str, Any]:
+        """Aggregate the per-round telemetry events collected so far."""
+        from repro.federated.metrics import telemetry_summary
+        return telemetry_summary(self.telemetry_log)
+
     def run(self, rounds: int, eval_every: int = 10, verbose: bool = False,
-            engine: bool = False):
+            engine: bool = False, profile_dir: Optional[str] = None):
         """Train for ``rounds`` rounds, evaluating every ``eval_every``.
 
         ``engine=True`` drives each between-evals stretch through
         ``run_rounds`` (the in-jit multi-round scan) instead of one
         ``run_round`` dispatch per round; results are identical to f32
-        tolerance. Per-round wall time lands in ``RoundRecord.wall_time``.
+        tolerance.
+
+        Timing is attributed per dispatch: ``RoundRecord.wall_time`` is the
+        steady-state mean seconds/round of the stretch (compiling dispatches
+        excluded — falling back to the blended mean only when EVERY dispatch
+        of the stretch compiled, so it is never zero), and the compile cost
+        lands in ``RoundRecord.compile_time`` (zero once the jit caches are
+        warm). The same samples feed ``self.timer`` (phases ``"round"``,
+        ``"eval"``, ``"train_loss"``).
+
+        ``profile_dir``: wrap the whole call in a ``jax.profiler`` trace
+        written under that directory (TensorBoard-loadable), with one
+        ``TraceAnnotation`` per dispatched stretch so kernels are
+        attributable to training phases.
 
         ``RoundRecord.round`` numbers continue from the trainer's global
         round counter, so repeated ``run()`` calls (or mixing ``run_round``
         with ``run``) append monotone history instead of colliding with it.
         """
+        if profile_dir is not None:
+            jax.profiler.start_trace(str(profile_dir))
+        try:
+            return self._run_chunks(rounds, eval_every, verbose, engine,
+                                    annotate=profile_dir is not None)
+        finally:
+            if profile_dir is not None:
+                jax.profiler.stop_trace()
+
+    def _run_chunks(self, rounds: int, eval_every: int, verbose: bool,
+                    engine: bool, annotate: bool = False):
         done = 0
+        # the engine only exists on the sparse path; dense/central configs
+        # fall back to per-round dispatches (where compile attribution is
+        # per round, not per chunk)
+        use_engine = (engine and self._is_sparse
+                      and self.cfg.algorithm != "central")
         while done < rounds:
             chunk = min(eval_every - done % eval_every, rounds - done)
+            ctx = (jax.profiler.TraceAnnotation(
+                f"rounds[{self._rounds_run}:{self._rounds_run + chunk}]")
+                if annotate else contextlib.nullcontext())
+            compile_s = 0.0
+            steady: List[float] = []
+
+            def account(dt: float, per_round: float):
+                nonlocal compile_s
+                if self._last_dispatch_compiled:
+                    compile_s += dt
+                    self.timer.add("round", dt, compile=True)
+                else:
+                    steady.append(per_round)
+                    self.timer.add("round", per_round)
+
             t0 = time.perf_counter()
-            if engine:
-                self.run_rounds(chunk)
-            else:
-                for _ in range(chunk):
-                    self.run_round()
-            wall = (time.perf_counter() - t0) / chunk
+            with ctx:
+                if use_engine:
+                    self.run_rounds(chunk)
+                    dt = time.perf_counter() - t0
+                    account(dt, dt / chunk)
+                else:
+                    for _ in range(chunk):
+                        t1 = time.perf_counter()
+                        self.run_round()
+                        dt = time.perf_counter() - t1
+                        account(dt, dt)
+            total = time.perf_counter() - t0
+            wall = sum(steady) / len(steady) if steady else total / chunk
             done += chunk
             if done % eval_every == 0 or done == rounds:
-                metric = self.evaluate()
-                rec = RoundRecord(self._rounds_run, self.train_loss(), metric,
-                                  wall_time=wall)
+                with self.timer.phase("eval"):
+                    metric = self.evaluate()
+                with self.timer.phase("train_loss"):
+                    tl = self.train_loss()
+                rec = RoundRecord(self._rounds_run, tl, metric,
+                                  wall_time=wall, compile_time=compile_s)
                 if self.comm_log:
                     s = self.comm_summary()
                     rec.bytes_up = s["bytes_up_sparse"]
                     rec.bytes_down = s["bytes_down_sparse"]
                     rec.density = s["mean_density"]
                 self.history.append(rec)
+                self.sink.emit({"event": "record",
+                                **dataclasses.asdict(rec)})
                 if verbose:
-                    print(f"[{self.cfg.algorithm}] round {self._rounds_run}: "
-                          f"loss={self.history[-1].train_loss:.4f} "
-                          f"{self.metric}={metric:.4f} "
-                          f"({wall * 1e3:.1f} ms/round)")
+                    self.sink.report(
+                        f"[{self.cfg.algorithm}] round {self._rounds_run}: "
+                        f"loss={self.history[-1].train_loss:.4f} "
+                        f"{self.metric}={metric:.4f} "
+                        f"({wall * 1e3:.1f} ms/round)")
         return self.history

@@ -57,7 +57,8 @@ from repro.federated.plan import (  # noqa: F401 (historical re-exports)
 
 def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
                     mode: str = "fedsgd", correct: bool = True,
-                    feature_key: str = "tokens") -> Callable:
+                    feature_key: str = "tokens",
+                    telemetry: bool = False) -> Callable:
     """Build the jittable federated round step for pod-scale training.
 
     round_step(params, batch) -> (new_params, metrics)
@@ -71,6 +72,11 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
     This entry point is stateless — it threads bare parameters, not a
     ``ServerState`` — so plans with stateful server optimizers (scaffold /
     fedadam) must run under ``FederatedTrainer`` or ``build_round_step``.
+
+    ``telemetry=True`` adds the in-jit observability counters
+    (:class:`repro.telemetry.round.RoundTelemetry`) under
+    ``metrics["telemetry"]`` without changing losses, parameters, or the
+    RNG stream.
     """
     plan = resolve_plan(mode, cfg, correct=correct, feature_key=feature_key)
     if not plan.server.stateless:
@@ -78,7 +84,8 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
             f"make_round_step is stateless; ServerUpdate("
             f"{plan.server.algorithm!r}) carries optimizer slots — drive "
             f"this plan through FederatedTrainer or build_round_step")
-    step = build_round_step(plan, loss_fn, boxed_params_template, cfg)
+    step = build_round_step(plan, loss_fn, boxed_params_template, cfg,
+                            telemetry=telemetry)
     int8 = getattr(plan.transport, "int8", False)
 
     def round_step(params, batch):

@@ -146,10 +146,34 @@ def submodel_value_and_grad(loss_fn: Callable, params, batch: Dict,
     return loss, grads
 
 
+def flat_feature_ids(batch: Dict, feature_keys: Sequence[str]) -> Array:
+    """Every feature id of the batch as one flat vector (padding ids kept).
+
+    The single source of "which ids does this cohort touch" for the flat
+    pooled-batch layout — consumed by :func:`batch_union_ids` and by the
+    telemetry plane's capacity-drop accounting, so the two can never
+    disagree about what counts as a touched id.
+    """
+    return jnp.concatenate(
+        [jnp.asarray(batch[k]).reshape(-1) for k in feature_keys])
+
+
+def stacked_feature_ids(batch: Dict, feature_keys: Sequence[str]) -> Array:
+    """Per-client ``(K, M)`` concatenation of the feature-id columns.
+
+    The stacked-cohort sibling of :func:`flat_feature_ids`: row k holds every
+    id client k's batch touches (across all feature keys, padding ids kept).
+    Consumed by per-client sub-id derivation and by the telemetry plane's
+    per-client drop accounting.
+    """
+    k = batch[feature_keys[0]].shape[0]
+    return jnp.concatenate(
+        [jnp.asarray(batch[fk]).reshape(k, -1) for fk in feature_keys], axis=1)
+
+
 def batch_union_ids(batch: Dict, feature_keys: Sequence[str], capacity: int) -> Array:
     """Union of the batch's feature ids across keys, padded to ``capacity``."""
-    flat = jnp.concatenate([jnp.asarray(batch[k]).reshape(-1) for k in feature_keys])
-    return unique_ids_padded(flat, capacity)
+    return unique_ids_padded(flat_feature_ids(batch, feature_keys), capacity)
 
 
 def pin_labels(data: Dict, feature_key: str = "tokens") -> Dict:

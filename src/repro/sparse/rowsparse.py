@@ -139,6 +139,24 @@ def count_unique_ids(ids: Array) -> Array:
     return (first & (s != sentinel)).sum(dtype=jnp.int32)
 
 
+def membership(tokens: Array, ids: Array) -> Array:
+    """Boolean mask: is each token present in ``ids``?
+
+    ``ids`` follows the ``unique_ids_padded`` convention (sorted ascending,
+    ``-1`` pads). Negative tokens are never members. The exact-membership
+    sibling of :func:`remap_ids` (which assumes coverage): binary search plus
+    an equality check, so absent tokens report ``False`` instead of an
+    arbitrary slot — this is what lets the telemetry plane price capacity
+    drops exactly.
+    """
+    sentinel = jnp.iinfo(jnp.int32).max
+    key = jnp.where(ids >= 0, ids, sentinel)
+    t = tokens.astype(jnp.int32)
+    pos = jnp.searchsorted(key, t)
+    hit = jnp.take(key, jnp.minimum(pos, key.shape[-1] - 1)) == t
+    return hit & (t >= 0)
+
+
 def remap_ids(tokens: Array, ids: Array) -> Array:
     """Map feature ids to their slot in ``ids`` (sorted uniques then -1 pads).
 

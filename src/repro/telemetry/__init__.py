@@ -1,0 +1,31 @@
+"""Observability plane: in-jit round telemetry, trace sink, phase timing.
+
+Deliberately a sibling package of ``repro.federated`` (whose public API
+surface is pinned): the execution plane imports nothing from here except
+``repro.telemetry.round``'s pure-jnp helpers, and everything host-side
+(sink, timer, JSONL readers) lives behind this namespace.
+"""
+from repro.telemetry.round import (HEAT_BUCKETS, RoundTelemetry, drop_stats,
+                                   heat_histogram, split_rounds,
+                                   telemetry_to_host, tree_agg_rows,
+                                   tree_sq_per_client, tree_sq_sum,
+                                   union_ids_vec, valid_feature_ids)
+from repro.telemetry.sink import TraceSink, read_events
+from repro.telemetry.timer import PhaseTimer
+
+__all__ = [
+    "HEAT_BUCKETS",
+    "PhaseTimer",
+    "RoundTelemetry",
+    "TraceSink",
+    "drop_stats",
+    "heat_histogram",
+    "read_events",
+    "split_rounds",
+    "telemetry_to_host",
+    "tree_agg_rows",
+    "tree_sq_per_client",
+    "tree_sq_sum",
+    "union_ids_vec",
+    "valid_feature_ids",
+]

@@ -1,0 +1,72 @@
+"""Host-side trace sink: structured JSONL round events + a verbose reporter.
+
+The in-jit :class:`~repro.telemetry.round.RoundTelemetry` counters are only
+useful if they land somewhere analyzable. :class:`TraceSink` merges each
+round's ``RoundRecord``, ``CommStats`` and telemetry into one flat JSON
+object per line — the standard grep/pandas-friendly trace format — and also
+owns the trainer's verbose reporting, routed through :mod:`logging` so test
+harnesses (``caplog``) and real deployments can capture it.
+"""
+from __future__ import annotations
+
+import json
+import logging
+from typing import IO, Any, Dict, List, Optional
+
+logger = logging.getLogger("repro.telemetry")
+
+
+class TraceSink:
+    """Collects structured round events; optionally persists them as JSONL.
+
+    ``emit(event)`` appends a dict to the in-memory log and, when a path was
+    given, writes it as one JSON line (flushed immediately, so a crashed run
+    still leaves a readable trace). ``report(msg)`` is the human channel:
+    it logs at INFO and falls back to ``print`` when no handler would show
+    the message, preserving the old ``verbose=True`` console behaviour.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = str(path) if path is not None else None
+        self.events: List[Dict[str, Any]] = []
+        self._fh: Optional[IO[str]] = None
+        if self.path is not None:
+            self._fh = open(self.path, "w")
+
+    # -- structured channel ------------------------------------------------
+    def emit(self, event: Dict[str, Any]) -> None:
+        self.events.append(event)
+        if self._fh is not None:
+            self._fh.write(json.dumps(event) + "\n")
+            self._fh.flush()
+
+    # -- human channel -----------------------------------------------------
+    def report(self, msg: str) -> None:
+        logger.info(msg)
+        # logging's root default (WARNING) swallows INFO: keep the verbose
+        # console UX unless someone actually routed the logger somewhere.
+        if not logger.isEnabledFor(logging.INFO):
+            print(msg)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "TraceSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_events(path: str) -> List[Dict[str, Any]]:
+    """Parse a JSONL trace written by :class:`TraceSink`."""
+    events = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
