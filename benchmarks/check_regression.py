@@ -77,6 +77,19 @@ def _union_ratios(rec):
 def check(fresh: dict, baseline: dict, threshold: float):
     failures = []
 
+    # a baseline that lacks a whole section the fresh bench emits means the
+    # committed file is stale or truncated: every comparison in that section
+    # would be skipped silently and the gate would pass vacuously. Fail by
+    # section name instead (telemetry is fresh-only by design, not listed).
+    fresh_sections = {r.get("section") for r in fresh.get("records", [])}
+    base_sections = {r.get("section") for r in baseline.get("records", [])}
+    for section in ("union_backends", "engine", "sharded"):
+        if section in fresh_sections and section not in base_sections:
+            failures.append(
+                f"baseline has no '{section}' section but the fresh run "
+                f"emits one — the committed baseline is stale or truncated; "
+                "regenerate it with REPRO_BENCH_SMOKE=1 bench_sparse")
+
     fresh_u = _index(fresh.get("records", []), "union_backends", _UNION_KEY)
     base_u = _index(baseline.get("records", []), "union_backends", _UNION_KEY)
     if not fresh_u:

@@ -1,0 +1,37 @@
+"""repro.analysis: correctness tooling for the jitted federated round path.
+
+Three layers, each machine-checking a bug class this repo has actually
+shipped (see DESIGN.md "Static analysis & sanitizer" for the rule table):
+
+``repro.analysis.lint``
+    AST-based jit-hygiene linter, stdlib-only so the CI gate runs without
+    jax installed: ``python -m repro.analysis.lint src/``.
+
+``repro.analysis.jaxpr_audit``
+    Compiled-artifact auditor: walks a built round step's closed jaxpr for
+    dense ``(V, D)`` intermediates on RowSparse plans, checks donation
+    actually aliased in the lowered HLO, and provides ``jit_cache_guard``
+    (compile-count pinning across traced-hyperparameter sweeps).
+
+``repro.analysis.sanitize``
+    ``checkify``-wired runtime sanitizer behind ``RoundPlan(
+    debug_checks=True)``: validates the RowSparse contract in-jit at the
+    plane boundaries, bit-identical to the unchecked step when clean.
+
+Submodules are imported lazily: ``lint`` must stay importable in an
+environment without jax, so this package must not pull the jax-dependent
+layers at import time.
+"""
+from __future__ import annotations
+
+_SUBMODULES = ("lint", "jaxpr_audit", "sanitize")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        import importlib
+
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,223 @@
+"""Compiled-artifact auditor: jaxpr and HLO checks for the sparse plane.
+
+The linter (:mod:`repro.analysis.lint`) reads source; this module reads what
+JAX actually built.  Three checks, each pinning a property the repo's perf
+work depends on:
+
+``find_dense_intermediates`` / ``assert_no_dense_intermediates``
+    Walk a traced function's closed jaxpr (recursively, through pjit /
+    scan / cond / shard_map sub-jaxprs) and report every intermediate whose
+    leading dimension equals the full vocabulary size.  On a RowSparse
+    transport plan nothing between the client gather and the server
+    scatter-add should be ``(V, ...)``-shaped — a hit means some step of
+    the pipeline silently densified and the O(R/V) transport win is gone.
+    The server scatter-add itself *writes* the ``(V, D)`` table, so scatter
+    primitives are allowed by default; everything else that *produces* a
+    vocab-sized array (``broadcast_in_dim`` zeros from ``to_dense()``,
+    dense adds, transposes of the table) is flagged.
+
+``donation_aliased``
+    Confirm that a donated argument is actually aliased to an output in the
+    lowered HLO (the ``tf.aliasing_output`` attribute).  Donation requests
+    are silently dropped when shapes/dtypes fail to line up; this turns
+    "we asked" into "it happened".
+
+``jit_cache_guard``
+    Context manager pinning the number of *new* compilations of one or
+    more jitted callables.  Sweeping a traced hyperparameter (heat scale,
+    int8 rounding key) through a step must not recompile; a static-arg or
+    weak-type leak shows up here as a hard failure instead of a silent
+    10x slowdown.
+
+Everything here needs jax; import via ``repro.analysis`` lazily so the
+linter stays usable in environments without it.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "DenseIntermediate",
+    "DenseMaterializationError",
+    "CompileCountError",
+    "find_dense_intermediates",
+    "assert_no_dense_intermediates",
+    "donation_aliased",
+    "jit_cache_guard",
+]
+
+# Primitives that legitimately emit a vocab-sized array on a sparse plan:
+# the server-side row update writes into the (V, D) table in place.
+_DEFAULT_ALLOWED = ("scatter-add", "scatter", "scatter-mul", "scatter-apply")
+
+
+@dataclass(frozen=True)
+class DenseIntermediate:
+    """One vocab-sized intermediate found in a jaxpr walk."""
+
+    primitive: str
+    shape: tuple
+    dtype: str
+    path: str          # e.g. "pjit/scan/body"
+
+    def __str__(self) -> str:
+        where = self.path or "<top>"
+        return f"{self.primitive} -> {self.shape} {self.dtype} at {where}"
+
+
+class DenseMaterializationError(AssertionError):
+    """A RowSparse plan materialised a full-vocab intermediate."""
+
+    def __init__(self, dim0: int, hits: Sequence[DenseIntermediate]):
+        self.dim0 = dim0
+        self.hits = tuple(hits)
+        lines = "\n".join(f"  - {h}" for h in hits)
+        super().__init__(
+            f"found {len(hits)} dense (V={dim0}, ...) intermediate(s) on a "
+            f"sparse-transport plan:\n{lines}"
+        )
+
+
+def _iter_subjaxprs(params: dict) -> Iterable[tuple[str, Any]]:
+    """Yield (name, Jaxpr) for every sub-jaxpr in an eqn's params.
+
+    Duck-typed: pjit/scan/remat carry a ClosedJaxpr under 'jaxpr' or
+    'call_jaxpr', cond carries a tuple under 'branches', custom_vjp a
+    callable-wrapped one we can't see (fine: it retraces into the parent
+    when not opaque).
+    """
+    for key, val in params.items():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for i, v in enumerate(vals):
+            inner = getattr(v, "jaxpr", None)  # ClosedJaxpr -> Jaxpr
+            if inner is None and hasattr(v, "eqns"):
+                inner = v                       # already a raw Jaxpr
+            if inner is not None and hasattr(inner, "eqns"):
+                name = key if len(vals) == 1 else f"{key}[{i}]"
+                yield name, inner
+
+
+def _walk(jaxpr, dim0: int, min_ndim: int, allowed: frozenset,
+          path: str, out: list) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim not in allowed:
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                shape = getattr(aval, "shape", ())
+                dtype = getattr(aval, "dtype", None)
+                # only floating-point hits count: the transport payload is
+                # float rows, while int/bool (V,)-sized id workspaces (the
+                # mark-scatter union machinery) are accepted O(V*4B) cost
+                inexact = dtype is not None and jnp.issubdtype(
+                    dtype, jnp.inexact)
+                if (inexact and len(shape) >= min_ndim and shape
+                        and shape[0] == dim0):
+                    out.append(DenseIntermediate(
+                        primitive=prim,
+                        shape=tuple(shape),
+                        dtype=str(getattr(aval, "dtype", "?")),
+                        path=path,
+                    ))
+        for name, sub in _iter_subjaxprs(eqn.params):
+            sub_path = f"{path}/{prim}:{name}" if path else f"{prim}:{name}"
+            _walk(sub, dim0, min_ndim, allowed, sub_path, out)
+
+
+def find_dense_intermediates(
+    fn: Callable,
+    *args,
+    dim0: int,
+    min_ndim: int = 2,
+    allowed_primitives: Sequence[str] = _DEFAULT_ALLOWED,
+    **kwargs,
+) -> list[DenseIntermediate]:
+    """Trace ``fn(*args, **kwargs)`` and list intermediates shaped (dim0, ...).
+
+    ``dim0`` is the full vocabulary size V.  Inputs and outputs of the
+    traced function are exempt (the server table legitimately enters and
+    leaves as ``(V, D)``); only equation *outputs* inside the program
+    count, and scatter-family primitives — the in-place table write — are
+    allowed by default.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    hits: list[DenseIntermediate] = []
+    _walk(closed.jaxpr, dim0, min_ndim, frozenset(allowed_primitives),
+          "", hits)
+    return hits
+
+
+def assert_no_dense_intermediates(
+    fn: Callable,
+    *args,
+    dim0: int,
+    min_ndim: int = 2,
+    allowed_primitives: Sequence[str] = _DEFAULT_ALLOWED,
+    **kwargs,
+) -> None:
+    """Raise :class:`DenseMaterializationError` on any (dim0, ...) hit."""
+    hits = find_dense_intermediates(
+        fn, *args, dim0=dim0, min_ndim=min_ndim,
+        allowed_primitives=allowed_primitives, **kwargs)
+    if hits:
+        raise DenseMaterializationError(dim0, hits)
+
+
+def donation_aliased(
+    fn: Callable,
+    *args,
+    donate_argnums: Sequence[int] = (0,),
+    **kwargs,
+) -> bool:
+    """True iff jitting ``fn`` with the given donation actually aliases.
+
+    XLA drops donation silently when no output matches a donated input's
+    shape/dtype; the only reliable witness is the ``tf.aliasing_output``
+    attribute in the lowered module text.
+    """
+    jitted = jax.jit(fn, donate_argnums=tuple(donate_argnums))
+    text = jitted.lower(*args, **kwargs).as_text()
+    return "tf.aliasing_output" in text
+
+
+class CompileCountError(AssertionError):
+    """A jit cache grew more than the guard allows."""
+
+
+@contextlib.contextmanager
+def jit_cache_guard(*fns: Callable, max_new_compiles: int = 1):
+    """Pin the number of new compilations of jitted callables in a block.
+
+    ::
+
+        step = jax.jit(round_step)
+        with jit_cache_guard(step):          # at most 1 new compile
+            for scale in scales:
+                state, _ = step(state, batch, scale)
+
+    Each ``fn`` must be a ``jax.jit`` product (it exposes
+    ``_cache_size()``).  On exit, any callable whose cache grew by more
+    than ``max_new_compiles`` raises :class:`CompileCountError` naming the
+    offender and the delta — the signature of a traced value leaking into
+    a static argument or a weak-type flip-flop.
+    """
+    for fn in fns:
+        if not hasattr(fn, "_cache_size"):
+            raise TypeError(
+                f"{fn!r} has no _cache_size(); pass the jax.jit-wrapped "
+                "callable itself, not the python function")
+    before = [fn._cache_size() for fn in fns]
+    yield
+    for fn, b in zip(fns, before):
+        grew = fn._cache_size() - b
+        if grew > max_new_compiles:
+            name = getattr(fn, "__name__", repr(fn))
+            raise CompileCountError(
+                f"{name} compiled {grew} time(s) inside the guard "
+                f"(allowed {max_new_compiles}): a sweep that should hit "
+                "the jit cache is recompiling per value")

@@ -1,0 +1,139 @@
+"""Runtime sanitizer: checkify-backed RowSparse contract checks.
+
+The sparse plane's invariants (ids sorted, pads trailing, bounds, zeroed
+pad rows, largest-first capacity drops) are enforced by construction in
+:mod:`repro.sparse` — and silently wrong the moment a caller hand-builds a
+``RowSparse`` or re-orders ids.  This module makes the contract *checkable
+in-jit*: each ``check_*`` function emits ``checkify.check`` predicates that
+compile away unless the caller functionalises them, and
+:func:`checked_jit` is the one-stop wrapper that functionalises + jits +
+throws.
+
+Wired into the round plane behind ``RoundPlan(debug_checks=True)``:
+off by default (zero cost — the checks are simply not traced), and when on
+the compiled program is *numerically identical* (the parity tests pin
+bit-identical losses/params/RNG), it just also validates its inputs.
+
+``checkify.check`` calls require functionalisation; calling a
+check-emitting function under plain ``jax.jit`` raises. Always go through
+:func:`checked_jit` (or ``checkify.checkify`` yourself).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+from repro.sparse.rowsparse import RowSparse, membership
+
+__all__ = [
+    "checked_jit",
+    "check_union_ids",
+    "check_rowsparse",
+    "check_drop_order",
+    "check_capacity",
+]
+
+
+def checked_jit(fn: Callable, **jit_kwargs) -> Callable:
+    """``jax.jit`` + checkify functionalisation + eager throw.
+
+    Returns a callable with ``fn``'s signature whose compiled body carries
+    the user checks; any failed predicate raises
+    ``jax.experimental.checkify.JaxRuntimeError`` at the call site.  The
+    underlying jitted function is exposed for cache inspection
+    (``wrapper._cache_size``) so ``jit_cache_guard`` still works.
+
+    Do not re-wrap the result in ``jax.jit`` — it is already compiled, and
+    an outer jit would trip on the check effects.
+    """
+    checked = checkify.checkify(fn, errors=checkify.user_checks)
+    jitted = jax.jit(checked, **jit_kwargs)
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        err, out = jitted(*args, **kwargs)
+        err.throw()
+        return out
+
+    wrapper._checked = jitted
+    wrapper._cache_size = jitted._cache_size
+    return wrapper
+
+
+def _pad_mask(ids):
+    return ids < 0
+
+
+def check_union_ids(ids, vocab: int, *, name: str = "ids") -> None:
+    """Assert the ``unique_ids_padded`` contract on ``ids`` (last axis).
+
+    - pads are exactly ``-1`` and trailing,
+    - real ids strictly ascending (union ids are unique),
+    - real ids in ``[0, vocab)``.
+
+    Broadcasts over leading (cohort / stacked) axes.
+    """
+    pad = _pad_mask(ids)
+    checkify.check(
+        jnp.all(jnp.where(pad, ids == -1, True)),
+        f"{name}: negative id that is not the -1 pad sentinel")
+    # pads trailing <=> padness is monotone non-decreasing along the slot axis
+    checkify.check(
+        jnp.all(pad[..., 1:] >= pad[..., :-1]),
+        f"{name}: -1 pad slot precedes a real id (pads must be trailing)")
+    both_real = (~pad[..., 1:]) & (~pad[..., :-1])
+    checkify.check(
+        jnp.all(jnp.where(both_real, ids[..., 1:] > ids[..., :-1], True)),
+        f"{name}: ids not strictly ascending (must be sorted and unique)")
+    checkify.check(
+        jnp.all(jnp.where(~pad, ids < vocab, True)),
+        f"{name}: id out of range (>= vocab)")
+
+
+def check_rowsparse(rs: RowSparse, *, name: str = "delta") -> None:
+    """Assert the full RowSparse leaf contract: id contract + zeroed pads."""
+    check_union_ids(rs.ids, rs.num_rows, name=f"{name}.ids")
+    pad = _pad_mask(rs.ids)
+    pad = pad.reshape(pad.shape + (1,) * (rs.rows.ndim - rs.ids.ndim))
+    checkify.check(
+        jnp.all(jnp.where(pad, rs.rows == 0, True)),
+        f"{name}.rows: non-zero payload in a -1 pad slot")
+
+
+def check_drop_order(ids, tokens, *, name: str = "ids") -> None:
+    """Assert capacity drops were largest-first.
+
+    ``ids`` is an unbatched ``unique_ids_padded`` union of ``tokens``.  A
+    non-negative token absent from the union is legal only when the union
+    is full *and* the token is larger than every kept id — the smallest-
+    kept / largest-dropped ordering the comm accounting prices.
+    """
+    member = membership(tokens, ids)
+    real = ids >= 0
+    full = jnp.all(real)
+    kept_max = jnp.max(jnp.where(real, ids, -1))
+    ok = member | (full & (tokens > kept_max)) | (tokens < 0)
+    checkify.check(
+        jnp.all(ok),
+        f"{name}: dropped id smaller than a kept id (drops must be "
+        "largest-first) or missing without the union being full")
+
+
+def check_capacity(capacity: int, vocab: int, *, name: str = "capacity") -> None:
+    """Static (trace-time) check: capacity is lane-aligned or the full vocab.
+
+    The Pallas scatter paths block the slot axis in multiples of 8; an
+    unaligned capacity silently pads inside the kernel and skews the comm
+    accounting. Raises ``ValueError`` immediately — no checkify needed,
+    capacity is static.
+    """
+    capacity = int(capacity)
+    if capacity != int(vocab) and capacity % 8 != 0:
+        raise ValueError(
+            f"{name}={capacity} is neither a multiple of 8 nor the full "
+            f"vocab ({vocab}): the kernel slot axis requires lane-aligned "
+            "capacity buckets")

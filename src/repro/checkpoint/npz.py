@@ -35,6 +35,8 @@ def save_checkpoint(path: str, params, step: int = 0, extra: Optional[dict] = No
             # numpy can't serialise bf16; store losslessly as f32 and cast
             # back to the template dtype on restore
             x = x.astype(jnp.float32)
+        # repro-lint: ok host-numpy -- checkpoint serialisation runs on
+        # concrete host arrays, never under jit
         return np.asarray(x)
 
     arrays, axes = {}, {}

@@ -19,6 +19,8 @@ def condition_number(h: jax.Array, eps: float = 0.0) -> float:
     """kappa(H) = sigma_max / sigma_min via SVD (H need not be PSD)."""
     s = jnp.linalg.svd(h, compute_uv=False)
     smin = jnp.maximum(s[-1], eps)
+    # repro-lint: ok traced-float -- host analysis helper (tests/benches);
+    # the device sync is the point of returning a Python float
     return float(s[0] / smin)
 
 

@@ -9,7 +9,12 @@ import numpy as np
 
 
 def auc(labels: np.ndarray, scores: np.ndarray) -> float:
-    """Mann-Whitney AUC; 0.5 when degenerate.
+    """Mann-Whitney AUC; NaN when the eval labels are single-class.
+
+    A single-class label vector has no pos/neg pairs to rank, so AUC is
+    undefined — returning a plausible-looking 0.5 used to let a broken eval
+    split (or a degenerate sampler) masquerade as a coin-flip model in the
+    round logs. NaN is unmissable and propagates through round averaging.
 
     Tied ranks are averaged fully vectorised: a value group occupying sorted
     ranks ``start..end`` has average rank ``end - (count - 1) / 2``, computed
@@ -21,7 +26,7 @@ def auc(labels: np.ndarray, scores: np.ndarray) -> float:
     scores = np.asarray(scores, dtype=np.float64)
     pos, neg = scores[labels], scores[~labels]
     if len(pos) == 0 or len(neg) == 0:
-        return 0.5
+        return float("nan")
     allv = np.concatenate([pos, neg])
     _, inv, cnt = np.unique(allv, return_inverse=True, return_counts=True)
     end = np.cumsum(cnt)                       # 1-indexed last rank per group

@@ -67,6 +67,7 @@ from repro.core.algorithms import ServerState, make_server_algorithm
 from repro.federated.client import (cohort_deltas, cohort_submodel_deltas,
                                     make_local_trainer,
                                     make_submodel_local_trainer)
+from repro.analysis import sanitize
 from repro.sharding.logical import axes_tree, boxed_like, unbox
 from repro.sparse.aggregate import (aggregate_rowsparse_partial,
                                     apply_rowsparse,
@@ -363,6 +364,13 @@ class RoundPlan:
     server: ServerUpdate
     feature_keys: Tuple[str, ...] = ("tokens",)
     sharding: Optional[CohortSharding] = None
+    #: emit in-jit RowSparse contract checks (checkify) at the plane
+    #: boundaries. Off by default: the checks are simply not traced, so the
+    #: compiled program is byte-identical to a plan without the flag. When
+    #: on, the step must run through ``repro.analysis.sanitize.checked_jit``
+    #: (``make_round_step`` / ``FederatedTrainer`` handle this) — a bare
+    #: ``jax.jit`` over an emitting step raises at trace time.
+    debug_checks: bool = False
 
     def describe(self) -> str:
         base = (f"{type(self.local).__name__} -> "
@@ -371,6 +379,8 @@ class RoundPlan:
         if self.sharding is not None:
             base += (f" [sharded x{self.sharding.num_shards} over "
                      f"'{self.sharding.axis}']")
+        if self.debug_checks:
+            base += " [debug_checks]"
         return base
 
 
@@ -521,6 +531,7 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
     eta = cfg.server_lr
     sparse = transport.sparse
     static_heat = heat_counts is not None
+    debug = bool(plan.debug_checks) and sparse  # dense plans: nothing to check
 
     # ---- static metadata + build-time validation --------------------------
     paths = sparse_table_paths(heat_spec)
@@ -579,11 +590,15 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
     def derive_flat_ids(data: Dict) -> Array:
         ids_size = sum(int(np.prod(data[k].shape)) for k in feature_keys)
         capacity = round_capacity(vocab, ids_size)
+        if debug:
+            sanitize.check_capacity(capacity, vocab)
         return batch_union_ids(data, feature_keys, capacity)
 
     def derive_cohort_ids(data: Dict) -> Array:
         feats = stacked_feature_ids(data, feature_keys)
         capacity = round_capacity(vocab, feats.shape[1])
+        if debug:
+            sanitize.check_capacity(capacity, vocab)
         return jax.vmap(lambda f: unique_ids_padded(f, capacity))(feats)
 
     def require_tables_for_ids():
@@ -592,6 +607,38 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
                 "in-step sub-id derivation needs feature tables sharing one "
                 f"axis-0 id space; found row counts {vocabs} — pass sub_ids "
                 "explicitly (as FederatedTrainer does)")
+
+    # ---- debug sanitizer (plan.debug_checks; checkify, compiled away
+    # entirely when off) ----------------------------------------------------
+    def _debug_check_ids(used_ids: Optional[Array], data: Dict) -> None:
+        """Validate the round's sub-id unions against the RowSparse contract.
+
+        Flat ids additionally get the largest-first drop-order check against
+        the batch's own tokens; cohort ``(K, R)`` ids check it per client
+        (checkify composes with vmap).
+        """
+        if not debug or used_ids is None or not vocab:
+            return
+        sanitize.check_union_ids(used_ids, vocab, name="sub_ids")
+        if used_ids.ndim == 1:
+            for k in feature_keys:
+                sanitize.check_drop_order(used_ids, data[k], name="sub_ids")
+        else:
+            feats = stacked_feature_ids(data, feature_keys)
+
+            def one(ids_row, feats_row):
+                sanitize.check_drop_order(ids_row, feats_row, name="sub_ids")
+                return jnp.zeros((), jnp.int32)
+
+            jax.vmap(one)(used_ids, feats)
+
+    def _debug_check_agg(agg) -> None:
+        """Validate every aggregated RowSparse leaf at the server boundary."""
+        if not debug:
+            return
+        for leaf in jax.tree.leaves(agg, is_leaf=is_rowsparse):
+            if is_rowsparse(leaf):
+                sanitize.check_rowsparse(leaf, name="agg")
 
     # ---- telemetry (in-jit observability; pure reads of existing values) --
     heat_space = paths[0][1][0] if paths else None
@@ -733,6 +780,7 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
     def apply_sparse(state, agg):
         """Apply an aggregated sparse-plane update (RowSparse or dense leaves,
         correction already fused)."""
+        _debug_check_agg(agg)
         if server.stateless:
             plain = unbox(state.params)
             new_plain = _apply_plain(plain, agg, eta)
@@ -791,11 +839,13 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
 
             return jax.tree.map(m, tree, is_leaf=is_rowsparse)
 
-        def _stacked_shard_body(params, data, sub_ids, wmask, counts, k_real):
+        def _stacked_shard_body(params, data, sub_ids, wmask, counts,
+                                k_real: int):
             """One shard's K/ndev clients: local steps, per-shard partial
             aggregation, cross-shard combine. Returns the REPLICATED global
             aggregate (identical on every shard) + loss / sub-row stats."""
             update, _, used_ids, data = run_local(params, data, sub_ids)
+            _debug_check_ids(used_ids, data)  # checkify crosses shard_map
             raw = update
             if sparse and transport.topk:
                 # per-client row selection shards exactly (no cohort state)
@@ -862,6 +912,7 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
             single-device step consumes it.
             """
             update, fwd_loss, used_ids, _ = run_local(params, data, sub_ids)
+            _debug_check_ids(used_ids, data)  # checkify crosses shard_map
             loss = jax.lax.pmean(fwd_loss, s_axis)
             scale = 1.0 / float(ndev)
             if sparse:
@@ -1049,6 +1100,7 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
         heat, data = split_heat_batch(batch)
         counts = batch_counts(heat)
         update, fwd_loss, used_ids, data = run_local(params, data, sub_ids)
+        _debug_check_ids(used_ids, data)
         pre_sq = tree_sq_sum(update) if telemetry else None
 
         agg_tree = None

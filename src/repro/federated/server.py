@@ -220,7 +220,6 @@ class FederatedTrainer:
             donate = () if self.plan.sharding is not None else (0,)
             self._comm_meta = model_comm_meta(unbox(params),
                                               set(self._sparse_paths))
-            self._sparse_step = jax.jit(round_step, donate_argnums=donate)
 
             def engine(state, cohorts, sub_ids):
                 # multi-round driver: scan the round step over stacked
@@ -228,7 +227,17 @@ class FederatedTrainer:
                 return jax.lax.scan(lambda s, xs: round_step(s, *xs), state,
                                     (cohorts, sub_ids))
 
-            self._sparse_engine = jax.jit(engine, donate_argnums=donate)
+            if self.plan.debug_checks:
+                # the step emits checkify checks: functionalise + jit via
+                # checked_jit. Donation is dropped — the checkify error
+                # output aliases nothing, and debug mode is not a perf path.
+                from repro.analysis.sanitize import checked_jit
+                self._sparse_step = checked_jit(round_step)
+                self._sparse_engine = checked_jit(engine)
+            else:
+                self._sparse_step = jax.jit(round_step,
+                                            donate_argnums=donate)
+                self._sparse_engine = jax.jit(engine, donate_argnums=donate)
         else:
             self._round_step = jax.jit(round_step)
         if self.plan.sharding is not None:

@@ -77,6 +77,11 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
     (:class:`repro.telemetry.round.RoundTelemetry`) under
     ``metrics["telemetry"]`` without changing losses, parameters, or the
     RNG stream.
+
+    Plans with ``debug_checks=True`` on a sparse transport come back
+    already compiled through :func:`repro.analysis.sanitize.checked_jit`
+    (the checkify checks need functionalisation) — call the result
+    directly, do not wrap it in ``jax.jit`` again.
     """
     plan = resolve_plan(mode, cfg, correct=correct, feature_key=feature_key)
     if not plan.server.stateless:
@@ -108,4 +113,7 @@ def make_round_step(loss_fn: Callable, boxed_params_template, cfg: FedConfig,
         new_state, metrics = step(state, batch)
         return new_state.params, metrics
 
+    if plan.debug_checks and plan.transport.sparse:
+        from repro.analysis.sanitize import checked_jit
+        return checked_jit(round_step)
     return round_step

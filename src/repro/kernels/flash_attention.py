@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.heat_scatter import _tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -85,6 +87,14 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         head = ibh % h
         return (bidx * kvh + head // groups, ik, 0)
 
+    kwargs = {}
+    if not interpret:
+        # (batch*head, q-block) axes write disjoint output tiles; the
+        # k-block axis carries (m, l, acc) scratch and must stay sequential
+        cp = _tpu_compiler_params(
+            semantics=("parallel", "parallel", "arbitrary"))
+        if cp is not None:
+            kwargs["compiler_params"] = cp
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, causal=causal, window=window,
                           blk_q=blk_q, blk_k=blk_k, nk=nk),
@@ -102,5 +112,6 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             pltpu.VMEM((blk_q, hd), jnp.float32),
         ],
         interpret=interpret,
+        **kwargs,
     )(qh, kh, vh)
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

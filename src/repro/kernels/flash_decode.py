@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.heat_scatter import _tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -76,6 +78,13 @@ def flash_decode(q, k_cache, v_cache, k_positions, q_position, *, window: int = 
         head = ibh % h
         return (bidx * kvh + head // groups, isb, 0)
 
+    kwargs = {}
+    if not interpret:
+        # the (batch*head) axis writes disjoint outputs; the cache-block
+        # axis carries (m, l, acc) scratch and must stay sequential
+        cp = _tpu_compiler_params(semantics=("parallel", "arbitrary"))
+        if cp is not None:
+            kwargs["compiler_params"] = cp
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, window=window, blk_s=blk_s, ns=ns),
         grid=(b * h, ns),
@@ -94,5 +103,6 @@ def flash_decode(q, k_cache, v_cache, k_positions, q_position, *, window: int = 
             pltpu.VMEM((1, hd), jnp.float32),
         ],
         interpret=interpret,
+        **kwargs,
     )(qpos, qh, kh, vh, k_positions.astype(jnp.int32))
     return out.reshape(b, h, hd)

@@ -131,7 +131,9 @@ def rowsparse_scatter(ids, rows, heat, total: float, vocab: int, *,
 
     kwargs = {}
     if not interpret:
-        cp = _tpu_compiler_params()
+        # vocab grid axis: disjoint output rows per block, Megacore-safe to
+        # split; row axis: sequential accumulation into out_ref
+        cp = _tpu_compiler_params(semantics=("parallel", "arbitrary"))
         if cp is not None:
             kwargs["compiler_params"] = cp
     return pl.pallas_call(

@@ -15,7 +15,7 @@ only way a 123B config exists on this host.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,7 @@ class ModelApi:
     input_specs: Callable[[str], Dict]
 
 
-def _sds(shape, dtype):
+def _sds(shape: Sequence[int], dtype):
     return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
 
 

@@ -1,0 +1,20 @@
+"""Seeded violation: data-dependent output shape under jit.
+
+``jnp.unique`` (and nonzero/argwhere/one-argument where) without ``size=``
+produces a shape that depends on runtime values — untraceable. The repo's
+union builders are all sort-based or ``size=``-bounded for exactly this
+reason. The linter must flag the ``jnp.unique`` below.
+"""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def union_ids(tokens):
+    return jnp.unique(tokens)       # VIOLATION: no size=
+
+
+def safe_bounded_union(tokens, cap: int):
+    # the jit-safe form: static output shape, -1 fill — must not fire
+    mark = jnp.zeros((1024,), bool).at[jnp.maximum(tokens, 0)].set(True)
+    return jnp.nonzero(mark, size=cap, fill_value=-1)[0]

@@ -1,0 +1,28 @@
+"""Seeded violation: re-reading a buffer after donating it.
+
+The trainer donates ``ServerState`` through the round step so the feature
+table updates in place; reading the donated holder after the call touches a
+deleted buffer. The safe idiom rebinds the holder in the donating statement
+(``state, m = step(state, ...)``). The linter must flag the re-reference
+below.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _round_step(state, batch):
+    return state + batch.sum()
+
+
+donated_step = jax.jit(_round_step, donate_argnums=(0,))
+
+
+def run_bad(state, batch):
+    new_state = donated_step(state, batch)
+    return new_state + state        # VIOLATION: state was donated above
+
+
+def run_safe(state, batch):
+    # rebinding in the donating statement: later reads see the new buffer
+    state = donated_step(state, batch)
+    return state * 2.0

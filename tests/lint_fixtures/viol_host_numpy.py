@@ -1,0 +1,19 @@
+"""Seeded violation: host np.* call on traced values inside a jitted path.
+
+The PR-2/PR-5 bug class: a host numpy op inside the round hot path forces a
+device sync per call and silently falls out of the compiled program. The
+linter must flag the ``np.unique`` below.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def derive_union(tokens):
+    ids = np.unique(tokens)         # VIOLATION: tokens is traced here
+    return jnp.asarray(ids)
+
+
+def safe_static_geometry(batch):
+    # shape-derived numpy is static at trace time and must not fire
+    n = int(np.prod(batch.shape))
+    return jnp.full((n,), 0.0)

@@ -1,0 +1,22 @@
+"""Seeded violation: array-valued static_argnames.
+
+The bug class behind the heat-vector recompiles: marking an array argument
+static makes it a jit-cache key — unhashable at best, one compile per
+distinct value at worst. The linter must flag ``heat`` below.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("heat", "vocab"))
+def corrected_update(update, heat: jax.Array, vocab: int):
+    # VIOLATION above: ``heat`` is annotated as an array
+    return update * jnp.minimum(heat[:vocab], 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def safe_static_int(ids, capacity: int):
+    # int-typed static args are the intended use and must not fire
+    return jnp.sort(ids)[:capacity]

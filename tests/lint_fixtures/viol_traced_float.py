@@ -1,0 +1,21 @@
+"""Seeded violation: float() coercion of a traced value under jit.
+
+This is the PR-2 bug class: coercing a traced scalar bakes its value into
+the compiled program (one recompile per distinct value) or crashes with a
+ConcretizationTypeError. The linter must flag the ``float(k)`` below.
+"""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def cohort_mean(deltas, k):
+    scale = 1.0 / float(k)          # VIOLATION: k is traced here
+    return jnp.sum(deltas, axis=0) * scale
+
+
+def safe_variants(x, n: int):
+    # none of these may fire: shape-derived and annotated-static coercions
+    rows = float(x.shape[0])
+    frac = 1.0 / float(n)
+    return jnp.asarray(x) * rows * frac

@@ -1,0 +1,226 @@
+"""The checkify sanitizer behind RoundPlan(debug_checks=True): enabling it
+changes nothing (bit-identical losses/params/RNG across the mode x engine
+matrix) and corrupted RowSparse inputs trip it."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import checkify
+
+from repro.analysis.sanitize import (check_capacity, check_drop_order,
+                                     check_rowsparse, check_union_ids,
+                                     checked_jit)
+from repro.configs.base import FedConfig
+from repro.core.algorithms import ServerState
+from repro.data import make_movielens_like
+from repro.federated.plan import (RoundPlan, RowSparseTransport,
+                                  build_round_step, resolve_plan)
+from repro.federated.server import FederatedTrainer
+from repro.federated.simulation import make_round_step
+from repro.models.recsys import (lr_logits, lr_loss, lstm_loss,
+                                 make_lr_params, make_lstm_params)
+from repro.sparse.rowsparse import RowSparse, unique_ids_padded
+
+V, E = 128, 6
+
+
+@pytest.fixture(scope="module")
+def params():
+    return make_lstm_params(V, emb_dim=E, hidden=8, layers=1,
+                            rng=jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return FedConfig(num_clients=50, clients_per_round=6, lr=0.1,
+                     server_lr=1.0, seed=0)
+
+
+def _flat_batch(seed=0, b=6, s=8):
+    r = np.random.RandomState(seed)
+    return {"tokens": jnp.asarray(r.randint(0, V, (b, s))),
+            "label": jnp.asarray(r.randint(0, V, (b,))),
+            "heat_vocab": jnp.asarray(
+                np.maximum(r.poisson(3.0, V), 1), jnp.float32)}
+
+
+def _cohort_batch(seed=0, k=3, i=2, b=2, s=6):
+    r = np.random.RandomState(seed)
+    return {"tokens": jnp.asarray(r.randint(0, V, (k, i, b, s))),
+            "label": jnp.asarray(r.randint(0, V, (k, i, b))),
+            "heat_vocab": jnp.asarray(
+                np.maximum(r.poisson(3.0, V), 1), jnp.float32)}
+
+
+def _assert_bit_identical(t1, t2):
+    l1, l2 = jax.tree.leaves(t1), jax.tree.leaves(t2)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# parity: debug_checks on vs off is bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,batch_fn", [("sparse", _flat_batch),
+                                           ("sparse_replicated",
+                                            _cohort_batch)])
+def test_debug_checks_parity_make_round_step(params, cfg, mode, batch_fn):
+    plain = jax.jit(make_round_step(lstm_loss, params, cfg, mode=mode))
+    plan = dataclasses.replace(resolve_plan(mode, cfg), debug_checks=True)
+    dbg = make_round_step(lstm_loss, params, cfg, mode=plan)
+    p1, p2 = params, params
+    for seed in range(3):
+        b = batch_fn(seed)
+        p1, m1 = plain(p1, b)
+        p2, m2 = dbg(p2, b)
+        assert float(m1["loss"]) == float(m2["loss"])
+    _assert_bit_identical(p1, p2)
+
+
+def test_debug_checks_parity_int8_rng(params, cfg):
+    """The int8 transport draws stochastic-rounding noise from the RNG
+    stream; the sanitizer must not consume or shift a single draw."""
+    base = resolve_plan("sparse", cfg)
+    plan = dataclasses.replace(base, transport=RowSparseTransport(int8=True))
+    plain = jax.jit(make_round_step(lstm_loss, params, cfg, mode=plan))
+    dbg = make_round_step(
+        lstm_loss, params, cfg,
+        mode=dataclasses.replace(plan, debug_checks=True))
+    b = _flat_batch(3)
+    p1, _ = plain(params, b)
+    p2, _ = dbg(params, b)
+    _assert_bit_identical(p1, p2)
+
+
+def _trainer(ds, plan=None):
+    cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=6,
+                    local_iters=2, local_batch=4, lr=0.5,
+                    algorithm="fedsubavg", sparse=True)
+    return FederatedTrainer(
+        ds, functools.partial(make_lr_params, ds.num_features), lr_loss, cfg,
+        predict_fn=lambda p, t: lr_logits(p, jnp.asarray(t["features"])),
+        plan=plan)
+
+
+@pytest.mark.parametrize("engine", ["run_round", "run_rounds"])
+def test_debug_checks_parity_trainer(engine):
+    """Both trainer execution engines (per-round dispatch and the scan
+    engine) are bit-identical with the sanitizer on."""
+    ds = make_movielens_like(num_clients=40, num_items=40, mean_samples=15)
+    t1 = _trainer(ds)
+    t2 = _trainer(ds, plan=dataclasses.replace(t1.plan, debug_checks=True))
+    assert "[debug_checks]" in t2.plan.describe()
+    if engine == "run_round":
+        l1 = [t1.run_round() for _ in range(4)]
+        l2 = [t2.run_round() for _ in range(4)]
+    else:
+        l1 = t1.run_rounds(4)
+        l2 = t2.run_rounds(4)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    _assert_bit_identical(t1.state.params, t2.state.params)
+
+
+def test_dense_plan_debug_checks_is_noop(params, cfg):
+    """Dense transport has no RowSparse contract to check: debug_checks
+    stays inert and the step still accepts a bare jax.jit."""
+    plan = dataclasses.replace(resolve_plan("fedsgd", cfg),
+                               debug_checks=True)
+    step = jax.jit(make_round_step(lstm_loss, params, cfg, mode=plan))
+    _, m = step(params, _flat_batch())
+    assert np.isfinite(float(m["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# the sanitizer trips on contract violations
+# ---------------------------------------------------------------------------
+
+
+def test_sanitizer_trips_on_unsorted_sub_ids(params, cfg):
+    plan = dataclasses.replace(resolve_plan("sparse", cfg),
+                               debug_checks=True)
+    step = checked_jit(build_round_step(plan, lstm_loss, params, cfg))
+    state = ServerState(params, (), jnp.zeros((), jnp.int32))
+    b = _flat_batch()
+    state, m = step(state, b)              # derived ids: clean
+    assert np.isfinite(float(m["loss"]))
+    bad = jnp.concatenate([jnp.asarray([9, 3], jnp.int32),
+                           jnp.full((46,), -1, jnp.int32)])
+    with pytest.raises(checkify.JaxRuntimeError, match="ascending"):
+        step(state, b, bad)
+
+
+def test_sanitizer_trips_on_interleaved_pads(params, cfg):
+    plan = dataclasses.replace(resolve_plan("sparse", cfg),
+                               debug_checks=True)
+    step = checked_jit(build_round_step(plan, lstm_loss, params, cfg))
+    state = ServerState(params, (), jnp.zeros((), jnp.int32))
+    bad = jnp.asarray([3, -1, 9] + [-1] * 45, jnp.int32)
+    with pytest.raises(checkify.JaxRuntimeError, match="trailing"):
+        step(state, _flat_batch(), bad)
+
+
+# ---------------------------------------------------------------------------
+# check-function units
+# ---------------------------------------------------------------------------
+
+
+def test_check_union_ids_bounds():
+    def f(ids):
+        check_union_ids(ids, 8)
+        return ids.sum()
+
+    cj = checked_jit(f)
+    cj(jnp.asarray([1, 5, 7, -1], jnp.int32))
+    with pytest.raises(checkify.JaxRuntimeError, match="out of range"):
+        cj(jnp.asarray([1, 5, 9, -1], jnp.int32))
+
+
+def test_check_rowsparse_pad_rows_zeroed():
+    def f(rs):
+        check_rowsparse(rs)
+        return rs.rows.sum()
+
+    cj = checked_jit(f)
+    good = RowSparse(jnp.asarray([2, 5, -1], jnp.int32),
+                     jnp.asarray([[1.0], [2.0], [0.0]]), 8)
+    cj(good)
+    bad = RowSparse(jnp.asarray([2, 5, -1], jnp.int32),
+                    jnp.asarray([[1.0], [2.0], [3.0]]), 8)
+    with pytest.raises(checkify.JaxRuntimeError, match="pad slot"):
+        cj(bad)
+
+
+def test_check_drop_order():
+    def f(ids, toks):
+        check_drop_order(ids, toks)
+        return ids.sum()
+
+    cj = checked_jit(f)
+    toks = jnp.arange(12)
+    cj(unique_ids_padded(toks, 8), toks)       # drops 8..11: largest-first
+    wrong = jnp.arange(4, 12, dtype=jnp.int32)  # kept largest instead
+    with pytest.raises(checkify.JaxRuntimeError, match="largest-first"):
+        cj(wrong, toks)
+    # a missing id while the union still has pad slots is also a violation
+    sparse_union = unique_ids_padded(jnp.asarray([1, 3]), 8)
+    with pytest.raises(checkify.JaxRuntimeError):
+        cj(sparse_union, jnp.asarray([1, 3, 5]))
+
+
+def test_check_capacity_static():
+    check_capacity(16, V)
+    check_capacity(V, V)       # full-vocab bucket is always legal
+    with pytest.raises(ValueError, match="multiple of 8"):
+        check_capacity(12, V)
+
+
+def test_checked_jit_exposes_cache_size():
+    cj = checked_jit(lambda x: x * 2)
+    cj(jnp.ones((3,)))
+    assert cj._cache_size() == 1

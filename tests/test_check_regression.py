@@ -1,0 +1,78 @@
+"""The bench regression gate itself: a stale baseline missing a whole
+section must fail by name, not pass vacuously (or crash with KeyError)."""
+import copy
+import importlib
+import sys
+import os
+
+import pytest
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))
+check_regression = importlib.import_module("benchmarks.check_regression")
+
+
+def _fresh():
+    return {
+        "smoke": True,
+        "records": [
+            {"section": "union_backends", "v": 1024, "density": 0.1, "k": 4,
+             "d": 8, "us_sort": 100.0, "us_bitmap": 50.0},
+            {"section": "engine", "v": 1024, "k": 4, "rounds": 8,
+             "speedup": 3.0},
+            {"section": "telemetry", "v": 1024, "k": 4, "rounds": 8,
+             "us_per_round_off": 10.0, "us_per_round_on": 11.0,
+             "overhead": 0.1, "dropped_ids": 0, "dropped_mass": 0.0,
+             "mean_union_size": 12.0, "mean_density": 0.2,
+             "jsonl_events": 8, "jsonl": "x.jsonl"},
+        ],
+    }
+
+
+def test_matching_baseline_passes():
+    fresh = _fresh()
+    assert check_regression.check(fresh, copy.deepcopy(fresh), 0.25) == []
+
+
+@pytest.mark.parametrize("section", ["union_backends", "engine"])
+def test_baseline_missing_section_fails_by_name(section):
+    """The negative path: drop one whole section from the baseline. The
+    gate must produce a failure naming that section (previously the
+    per-record loops just iterated zero baseline records and the section
+    passed silently)."""
+    fresh = _fresh()
+    baseline = copy.deepcopy(fresh)
+    baseline["records"] = [r for r in baseline["records"]
+                           if r["section"] != section]
+    failures = check_regression.check(fresh, baseline, 0.25)
+    named = [f for f in failures if f"'{section}'" in f]
+    assert named, f"no named-section failure for {section!r}: {failures}"
+    assert "stale or truncated" in named[0]
+
+
+def test_baseline_missing_section_fresh_lacks_it_too_is_fine():
+    """A section absent from BOTH runs is not a staleness signal (e.g. a
+    single-device box emits no sharded records)."""
+    fresh = _fresh()
+    baseline = copy.deepcopy(fresh)
+    for d in (fresh, baseline):
+        d["records"] = [r for r in d["records"]
+                        if r["section"] != "union_backends"]
+    failures = check_regression.check(fresh, baseline, 0.25)
+    # the only acceptable failure is the pre-existing "no union_backends
+    # records" guard on the fresh run
+    assert all("stale or truncated" not in f for f in failures)
+
+
+def test_main_exit_codes(tmp_path):
+    import json
+    fresh = _fresh()
+    stale = copy.deepcopy(fresh)
+    stale["records"] = [r for r in stale["records"]
+                        if r["section"] != "engine"]
+    fp, bp, sp = (tmp_path / n for n in ("f.json", "b.json", "s.json"))
+    fp.write_text(json.dumps(fresh))
+    bp.write_text(json.dumps(fresh))
+    sp.write_text(json.dumps(stale))
+    assert check_regression.main([str(fp), "--baseline", str(bp)]) == 0
+    assert check_regression.main([str(fp), "--baseline", str(sp)]) == 1

@@ -61,8 +61,13 @@ def test_auc_constant_scores_is_half():
 
 
 def test_auc_degenerate_classes():
-    assert auc(np.zeros(5), np.arange(5.0)) == 0.5
-    assert auc(np.ones(5), np.arange(5.0)) == 0.5
+    """Single-class labels have no pos/neg pairs: AUC is undefined and must
+    come back NaN (a fake 0.5 hides a broken eval split), one regression
+    per degenerate side."""
+    all_neg = auc(np.zeros(5), np.arange(5.0))
+    assert isinstance(all_neg, float) and np.isnan(all_neg)
+    all_pos = auc(np.ones(5), np.arange(5.0))
+    assert isinstance(all_pos, float) and np.isnan(all_pos)
 
 
 def test_auc_perfect_and_inverted_separation():

@@ -266,3 +266,28 @@ def test_trainer_mesh_dense_and_stateful(shard_ds):
 def test_trainer_mesh_conflicts_rejected(shard_ds):
     with pytest.raises(ValueError, match="central"):
         _trainer(shard_ds, mesh=make_cohort_mesh(), algorithm="central")
+
+
+def test_sharded_debug_checks_parity():
+    """The checkify sanitizer (RoundPlan.debug_checks) crosses shard_map:
+    the sharded round with checks on is bit-identical to checks off."""
+    from repro.analysis.sanitize import checked_jit
+    from repro.core.algorithms import ServerState
+    from repro.federated import build_round_step
+
+    params = _params()
+    fed = FedConfig(num_clients=16, clients_per_round=8, local_iters=2,
+                    lr=0.1, algorithm="fedsubavg")
+    base = dataclasses.replace(
+        resolve_plan("sparse_replicated", fed),
+        sharding=CohortSharding(make_cohort_mesh()))
+    plain = jax.jit(build_round_step(base, lstm_loss, params, fed))
+    dbg = checked_jit(build_round_step(
+        dataclasses.replace(base, debug_checks=True), lstm_loss, params, fed))
+    state = ServerState(params, (), jnp.zeros((), jnp.int32))
+    b = _cohort_batch(0, k=8)
+    s1, m1 = plain(state, b)
+    s2, m2 = dbg(state, b)
+    assert float(m1["loss"]) == float(m2["loss"])
+    for a, c in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
