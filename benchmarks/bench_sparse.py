@@ -38,6 +38,16 @@ Three sections, all emitted to the CSV stream and to
    (CI uploads it as an artifact; ``check_regression`` validates the
    section's schema and that trainer-derived rounds report zero drops).
 
+7. collective bytes: the hlo_audit oracle run as a benchmark — for each
+   sharded sparse plan x combine, the HLO-measured per-kind collective bytes
+   of one compiled round step, next to the analytic budget
+   (``round_collective_budget``) and the contract/drift verdict. Bytes are
+   static-shape-deterministic, so ``check_regression`` pins them against the
+   committed baseline directly (no timing hermeticity needed): growth means
+   a resharding or densified combine crept into the lowering. Needs a
+   multi-device host (the forced-8 CI smoke job); skipped with a note on a
+   single device.
+
 ``REPRO_BENCH_SMOKE=1`` shrinks every section to seconds of runtime (tiny V,
 2 rounds, interpret-mode kernel) — the CI smoke job runs that on every PR so
 the pallas backend, the scan engine and the sharded engine stay exercised.
@@ -367,6 +377,71 @@ def _bench_telemetry(out, records):
                         jsonl_events=n_events, jsonl=jsonl_path))
 
 
+def _bench_collectives(out, records):
+    """Section 7: HLO-measured combine bytes vs the analytic budget.
+
+    Not a timing benchmark: collective byte totals are static-shape
+    deterministic, so the records double as a regression pin — the
+    committed baseline's bytes must not grow (a growth is a resharding or
+    a densified combine, the class the hlo_audit CI gate catches one plan
+    at a time; here the whole matrix lands in the bench artifact).
+    """
+    import dataclasses
+
+    from repro.analysis.hlo_audit import (collective_contract, comm_drift,
+                                          lower_round_step)
+    from repro.federated import CohortSharding, resolve_plan
+    from repro.launch.mesh import make_cohort_mesh
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        out.append(("sparse/collectives_skipped", 0.0,
+                    f"ndev={ndev};needs>=2;force_with=XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8"))
+        return
+    vocab, emb = (512, 8) if SMOKE else (65_536, 16)
+    mesh = make_cohort_mesh()
+    params = make_lstm_params(vocab, emb_dim=emb, hidden=8, layers=1,
+                              rng=jax.random.PRNGKey(1))
+    fed = FedConfig(num_clients=16, clients_per_round=3, local_iters=2,
+                    lr=0.1, algorithm="fedsubavg")
+    rng = np.random.default_rng(0)
+    cohort_batch = {
+        "tokens": jnp.asarray(rng.integers(-1, vocab, (3, 2, 2, 6)),
+                              jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, (3, 2, 2)), jnp.int32),
+        "heat_vocab": jnp.asarray(rng.integers(0, 6, vocab), jnp.float32)}
+    flat_batch = {
+        "tokens": jnp.asarray(rng.integers(0, vocab, (8, 8)), jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, 8), jnp.int32),
+        "heat_vocab": jnp.asarray(rng.integers(0, 6, vocab), jnp.float32)}
+    for mode in ("sparse", "sparse_replicated"):
+        for combine in ("psum", "union"):
+            plan = dataclasses.replace(
+                resolve_plan(mode, fed),
+                sharding=CohortSharding(mesh, combine=combine))
+            batch = flat_batch if mode == "sparse" else cohort_batch
+            compiled = lower_round_step(plan, lstm_loss, params, fed, batch)
+            con = collective_contract(plan, lstm_loss, params, fed, batch,
+                                      compiled=compiled)
+            drift = comm_drift(plan, lstm_loss, params, fed, batch,
+                               compiled=compiled)
+            ok = con.ok and drift.ok
+            ar = con.measured_by_op.get("all-reduce", 0)
+            ag = con.measured_by_op.get("all-gather", 0)
+            out.append((f"sparse/collectives_{mode}_{combine}",
+                        float(ar + ag),
+                        f"V={vocab};D={emb};ndev={ndev};all_reduce_B={ar};"
+                        f"all_gather_B={ag};ok={ok}"))
+            records.append(dict(
+                section="collectives", mode=mode, combine=combine, v=vocab,
+                emb=emb, ndev=ndev, ok=ok,
+                all_reduce_bytes=ar, all_gather_bytes=ag,
+                budget_all_reduce=con.budget_by_op.get("all-reduce", 0.0),
+                budget_all_gather=con.budget_by_op.get("all-gather", 0.0),
+                failures=con.failures + drift.failures))
+
+
 def run():
     out = []
     records = []
@@ -380,6 +455,7 @@ def run():
     _bench_replicated(out, records)
     _bench_sharded(out, records)
     _bench_telemetry(out, records)
+    _bench_collectives(out, records)
 
     # Pallas kernel (dense-output TPU path) at a kernel-friendly shape
     k, d, total = (4, 8, 100.0) if SMOKE else (16, 64, 100.0)

@@ -26,6 +26,14 @@ speed cancels:
 Both runs must use the same smoke shapes (``REPRO_BENCH_SMOKE=1``); records
 are matched on their shape keys and a missing match fails the gate.
 
+- collectives: the per-plan collective byte totals (section 7) are
+  static-shape-deterministic, not machine-speed-dependent, so they compare
+  directly: the fresh run's measured bytes must not exceed the baseline's
+  by more than the threshold (growth = a resharding or densified combine
+  crept into the lowering), and every fresh record must carry ``ok: true``
+  (its own contract + drift verdict). Both runs must see the same forced
+  device count, same as the sharded section.
+
 The telemetry section is validated on the FRESH run only (no baseline
 ratio): the record must carry the full counter schema, a trainer-derived
 run must report zero capacity drops (the trainer sizes ``sub_ids`` to fit,
@@ -47,6 +55,10 @@ import sys
 _UNION_KEY = ("v", "density", "k", "d")
 _ENGINE_KEY = ("v", "k", "rounds")
 _SHARDED_KEY = ("v", "k", "rounds", "ndev")
+_COLLECTIVES_KEY = ("mode", "combine", "v", "emb", "ndev")
+
+#: byte columns of a collectives record the gate pins against the baseline
+_COLLECTIVES_BYTES = ("all_reduce_bytes", "all_gather_bytes")
 
 #: every field a telemetry record must carry (section 6 of bench_sparse)
 _TELEMETRY_FIELDS = (
@@ -83,7 +95,7 @@ def check(fresh: dict, baseline: dict, threshold: float):
     # section name instead (telemetry is fresh-only by design, not listed).
     fresh_sections = {r.get("section") for r in fresh.get("records", [])}
     base_sections = {r.get("section") for r in baseline.get("records", [])}
-    for section in ("union_backends", "engine", "sharded"):
+    for section in ("union_backends", "engine", "sharded", "collectives"):
         if section in fresh_sections and section not in base_sections:
             failures.append(
                 f"baseline has no '{section}' section but the fresh run "
@@ -149,6 +161,32 @@ def check(fresh: dict, baseline: dict, threshold: float):
             failures.append(
                 f"sharded {key} speedup_vs_1dev regressed "
                 f"{bsp:.2f}x -> {fsp:.2f}x (>{threshold:.0%})")
+
+    fresh_c = _index(fresh.get("records", []), "collectives",
+                     _COLLECTIVES_KEY)
+    base_c = _index(baseline.get("records", []), "collectives",
+                    _COLLECTIVES_KEY)
+    if base_c and not fresh_c:
+        failures.append("fresh run has no collectives records "
+                        "(device-count mismatch? run under the same "
+                        "XLA_FLAGS forced device count)")
+    for key, brec in base_c.items():
+        frec = fresh_c.get(key)
+        if frec is None:
+            failures.append(f"collectives record missing from fresh run: "
+                            f"{key}")
+            continue
+        if not frec.get("ok"):
+            failures.append(
+                f"collectives {key}: contract/drift verdict is not ok: "
+                f"{frec.get('failures')}")
+        for col in _COLLECTIVES_BYTES:
+            bval, fval = brec.get(col, 0), frec.get(col, 0)
+            if bval and fval > bval * (1.0 + threshold):
+                failures.append(
+                    f"collectives {key} {col} grew {bval} -> {fval} B "
+                    f"(>{threshold:.0%}): a resharding or densified "
+                    "combine crept into the lowering")
 
     failures.extend(check_telemetry(fresh))
     return failures

@@ -1,6 +1,6 @@
 """repro.analysis: correctness tooling for the jitted federated round path.
 
-Three layers, each machine-checking a bug class this repo has actually
+Four layers, each machine-checking a bug class this repo has actually
 shipped (see DESIGN.md "Static analysis & sanitizer" for the rule table):
 
 ``repro.analysis.lint``
@@ -18,13 +18,20 @@ shipped (see DESIGN.md "Static analysis & sanitizer" for the rule table):
     debug_checks=True)``: validates the RowSparse contract in-jit at the
     plane boundaries, bit-identical to the unchecked step when clean.
 
+``repro.analysis.hlo_audit``
+    Comm & memory oracle over the COMPILED artifact: collective-budget
+    contracts, peak-live-byte gating via ``compiled.memory_analysis()``,
+    and a drift check pinning the comm-accounting plane to the bytes the
+    optimized HLO actually moves:
+    ``python -m repro.analysis.hlo_audit --json contract-report.json``.
+
 Submodules are imported lazily: ``lint`` must stay importable in an
 environment without jax, so this package must not pull the jax-dependent
 layers at import time.
 """
 from __future__ import annotations
 
-_SUBMODULES = ("lint", "jaxpr_audit", "sanitize")
+_SUBMODULES = ("lint", "jaxpr_audit", "sanitize", "hlo_audit")
 
 __all__ = list(_SUBMODULES)
 

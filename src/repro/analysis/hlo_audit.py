@@ -1,0 +1,479 @@
+"""Comm & memory oracle: contracts over the COMPILED round step (layer 4).
+
+The analysis plane's first three layers stop before XLA: the linter reads
+source, the jaxpr auditor reads traces, the sanitizer checks runtime values.
+None of them would catch a silently inserted resharding all-gather of the
+``(V, D)`` feature table — the exact failure mode that voids FedSubAvg's
+O(rows-touched) transport claim. This layer closes the gap by auditing the
+optimized HLO and the compiler's own memory analysis against analytic
+budgets the plan derives from first principles:
+
+- :func:`collective_contract` — lowers a ``CohortSharding`` round step,
+  inventories every collective (loop-aware, async-pair-aware, attributed to
+  mesh axes via ``replica_groups``), and checks the inventory against
+  ``federated.plan.round_collective_budget``. Any collective KIND the plan
+  didn't predict (an XLA resharding, an accidentally densified combine) or
+  any byte total above budget is a named failure.
+- :func:`memory_contract` — gates ``compiled.memory_analysis()`` peak live
+  bytes against an analytic budget (params in/out + batch + per-table
+  combine workspace + K·capacity·D submodel replicas + slack), catching
+  dense-replica regressions before anything runs.
+- :func:`comm_drift` — cross-checks the HLO-measured collective bytes
+  against the comm-accounting plane's own prediction
+  (``sparse.comm.sharded_combine_bytes`` from ``plan_comm_meta``), so the
+  paper-facing byte accounting can never silently diverge from what the
+  compiled artifact moves. Tolerance: 10% relative + 64 B absolute (the
+  absolute term absorbs the loss / sub-row scalar reductions the
+  comm plane deliberately does not price).
+
+CLI (the CI gate)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.analysis.hlo_audit --json contract-report.json
+
+runs the {sparse, sparse_replicated} x {fedavg, fedsubavg} x {psum, union}
+matrix on the cohort mesh and exits non-zero on any contract failure.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.algorithms import ServerState
+from repro.federated.plan import (build_round_step, plan_comm_meta,
+                                  round_collective_budget, sparse_table_paths,
+                                  heat_spec_from_axes, round_capacity,
+                                  split_heat_batch)
+from repro.launch.hlo import analyze_hlo, mesh_axis_groups
+from repro.sharding.logical import unbox
+from repro.sparse.comm import sharded_combine_bytes
+from repro.sparse.encode import tree_leaf_at
+
+__all__ = [
+    "ContractReport", "MemoryReport", "DriftReport", "lower_round_step",
+    "collective_contract", "memory_contract", "memory_budget", "comm_drift",
+    "main",
+]
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_round_step(plan, loss_fn, boxed_params, cfg, batch, *,
+                     sub_ids=None, in_shardings=None, telemetry=False):
+    """Lower + compile one round step exactly as the engine would run it.
+
+    ``in_shardings`` (optional) is passed to ``jax.jit`` — the oracle's
+    planted-violation tests use it to force a resharding the budget did not
+    predict. Returns the compiled executable (``.as_text()`` /
+    ``.memory_analysis()``).
+    """
+    step = build_round_step(plan, loss_fn, boxed_params, cfg,
+                            telemetry=telemetry)
+    state = ServerState(boxed_params, (), jnp.zeros((), jnp.int32))
+    kw = {} if in_shardings is None else {"in_shardings": in_shardings}
+    jitted = jax.jit(step, **kw)
+    args = (state, batch) if sub_ids is None else (state, batch, sub_ids)
+    return jitted.lower(*args).compile()
+
+
+# ---------------------------------------------------------------------------
+# collective contract
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ContractReport:
+    """One plan's collective inventory vs its analytic budget."""
+
+    plan: str
+    budget_by_op: Dict[str, float]
+    measured_by_op: Dict[str, int]
+    by_axis: Dict[str, int]
+    components: Dict[str, Dict]
+    failures: List[str] = field(default_factory=list)
+    unresolved_loops: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def to_dict(self) -> Dict:
+        return {
+            "plan": self.plan, "ok": self.ok,
+            "budget_by_op": self.budget_by_op,
+            "measured_by_op": self.measured_by_op,
+            "by_axis": self.by_axis,
+            "components": self.components,
+            "failures": self.failures,
+            "unresolved_loops": self.unresolved_loops,
+        }
+
+
+def collective_contract(plan, loss_fn, boxed_params, cfg, batch, *,
+                        sub_ids=None, compiled=None, in_shardings=None,
+                        slack_rel: float = 0.05,
+                        slack_abs: float = 256.0) -> ContractReport:
+    """Check a sharded round step's compiled collectives against its budget.
+
+    The budget (``round_collective_budget``) was verified byte-exact against
+    the compiled HLO for every {transport, combine} pair, so the default
+    slack is tight: 5% relative + 256 B absolute. Three failure classes,
+    each named after the offending collective:
+
+    - an op under a while loop whose trip count XLA could not resolve
+      (its multiplier — hence its bytes — is unverifiable);
+    - a collective KIND outside the budget's ``allowed_ops`` (the
+      resharding / densification class);
+    - a predicted kind whose measured bytes exceed budget + slack.
+    """
+    budget = round_collective_budget(plan, boxed_params, cfg, batch,
+                                     sub_ids=sub_ids)
+    if compiled is None:
+        compiled = lower_round_step(plan, loss_fn, boxed_params, cfg, batch,
+                                    sub_ids=sub_ids, in_shardings=in_shardings)
+    rep = analyze_hlo(compiled.as_text())
+    rep.attribute_axes(mesh_axis_groups(plan.sharding.mesh))
+
+    failures: List[str] = []
+    for c in rep.collectives:
+        if not c.resolved:
+            failures.append(
+                f"{c.op} %{c.name} in %{c.computation} sits under a while "
+                f"loop with no known trip count: its {c.out_bytes} B/iter "
+                "cannot be budgeted")
+    allowed = set(budget["allowed_ops"])
+    measured = rep.by_op()
+    for op, nbytes in sorted(measured.items()):
+        if op not in allowed:
+            names = [f"%{c.name}" for c in rep.collectives if c.op == op]
+            failures.append(
+                f"unbudgeted collective kind '{op}' ({nbytes} B: "
+                f"{', '.join(names)}) — the {budget['combine'] or 'dense'} "
+                f"combine plan only allows {sorted(allowed)}; an XLA "
+                "resharding or a densified combine slipped in")
+            continue
+        cap = budget["by_op"].get(op, 0.0) * (1.0 + slack_rel) + slack_abs
+        if nbytes > cap:
+            failures.append(
+                f"'{op}' moves {nbytes} B, budget allows "
+                f"{budget['by_op'].get(op, 0.0):.0f} B "
+                f"(+{slack_rel:.0%}/+{slack_abs:.0f} B slack)")
+    return ContractReport(
+        plan=repr(plan), budget_by_op=budget["by_op"],
+        measured_by_op=measured, by_axis=rep.by_axis(),
+        components=budget["components"], failures=failures,
+        unresolved_loops=rep.unresolved_loops)
+
+
+# ---------------------------------------------------------------------------
+# memory contract
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MemoryReport:
+    """Peak live bytes of a compiled step vs the analytic budget."""
+
+    plan: str
+    measured_bytes: int
+    budget_bytes: float
+    components: Dict[str, float]
+    failures: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def to_dict(self) -> Dict:
+        return {
+            "plan": self.plan, "ok": self.ok,
+            "measured_bytes": self.measured_bytes,
+            "budget_bytes": self.budget_bytes,
+            "components": self.components,
+            "failures": self.failures,
+        }
+
+
+def memory_budget(plan, boxed_params, cfg, batch, *, sub_ids=None) -> Dict[str, float]:
+    """Analytic per-device live-byte budget of one round step.
+
+    Component model (all f32 working set, ids s32):
+
+    - ``params_io``: the state tree twice (argument + fresh output; the
+      oracle lowers without donation so both are live at the apply).
+    - ``batch``: the full round batch + heat vectors (replicated argument).
+    - ``tables_scratch``: one f32 copy of every feature table — covers the
+      psum combine's densified partial and the apply-side scatter scratch.
+    - ``replicas``: the submodel working set, ``k_shard * capacity *
+      (row + id)`` with a 4x factor for gradient/delta/optimizer
+      temporaries. THIS is the term a dense-replica regression blows
+      through: densified replicas cost ``k_shard * V * row`` instead.
+    - ``combine``: the cross-shard union gather buffers + a V-sized
+      workspace (bitmap / unique-id machinery + heat working copies).
+    - ``activations``: 4x the batch bytes (forward + backward residuals of
+      the tiny audit models; scale-free w.r.t. V).
+    """
+    sharding = plan.sharding
+    ndev = sharding.num_shards if sharding is not None else 1
+    plain = unbox(boxed_params)
+    heat_spec = heat_spec_from_axes(boxed_params)
+    table_paths = [p for p, _ in sparse_table_paths(heat_spec)]
+    tables = [tree_leaf_at(plain, p) for p in table_paths]
+    vocab = max((int(t.shape[0]) for t in tables), default=0)
+    param_bytes = sum(float(np.prod(l.shape)) * l.dtype.itemsize
+                      for l in jax.tree.leaves(plain))
+    _, data = split_heat_batch(batch)
+    batch_bytes = sum(float(np.prod(np.shape(v))) * np.dtype(
+        getattr(v, "dtype", np.float32)).itemsize for v in batch.values())
+
+    fk = tuple(plan.feature_keys)
+    row_elems = sum(max(int(np.prod(t.shape[1:])), 1) for t in tables)
+    if sub_ids is not None:
+        cap = int(sub_ids.shape[-1])
+    elif getattr(plan.local, "stacked", False):
+        cap = round_capacity(vocab, sum(int(np.prod(data[k].shape[1:]))
+                                        for k in fk)) if vocab else 0
+    else:
+        cap = round_capacity(vocab, sum(int(np.prod(data[k].shape)) // ndev
+                                        for k in fk)) if vocab else 0
+    if getattr(plan.local, "stacked", False):
+        k_real = int(data[fk[0]].shape[0])
+        k_shard = -(-k_real // ndev)
+    else:
+        k_shard = 1
+
+    comps = {
+        "params_io": 2.0 * param_bytes,
+        "batch": batch_bytes,
+        "tables_scratch": sum(float(np.prod(t.shape)) * 4.0 for t in tables),
+        "replicas": 4.0 * k_shard * cap * (row_elems * 4.0 + 4.0),
+        "combine": float(ndev) * cap * (row_elems * 4.0 + 4.0)
+        + float(vocab) * 8.0,
+        "activations": 4.0 * batch_bytes,
+    }
+    return comps
+
+
+def memory_contract(plan, loss_fn, boxed_params, cfg, batch, *,
+                    sub_ids=None, compiled=None, budget: Optional[Dict] = None,
+                    slack_rel: float = 0.25,
+                    slack_abs: float = float(1 << 20)) -> MemoryReport:
+    """Gate a compiled step's peak live bytes against the analytic budget.
+
+    ``measured = argument + output - aliased + temp`` from
+    ``compiled.memory_analysis()`` — the executable's own accounting of
+    what must be resident at once. ``budget`` defaults to
+    :func:`memory_budget` of this plan; the planted-violation tests pass a
+    LEANER plan's budget to prove a dense-replica regression trips the gate.
+    """
+    if compiled is None:
+        compiled = lower_round_step(plan, loss_fn, boxed_params, cfg, batch,
+                                    sub_ids=sub_ids)
+    ma = compiled.memory_analysis()
+    measured = int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   - ma.alias_size_in_bytes + ma.temp_size_in_bytes)
+    comps = memory_budget(plan, boxed_params, cfg, batch,
+                          sub_ids=sub_ids) if budget is None else budget
+    allowed = sum(comps.values()) * (1.0 + slack_rel) + slack_abs
+    failures = []
+    if measured > allowed:
+        top = max(comps, key=comps.get)
+        failures.append(
+            f"peak live bytes {measured} exceed the analytic budget "
+            f"{sum(comps.values()):.0f} B (+{slack_rel:.0%}/"
+            f"+{slack_abs:.0f} B slack; largest budget term '{top}' = "
+            f"{comps[top]:.0f} B) — a dense-replica or table-copy "
+            "regression")
+    return MemoryReport(plan=repr(plan), measured_bytes=measured,
+                        budget_bytes=allowed, components=comps,
+                        failures=failures)
+
+
+# ---------------------------------------------------------------------------
+# comm-accounting drift
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DriftReport:
+    """HLO-measured combine bytes vs the comm plane's own prediction."""
+
+    plan: str
+    predicted_by_op: Dict[str, float]
+    measured_by_op: Dict[str, int]
+    rel_tol: float
+    abs_tol: float
+    failures: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def to_dict(self) -> Dict:
+        return {
+            "plan": self.plan, "ok": self.ok,
+            "predicted_by_op": self.predicted_by_op,
+            "measured_by_op": self.measured_by_op,
+            "rel_tol": self.rel_tol, "abs_tol": self.abs_tol,
+            "failures": self.failures,
+        }
+
+
+def comm_drift(plan, loss_fn, boxed_params, cfg, batch, *, sub_ids=None,
+               compiled=None, rel_tol: float = 0.10,
+               abs_tol: float = 64.0) -> DriftReport:
+    """Cross-check HLO collective bytes against ``sharded_combine_bytes``.
+
+    Unlike :func:`collective_contract` (whose budget mirrors the shard
+    bodies term by term), this check prices the combine from the
+    comm-accounting plane's OWN primitives — ``plan_comm_meta`` +
+    ``sharded_combine_bytes`` — so a change that updates the plan compiler
+    but forgets the byte accounting (or vice versa) fails here even when
+    the contract above still balances. Documented tolerance: 10% relative
+    + 64 B absolute per op kind (the absolute term covers the loss and
+    sub-row scalar reductions the comm plane does not price).
+    """
+    budget = round_collective_budget(plan, boxed_params, cfg, batch,
+                                     sub_ids=sub_ids)
+    meta = plan_comm_meta(boxed_params)
+    modes = set(budget["combine"].values())
+    if len(modes) != 1:
+        raise ValueError(
+            f"comm_drift prices one combine mode per plan, got {modes} — "
+            "multi-table models with split pick_combine decisions need the "
+            "per-table contract (collective_contract) instead")
+    mode = modes.pop()
+    cap = max(budget["capacity"].values())
+    predicted = sharded_combine_bytes(
+        meta, budget["vocab"], cap, budget["num_shards"], mode,
+        num_tables=len(budget["combine"]),
+        count_gather_ids=not budget["stacked"])
+    if compiled is None:
+        compiled = lower_round_step(plan, loss_fn, boxed_params, cfg, batch,
+                                    sub_ids=sub_ids)
+    measured = analyze_hlo(compiled.as_text()).by_op()
+    failures = []
+    for op in sorted(set(predicted) | set(measured)):
+        p, m = predicted.get(op, 0.0), measured.get(op, 0)
+        if abs(m - p) > rel_tol * p + abs_tol:
+            failures.append(
+                f"'{op}': comm plane predicts {p:.0f} B, compiled HLO moves "
+                f"{m} B (tolerance {rel_tol:.0%} + {abs_tol:.0f} B) — the "
+                "byte accounting and the plan compiler have drifted apart")
+    return DriftReport(plan=repr(plan), predicted_by_op=predicted,
+                       measured_by_op=measured, rel_tol=rel_tol,
+                       abs_tol=abs_tol, failures=failures)
+
+
+# ---------------------------------------------------------------------------
+# CLI: the CI gate
+# ---------------------------------------------------------------------------
+
+
+def _audit_matrix(vocab: int, emb: int):
+    """Contract + memory + drift over the sharded sparse plan matrix."""
+    from repro.configs import FedConfig
+    from repro.federated import CohortSharding, resolve_plan
+    from repro.launch.mesh import make_cohort_mesh
+    from repro.models.recsys import lstm_loss, make_lstm_params
+
+    mesh = make_cohort_mesh()
+    params = make_lstm_params(vocab, emb_dim=emb, hidden=8, layers=1,
+                              rng=jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+
+    def cohort_batch(k=3, i=2, b=2, s=6):
+        return {
+            "tokens": jnp.asarray(rng.integers(-1, vocab, (k, i, b, s)),
+                                  jnp.int32),
+            "label": jnp.asarray(rng.integers(0, 2, (k, i, b)), jnp.int32),
+            "heat_vocab": jnp.maximum(jnp.asarray(
+                rng.integers(0, 6, vocab), jnp.float32), 0)}
+
+    def flat_batch(b=8, s=8):
+        return {
+            "tokens": jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32),
+            "label": jnp.asarray(rng.integers(0, 2, b), jnp.int32),
+            "heat_vocab": jnp.maximum(jnp.asarray(
+                rng.integers(0, 6, vocab), jnp.float32), 0)}
+
+    results = []
+    for mode in ("sparse", "sparse_replicated"):
+        for alg in ("fedavg", "fedsubavg"):
+            for combine in ("psum", "union"):
+                fed = FedConfig(num_clients=16, clients_per_round=3,
+                                local_iters=2, lr=0.1, algorithm=alg)
+                plan = dataclasses.replace(
+                    resolve_plan(mode, fed, correct=(alg == "fedsubavg")),
+                    sharding=CohortSharding(mesh, combine=combine))
+                batch = flat_batch() if mode == "sparse" else cohort_batch()
+                compiled = lower_round_step(plan, lstm_loss, params, fed,
+                                            batch)
+                con = collective_contract(plan, lstm_loss, params, fed,
+                                          batch, compiled=compiled)
+                mem = memory_contract(plan, lstm_loss, params, fed, batch,
+                                      compiled=compiled)
+                drift = comm_drift(plan, lstm_loss, params, fed, batch,
+                                   compiled=compiled)
+                results.append({
+                    "mode": mode, "algorithm": alg, "combine": combine,
+                    "contract": con.to_dict(), "memory": mem.to_dict(),
+                    "drift": drift.to_dict(),
+                    "ok": con.ok and mem.ok and drift.ok,
+                })
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="comm & memory oracle over compiled sharded round steps")
+    ap.add_argument("--json", default=None,
+                    help="write the contract report to this path")
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--emb", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    ndev = len(jax.devices())
+    if ndev < 2:
+        print("hlo_audit: needs a multi-device mesh (run under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8); "
+              f"found {ndev} device", file=sys.stderr)
+        return 2
+    results = _audit_matrix(args.vocab, args.emb)
+    report = {"device_count": ndev, "vocab": args.vocab, "emb": args.emb,
+              "results": results, "ok": all(r["ok"] for r in results)}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+    failed = [r for r in results if not r["ok"]]
+    for r in results:
+        tag = f"{r['mode']}/{r['algorithm']}/{r['combine']}"
+        status = "OK" if r["ok"] else "FAIL"
+        by_op = r["contract"]["measured_by_op"]
+        print(f"hlo_audit {status:4s} {tag}: collectives {by_op}, "
+              f"peak {r['memory']['measured_bytes']} B")
+        for section in ("contract", "memory", "drift"):
+            for msg in r[section]["failures"]:
+                print(f"  {section}: {msg}", file=sys.stderr)
+    if failed:
+        print(f"hlo_audit: {len(failed)}/{len(results)} plan contracts "
+              "FAILED", file=sys.stderr)
+        return 1
+    print(f"hlo_audit: all {len(results)} plan contracts hold "
+          f"({ndev} devices)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,9 +18,12 @@ work depends on:
 
 ``donation_aliased``
     Confirm that a donated argument is actually aliased to an output in the
-    lowered HLO (the ``tf.aliasing_output`` attribute).  Donation requests
-    are silently dropped when shapes/dtypes fail to line up; this turns
-    "we asked" into "it happened".
+    lowered HLO, and report *which* input buffers landed where (the
+    ``tf.aliasing_output`` attributes on the ``@main`` signature).  Donation
+    requests are silently dropped when shapes/dtypes fail to line up; the
+    returned :class:`DonationReport` turns "we asked" into a per-buffer
+    input->output map plus a dropped count, and is truthy exactly when every
+    donated buffer aliased.
 
 ``jit_cache_guard``
     Context manager pinning the number of *new* compilations of one or
@@ -35,8 +38,10 @@ linter stays usable in environments without it.
 from __future__ import annotations
 
 import contextlib
-from dataclasses import dataclass
-from typing import Any, Callable, Iterable, Sequence
+import re
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +49,7 @@ import jax.numpy as jnp
 __all__ = [
     "DenseIntermediate",
     "DenseMaterializationError",
+    "DonationReport",
     "CompileCountError",
     "find_dense_intermediates",
     "assert_no_dense_intermediates",
@@ -168,21 +174,84 @@ def assert_no_dense_intermediates(
         raise DenseMaterializationError(dim0, hits)
 
 
+@dataclass(frozen=True, eq=False)
+class DonationReport:
+    """What XLA actually did with a donation request.
+
+    ``aliasing`` maps flattened ``@main`` argument index -> flattened output
+    index for every buffer carrying a ``tf.aliasing_output`` attribute in
+    the lowered module; ``num_donated`` is the number of input *leaves* the
+    donation request covered.  ``dropped`` is the shortfall: requested
+    buffers XLA declined to alias (shape/dtype mismatch with every output).
+
+    Truthiness preserves the old boolean API, but strictly: the report is
+    truthy only when something aliased AND nothing requested was dropped,
+    so ``assert donation_aliased(...)`` now also catches the partial drop
+    the old substring check waved through.
+    """
+
+    aliasing: Dict[int, int] = field(default_factory=dict)
+    num_donated: int = 0
+
+    @property
+    def dropped(self) -> int:
+        return max(self.num_donated - len(self.aliasing), 0)
+
+    def __bool__(self) -> bool:
+        return bool(self.aliasing) and self.dropped == 0
+
+    def __str__(self) -> str:
+        pairs = ", ".join(f"%arg{a}->out{o}"
+                          for a, o in sorted(self.aliasing.items()))
+        return (f"DonationReport(aliased={{{pairs}}}, "
+                f"requested={self.num_donated}, dropped={self.dropped})")
+
+
+_MAIN_ARG_RE = re.compile(r"%arg(\d+)\s*:")
+_ALIAS_ATTR_RE = re.compile(r"tf\.aliasing_output\s*=\s*(\d+)")
+
+
 def donation_aliased(
     fn: Callable,
     *args,
     donate_argnums: Sequence[int] = (0,),
     **kwargs,
-) -> bool:
-    """True iff jitting ``fn`` with the given donation actually aliases.
+) -> DonationReport:
+    """Report how jitting ``fn`` with the given donation actually aliased.
 
     XLA drops donation silently when no output matches a donated input's
     shape/dtype; the only reliable witness is the ``tf.aliasing_output``
-    attribute in the lowered module text.
+    attribute on the ``@main`` signature of the lowered module text.  Each
+    attribute is attributed to the nearest preceding ``%argN:`` declaration
+    (the attribute dict sits directly after its argument's type, and
+    aliasing attributes appear only in the signature).
+
+    Returns a :class:`DonationReport`; its truthiness matches the old bool
+    API for the all-or-nothing cases, and ``report.aliasing`` /
+    ``report.dropped`` expose the per-buffer outcome — including the
+    partially-dropped donation the substring check could not see.
     """
     jitted = jax.jit(fn, donate_argnums=tuple(donate_argnums))
-    text = jitted.lower(*args, **kwargs).as_text()
-    return "tf.aliasing_output" in text
+    with warnings.catch_warnings():
+        # a partially-usable donation warns at lower time; the report is
+        # the structured version of that warning, so keep the audit quiet
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        text = jitted.lower(*args, **kwargs).as_text()
+    arg_marks = [(m.start(), int(m.group(1)))
+                 for m in _MAIN_ARG_RE.finditer(text)]
+    aliasing: Dict[int, int] = {}
+    for m in _ALIAS_ATTR_RE.finditer(text):
+        owner = None
+        for pos, idx in arg_marks:
+            if pos >= m.start():
+                break
+            owner = idx
+        if owner is not None:
+            aliasing[owner] = int(m.group(1))
+    num_donated = sum(len(jax.tree.leaves(args[i]))
+                      for i in donate_argnums)
+    return DonationReport(aliasing=aliasing, num_donated=num_donated)
 
 
 class CompileCountError(AssertionError):

@@ -37,6 +37,23 @@ Rules
     after the call: the donation invalidated it. The safe idiom rebinds the
     holder in the same statement (``self.state, m = step(self.state, ...)``).
 
+``shard-full-aggregate``
+    A ``shard_map`` body calls a full (heat-fused) aggregate
+    (``aggregate_rowsparse`` / ``sparse_cohort_aggregate``) instead of
+    ``aggregate_rowsparse_partial``: each shard holds a PARTIAL cohort, so
+    the fused N/n_m heat correction applies per shard and the cross-shard
+    combine then sums already-corrected partials — PR 5's double-correction
+    bug class.
+
+``shard-missing-psum``
+    ``jnp.sum`` / ``jnp.mean`` (or ``.sum()`` / ``.mean()``) inside a
+    ``shard_map`` body with no ``psum`` / ``pmean`` in reach: the result
+    collapses the SHARD's slice only and silently reports one shard's value
+    as the cohort's (PR 5's metrics bug class). Reductions that feed a
+    collective — directly or through an assigned name — are exempt;
+    deliberately per-shard values (``P(axis)`` out_specs) carry an explained
+    suppression.
+
 Traced-context heuristic
 ------------------------
 A function is considered traced when it (a) is decorated with / passed to a
@@ -90,6 +107,10 @@ RULES: Dict[str, str] = {
     "data-dep-shape": "data-dependent output shape (jnp.unique/nonzero/... "
                       "without size=) under jit",
     "donated-reuse": "donated buffer re-referenced after the donating call",
+    "shard-full-aggregate": "full heat-fused aggregate called inside a "
+                            "shard_map body (partial + combine required)",
+    "shard-missing-psum": "per-shard jnp reduction in a shard_map body "
+                          "with no psum/pmean in reach",
     "bare-allowlist": "repro-lint suppression without a ' -- reason'",
 }
 
@@ -743,6 +764,153 @@ def _check_donated_reuse(tree: ast.Module, index: _ModuleIndex, path: str,
                                     active[d] = (n.lineno, n.col_offset)
 
 
+#: full (heat-fused) aggregates that must never run per shard: inside a
+#: shard_map body each shard sees a PARTIAL cohort, so the fused N/n_m heat
+#: correction would apply per shard and then be summed across shards
+_SHARD_BANNED_AGGREGATES = {"aggregate_rowsparse", "sparse_cohort_aggregate"}
+
+#: collective callees that legitimately consume a per-shard reduction
+_COLLECTIVE_CALLS = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                     "all_to_all", "ppermute", "psum_scatter"}
+
+#: reduction callee tails that collapse a per-shard axis
+_REDUCTION_TAILS = {"sum", "mean"}
+
+
+def _walk_shard_scope(root: ast.AST) -> Iterable[ast.AST]:
+    """Own scope of a function/lambda, DESCENDING into lambdas.
+
+    Unlike :func:`_walk_scope`, lambda bodies are included: a shard_map body
+    is routinely ``lambda p, d, c: body(p, d, None, c)`` and the reference
+    to ``body`` lives inside the lambda. Nested def/class scopes are still
+    excluded — they are marked as their own shard scopes when referenced.
+    """
+    stack = [root.body] if isinstance(root, ast.Lambda) else list(root.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _shard_scopes(index: _ModuleIndex, tree: ast.Module) -> List[ast.AST]:
+    """Scopes that execute inside a ``shard_map`` body.
+
+    Roots: the callable passed to ``shard_map`` (first positional argument,
+    possibly a lambda or a ``partial``). Propagation: any module function a
+    shard scope references by name joins the set, to fixpoint — the body
+    helpers (``run_local``, ``agg_leaf``-style tree_map callbacks) execute
+    under the same mesh axis. Within-module only, so a sparse-plane module
+    that merely DEFINES combine helpers is never marked.
+    """
+    scopes: List[ast.AST] = []
+    seen: Set[ast.AST] = set()
+    work: List[ast.AST] = []
+    names: Set[str] = set()
+    done: Set[str] = set()
+
+    def add_scope(node: ast.AST) -> None:
+        if node not in seen:
+            seen.add(node)
+            work.append(node)
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _name_tail(node.func) == "shard_map"):
+            continue
+        cand = node.args[0] if node.args else None
+        if cand is None:
+            for kw in node.keywords:
+                if kw.arg in ("f", "fun"):
+                    cand = kw.value
+        if isinstance(cand, ast.Lambda):
+            add_scope(cand)
+        elif isinstance(cand, ast.Call) and _name_tail(cand.func) == "partial" \
+                and cand.args:
+            t = _name_tail(cand.args[0])
+            if t:
+                names.add(t)
+        elif cand is not None:
+            t = _name_tail(cand)
+            if t:
+                names.add(t)
+
+    while work or names - done:
+        for name in sorted(names - done):
+            done.add(name)
+            for info in index.by_name.get(name, []):
+                add_scope(info.node)
+        while work:
+            scope = work.pop()
+            scopes.append(scope)
+            for sub in _walk_shard_scope(scope):
+                if isinstance(sub, ast.Name) \
+                        and isinstance(sub.ctx, ast.Load) \
+                        and sub.id in index.by_name:
+                    names.add(sub.id)
+    return scopes
+
+
+def _check_shard_hygiene(tree: ast.Module, index: _ModuleIndex, path: str,
+                         out: List[Violation]) -> None:
+    """shard-full-aggregate + shard-missing-psum over every shard scope."""
+    for scope in _shard_scopes(index, tree):
+        sname = getattr(scope, "name", "<lambda>")
+        nodes = list(_walk_shard_scope(scope))
+        # reductions nested under a collective call are combined on the spot
+        exempt: Set[ast.AST] = set()
+        fed: Set[str] = set()     # names a collective consumes later
+        for n in nodes:
+            if isinstance(n, ast.Call) \
+                    and _name_tail(n.func) in _COLLECTIVE_CALLS:
+                exempt.update(ast.walk(n))
+                for a in list(n.args) + [kw.value for kw in n.keywords]:
+                    fed.update(s.id for s in ast.walk(a)
+                               if isinstance(s, ast.Name))
+        # reductions whose assigned name feeds a collective elsewhere in the
+        # scope are the two-statement combine idiom
+        for n in nodes:
+            if isinstance(n, ast.Assign):
+                tnames: List[str] = []
+                for t in n.targets:
+                    tnames.extend(_target_names(t))
+                if any(t in fed for t in tnames):
+                    exempt.update(ast.walk(n.value))
+        for n in nodes:
+            if not isinstance(n, ast.Call):
+                continue
+            tail = _name_tail(n.func)
+            if tail in _SHARD_BANNED_AGGREGATES:
+                out.append(Violation(
+                    "shard-full-aggregate", path, n.lineno, n.col_offset,
+                    f"{tail}() inside the shard_map body {sname}(): each "
+                    "shard holds a PARTIAL cohort, so the fused heat "
+                    "correction applies per shard and the cross-shard "
+                    "combine sums already-corrected partials — use "
+                    "aggregate_rowsparse_partial + "
+                    "combine_rowsparse_partials"))
+                continue
+            root = _dotted(n.func) or ""
+            is_reduction = (tail in _REDUCTION_TAILS and (
+                root.startswith("jnp.") or root.startswith("jax.numpy.")
+                or (isinstance(n.func, ast.Attribute)
+                    and not root.startswith("np.")
+                    and not root.startswith("numpy."))))
+            if not is_reduction or n in exempt:
+                continue
+            if any(kw.arg == "axis_name" for kw in n.keywords):
+                continue
+            out.append(Violation(
+                "shard-missing-psum", path, n.lineno, n.col_offset,
+                f"{tail}() reduction in the shard_map body {sname}() with "
+                "no psum/pmean in reach: the result collapses this SHARD's "
+                "slice only — combine it over the mesh axis "
+                "(jax.lax.psum/pmean), or suppress with the per-shard "
+                "intent explained"))
+
+
 # ---------------------------------------------------------------------------
 # allowlist + driver
 # ---------------------------------------------------------------------------
@@ -814,6 +982,7 @@ def lint_source(source: str, path: str):
     _check_pallas_semantics(tree, index, path, raw)
     _check_static_argnames(tree, index, path, raw)
     _check_donated_reuse(tree, index, path, raw)
+    _check_shard_hygiene(tree, index, path, raw)
 
     violations: List[Violation] = list(bare)
     suppressions: List[Suppression] = []

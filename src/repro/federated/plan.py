@@ -72,7 +72,7 @@ from repro.sharding.logical import axes_tree, boxed_like, unbox
 from repro.sparse.aggregate import (aggregate_rowsparse_partial,
                                     apply_rowsparse,
                                     combine_rowsparse_partials,
-                                    correct_rowsparse,
+                                    correct_rowsparse, pick_combine,
                                     sparse_cohort_aggregate)
 from repro.sparse.comm import CommMeta, CommStats, model_comm_meta, round_comm_stats
 from repro.sparse.compress import compress_delta_tree
@@ -459,6 +459,141 @@ def plan_comm_meta(boxed_params) -> CommMeta:
     spec = heat_spec_from_axes(boxed_params)
     paths = {p for p, _ in sparse_table_paths(spec)}
     return model_comm_meta(unbox(boxed_params), paths)
+
+
+def round_collective_budget(plan: "RoundPlan", boxed_params_template,
+                            cfg: FedConfig, batch: Dict, *,
+                            sub_ids=None) -> Dict:
+    """Analytic per-collective budget of one cohort-sharded round step.
+
+    Mirrors, term by term, the collectives ``build_round_step``'s shard
+    bodies emit — so ``analysis.hlo_audit.collective_contract`` can compare
+    the compiled HLO's inventory against what the plan PROMISED, and any
+    extra kind or byte (an XLA resharding all-gather, an accidentally
+    densified combine) is a contract violation, not noise.
+
+    Per-device bytes, telemetry-off steps only (telemetry's host-side
+    drop-stat assembly reshards the per-device id stacks in ways no static
+    budget predicts; the oracle lowers steps with ``telemetry=False``).
+    Payloads are priced as f32 (the update-tree dtype) and ids as s32.
+
+    The budget's terms per path:
+
+    - stacked locals (``ReplicatedLocal``/``SubmodelReplicatedLocal``):
+      loss psum (4 B) + sparse ``sub_rows`` psum (4 B) + dense-leaf psums
+      (non-table leaves, or the whole densified tree on a dense transport)
+      + the per-table combine: ``pick_combine`` decides psum (all-reduce of
+      the densified (V, E_t) f32 partial) vs union (all-gather of the
+      partial's ``min(V, K/ndev * cap_client)`` ids + rows).
+    - flat local (``FedSgdLocal`` sparse): loss pmean + dense-leaf pmeans
+      + the single-table combine on the round-union capacity + the extra
+      ``used_ids`` all-gather that computes the cross-shard union count.
+
+    Returns ``{"axis", "num_shards", "vocab", "stacked", "combine":
+    {table: mode}, "capacity": {table: per-shard partial capacity},
+    "components": {name: {"op", "bytes"}}, "by_op", "allowed_ops"}``.
+    """
+    sharding = plan.sharding
+    if sharding is None:
+        raise ValueError("round_collective_budget prices the cross-shard "
+                         "combine: the plan has no CohortSharding")
+    local, transport, server = plan.local, plan.transport, plan.server
+    sparse = transport.sparse
+    ndev = sharding.num_shards
+    feature_keys = tuple(plan.feature_keys)
+    heat_spec = heat_spec_from_axes(boxed_params_template)
+    table_paths = [p for p, _ in sparse_table_paths(heat_spec)]
+    plain = unbox(boxed_params_template)
+    vocabs = sorted({int(tree_leaf_at(plain, p).shape[0])
+                     for p in table_paths})
+    vocab = vocabs[-1] if vocabs else 0
+    _, data = split_heat_batch(batch)
+
+    tables = []  # (name, vocab_t, row_elems_t)
+    for p in table_paths:
+        leaf = tree_leaf_at(plain, p)
+        tables.append(("/".join(str(k) for k in p),
+                       int(leaf.shape[0]),
+                       max(int(np.prod(leaf.shape[1:])), 1)))
+    static_f32 = sum(
+        float(np.prod(leaf.shape))
+        for path, leaf in jax.tree_util.tree_flatten_with_path(plain)[0]
+        if tree_path_keys(path) not in set(table_paths)) * 4.0
+
+    components: Dict[str, Dict] = {}
+    combine_modes: Dict[str, str] = {}
+    capacities: Dict[str, int] = {}
+
+    def add(name, op, nbytes):
+        if nbytes > 0:
+            components[name] = {"op": op, "bytes": float(nbytes)}
+
+    add("loss", "all-reduce", 4.0)
+    if local.stacked:
+        k_real = int(data[feature_keys[0]].shape[0])
+        k_shard = -(-k_real // ndev)
+        if sparse:
+            add("sub_rows", "all-reduce", 4.0)
+            add("dense_leaves", "all-reduce", static_f32)
+            if sub_ids is not None:
+                cap_client = int(sub_ids.shape[-1])
+            else:
+                feats = sum(int(np.prod(data[k].shape[1:]))
+                            for k in feature_keys)
+                cap_client = round_capacity(vocab, feats)
+            for name, v_t, elems_t in tables:
+                mode = pick_combine(v_t, elems_t, sharding.combine)
+                combine_modes[name] = mode
+                cap_part = min(v_t, k_shard * cap_client)
+                capacities[name] = cap_part
+                if mode == "psum":
+                    add(f"combine:{name}", "all-reduce",
+                        float(v_t) * elems_t * 4.0)
+                else:
+                    add(f"combine:{name}", "all-gather",
+                        float(ndev) * cap_part * (4.0 + elems_t * 4.0))
+        else:
+            # dense transport: every leaf (densified for submodel replicas)
+            # rides one psum of its f32 shard-mean
+            add("dense_tree", "all-reduce", sum(
+                float(np.prod(leaf.shape)) * 4.0
+                for leaf in jax.tree.leaves(plain)))
+    else:
+        # flat pooled batch (FedSgdLocal)
+        if sparse:
+            add("dense_leaves", "all-reduce", static_f32)
+            if sub_ids is not None:
+                cap = int(sub_ids.shape[-1])
+            else:
+                ids_size = sum(int(np.prod(data[k].shape)) // ndev
+                               for k in feature_keys)
+                cap = round_capacity(vocab, ids_size)
+            name, v_t, elems_t = tables[0]
+            mode = pick_combine(v_t, elems_t, sharding.combine)
+            combine_modes[name] = mode
+            capacities[name] = cap
+            if mode == "psum":
+                add(f"combine:{name}", "all-reduce",
+                    float(v_t) * elems_t * 4.0)
+            else:
+                add(f"combine:{name}", "all-gather",
+                    float(ndev) * cap * (4.0 + elems_t * 4.0))
+            # the cross-shard union count gathers every shard's used_ids
+            add("used_ids", "all-gather", float(ndev) * cap * 4.0)
+        else:
+            add("dense_tree", "all-reduce", sum(
+                float(np.prod(leaf.shape)) * 4.0
+                for leaf in jax.tree.leaves(plain)))
+
+    by_op: Dict[str, float] = {}
+    for c in components.values():
+        by_op[c["op"]] = by_op.get(c["op"], 0.0) + c["bytes"]
+    return {
+        "axis": sharding.axis, "num_shards": ndev, "vocab": vocab,
+        "stacked": bool(local.stacked), "combine": combine_modes,
+        "capacity": capacities, "components": components, "by_op": by_op,
+        "allowed_ops": sorted(by_op),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -949,6 +1084,9 @@ def build_round_step(plan: RoundPlan, loss_fn: Callable, boxed_params_template,
             tel = {"norm_pre_sq": sq, "norm_post_sq": sq}
             if sparse:
                 tel["used_ids"] = used_ids[None]
+                # used_ids is already the cross-shard union (gathered above);
+                # out_spec P(axis) reassembles one count per device
+                # repro-lint: ok shard-missing-psum -- deliberately per-shard count of the already-gathered union
                 tel["shard_union"] = (used_ids >= 0).sum(
                     dtype=jnp.int32)[None]
             return out + (tel,)

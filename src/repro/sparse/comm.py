@@ -143,6 +143,43 @@ def tree_wire_bytes(tree: Any) -> float:
     return total
 
 
+def sharded_combine_bytes(meta: CommMeta, vocab: int, union_capacity: int,
+                          num_shards: int, mode: str, *, num_tables: int = 1,
+                          count_gather_ids: bool = False) -> Dict[str, float]:
+    """Predicted cross-shard combine bytes of one sharded sparse round.
+
+    The comm-plane half of the hlo_audit drift check: prices, per device and
+    per HLO collective kind, the combine that ``combine_rowsparse_partials``
+    emits for a cohort-sharded round — from the same :class:`CommMeta` that
+    prices the client wire. ``mode`` is the resolved combine ("psum" or
+    "union", see ``pick_combine``); ``union_capacity`` is the per-shard
+    partial capacity whose ids/rows the union path all-gathers.
+    ``count_gather_ids`` adds the flat path's extra ``used_ids`` all-gather
+    (the cross-shard union count). Dense non-table leaves always ride an
+    all-reduce; payloads are priced as f32 (the update-tree dtype).
+
+    Loss / sub-row scalar reductions (a few bytes) are deliberately not
+    priced — the drift check absorbs them in its absolute tolerance.
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0}
+    row_bytes = float(meta.row_elems) * 4.0
+    if mode == "psum":
+        # per-table densified partial: (V, row_elems_t) f32, summed over
+        # tables = V * row_elems * 4
+        out["all-reduce"] += float(vocab) * row_bytes
+    elif mode == "union":
+        # per-table all-gather of the partial's ids (s32) + rows (f32)
+        out["all-gather"] += float(num_shards) * float(union_capacity) * (
+            float(num_tables) * _ID_BYTES + row_bytes)
+    else:
+        raise ValueError(f"unknown combine mode: {mode!r}")
+    out["all-reduce"] += float(meta.sparse_static_bytes)
+    if count_gather_ids:
+        out["all-gather"] += (float(num_shards) * float(union_capacity)
+                              * _ID_BYTES)
+    return out
+
+
 def round_comm_stats(rnd: int, dense_model_bytes: float,
                      sparse_static_bytes: float, row_payload_bytes: float,
                      valid_ids_per_client: np.ndarray, num_features: int,

@@ -125,6 +125,31 @@ def test_donation_aliased_negative():
                                     donate_argnums=(0,))
 
 
+def test_donation_report_maps_buffers():
+    """The report names which buffer aliased to which output."""
+    rep = donation_aliased(lambda x: x * 2.0, jnp.ones((8,)),
+                           donate_argnums=(0,))
+    assert rep.aliasing == {0: 0}
+    assert rep.num_donated == 1 and rep.dropped == 0
+
+
+def test_donation_report_partially_dropped():
+    """Regression for the substring-check blind spot: donate a 2-leaf tree
+    where only one leaf is reusable.  The old `'tf.aliasing_output' in text`
+    bool said True; the report must say one aliased, one dropped, and be
+    falsy so asserts catch the partial drop."""
+    def f(p):
+        a, b = p
+        return a * 2.0, jnp.sum(b)     # b's (4,) buffer has no (4,) output
+
+    rep = donation_aliased(f, (jnp.ones((8,)), jnp.ones((4,))),
+                           donate_argnums=(0,))
+    assert rep.num_donated == 2
+    assert rep.aliasing == {0: 0}      # only the (8,) leaf aliased
+    assert rep.dropped == 1
+    assert not rep
+
+
 # ---------------------------------------------------------------------------
 # jit_cache_guard
 # ---------------------------------------------------------------------------

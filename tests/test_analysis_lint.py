@@ -23,6 +23,8 @@ _SEEDED = {
     "viol_pallas_semantics.py": "pallas-dim-semantics",
     "viol_data_dep_shape.py": "data-dep-shape",
     "viol_donated_reuse.py": "donated-reuse",
+    "viol_shard_full_aggregate.py": "shard-full-aggregate",
+    "viol_shard_missing_psum.py": "shard-missing-psum",
 }
 
 

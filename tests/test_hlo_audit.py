@@ -1,0 +1,185 @@
+"""Comm & memory oracle tests: contracts on real compiled sharded steps.
+
+Every test here lowers a CohortSharding round step on the host mesh and
+checks the hlo_audit layer end-to-end: the collective inventory balances
+against ``round_collective_budget``, peak live bytes stay under the
+analytic memory budget, and the comm-accounting plane's own byte pricing
+matches what the compiled HLO moves. Planted-violation tests prove the
+gates FAIL (naming the offender) when a resharding or a dense-replica
+regression is forced in.
+
+Contract checks need a real multi-device mesh; run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI gate does).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_audit import (collective_contract, comm_drift,
+                                      lower_round_step, main,
+                                      memory_budget, memory_contract)
+from repro.configs.base import FedConfig
+from repro.federated.plan import CohortSharding, resolve_plan
+from repro.launch.mesh import make_cohort_mesh
+from repro.models.recsys import lstm_loss, make_lstm_params
+
+NDEV = len(jax.devices())
+
+pytestmark = pytest.mark.skipif(
+    NDEV < 2, reason="hlo_audit contracts need a multi-device mesh "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+V, E = 128, 6
+
+
+def _params(vocab=V, emb=E):
+    return make_lstm_params(vocab, emb_dim=emb, hidden=8, layers=1,
+                            rng=jax.random.PRNGKey(1))
+
+
+def _cohort_batch(vocab=V, k=3, i=2, b=2, s=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "tokens": jnp.asarray(rng.integers(-1, vocab, (k, i, b, s)),
+                              jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, (k, i, b)), jnp.int32),
+        "heat_vocab": jnp.asarray(rng.integers(0, 6, vocab), jnp.float32)}
+
+
+def _flat_batch(vocab=V, b=8, s=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "tokens": jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32),
+        "label": jnp.asarray(rng.integers(0, 2, b), jnp.int32),
+        "heat_vocab": jnp.asarray(rng.integers(0, 6, vocab), jnp.float32)}
+
+
+def _sharded_plan(mode, fed, combine):
+    return dataclasses.replace(
+        resolve_plan(mode, fed, correct=(fed.algorithm == "fedsubavg")),
+        sharding=CohortSharding(make_cohort_mesh(), combine=combine))
+
+
+_FED = FedConfig(num_clients=16, clients_per_round=3, local_iters=2,
+                 lr=0.1, algorithm="fedsubavg")
+
+
+# ---------------------------------------------------------------------------
+# the contract matrix: both sharded sparse plans, both combines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,combine", [
+    ("sparse", "psum"), ("sparse", "union"),
+    ("sparse_replicated", "psum"), ("sparse_replicated", "union"),
+])
+def test_contracts_hold_on_sharded_plans(mode, combine):
+    params = _params()
+    plan = _sharded_plan(mode, _FED, combine)
+    batch = _flat_batch() if mode == "sparse" else _cohort_batch()
+    compiled = lower_round_step(plan, lstm_loss, params, _FED, batch)
+
+    con = collective_contract(plan, lstm_loss, params, _FED, batch,
+                              compiled=compiled)
+    assert con.ok, con.failures
+    # the verified-byte-exact budget: every measured kind was predicted and
+    # every predicted nonzero kind shows up in the compiled module
+    assert set(con.measured_by_op) <= set(con.budget_by_op)
+    for op, b in con.budget_by_op.items():
+        assert con.measured_by_op.get(op, 0) > 0 or b == 0
+    # every collective attributed to the cohort mesh axis, none unknown
+    assert set(con.by_axis) == {"data"}
+
+    mem = memory_contract(plan, lstm_loss, params, _FED, batch,
+                          compiled=compiled)
+    assert mem.ok, mem.failures
+    assert 0 < mem.measured_bytes <= mem.budget_bytes
+
+    drift = comm_drift(plan, lstm_loss, params, _FED, batch,
+                       compiled=compiled)
+    assert drift.ok, drift.failures
+    # drift really compared something: the combine's dominant op is priced
+    dominant = "all-reduce" if combine == "psum" else "all-gather"
+    assert drift.predicted_by_op[dominant] > 0
+    assert drift.measured_by_op[dominant] > 0
+
+
+# ---------------------------------------------------------------------------
+# planted violations: the gates must FAIL, naming the offender
+# ---------------------------------------------------------------------------
+
+
+def test_planted_resharding_fails_collective_contract():
+    """Shard the (V, E) table over the mesh in a psum-combine plan: XLA must
+    all-gather it back, and that unpredicted kind is a named failure."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    params = _params()
+    plan = _sharded_plan("sparse_replicated", _FED, "psum")
+    batch = _cohort_batch()
+    mesh = plan.sharding.mesh
+    repl = NamedSharding(mesh, P())
+
+    def leaf_sharding(leaf):
+        if getattr(leaf, "ndim", 0) == 2 and leaf.shape[0] == V:
+            return NamedSharding(mesh, P("data"))
+        return repl
+
+    from repro.core.algorithms import ServerState
+    state = ServerState(params, (), jnp.zeros((), jnp.int32))
+    in_shardings = (jax.tree.map(leaf_sharding, state),
+                    jax.tree.map(lambda _: repl, batch))
+    con = collective_contract(plan, lstm_loss, params, _FED, batch,
+                              in_shardings=in_shardings)
+    assert not con.ok
+    assert any("unbudgeted collective kind 'all-gather'" in f
+               for f in con.failures), con.failures
+
+
+def test_planted_dense_replicas_fail_memory_contract():
+    """A dense-replica plan (each of K clients holds the full table) must
+    blow through the sparse plan's analytic budget at scale, and the
+    failure names the largest budget term."""
+    vocab, emb, k = 16384, 8, 40
+    params = _params(vocab, emb)
+    fed = FedConfig(num_clients=64, clients_per_round=k, local_iters=2,
+                    lr=0.1, algorithm="fedsubavg")
+    batch = _cohort_batch(vocab, k=k)
+    sparse_plan = _sharded_plan("sparse_replicated", fed, "union")
+
+    lean = memory_contract(sparse_plan, lstm_loss, params, fed, batch)
+    assert lean.ok, lean.failures
+
+    dense_plan = _sharded_plan("replicated", fed, "union")
+    budget = memory_budget(sparse_plan, params, fed, batch)
+    fat = memory_contract(dense_plan, lstm_loss, params, fed, batch,
+                          budget=budget)
+    assert not fat.ok
+    assert fat.measured_bytes > lean.measured_bytes
+    assert any("peak live bytes" in f and "largest budget term" in f
+               for f in fat.failures), fat.failures
+
+
+# ---------------------------------------------------------------------------
+# CLI gate
+# ---------------------------------------------------------------------------
+
+
+def test_cli_matrix_green_and_json_report(tmp_path, capsys):
+    out = tmp_path / "contract-report.json"
+    rc = main(["--json", str(out), "--vocab", "128", "--emb", "6"])
+    assert rc == 0
+    import json
+    report = json.loads(out.read_text())
+    assert report["ok"] is True
+    assert report["device_count"] == NDEV
+    assert len(report["results"]) == 8
+    for r in report["results"]:
+        assert r["ok"], (r["mode"], r["algorithm"], r["combine"])
+        for section in ("contract", "memory", "drift"):
+            assert r[section]["failures"] == []
+    text = capsys.readouterr().out
+    assert "all 8 plan contracts hold" in text

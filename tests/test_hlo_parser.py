@@ -1,0 +1,252 @@
+"""Direct unit tests for repro.launch.hlo on synthetic HLO fixtures.
+
+The dryrun/roofline layers exercise analyze_hlo end-to-end on real compiled
+modules; these tests pin the PARSER contract itself — result-shape-only byte
+attribution, async -start/-done pairing, replica_groups grammar, loop
+multipliers, and call-graph dedup — on hand-written HLO where every byte is
+known in advance.
+"""
+import jax
+import pytest
+
+from repro.launch.hlo import (_parse_replica_groups, _shape_bytes,
+                              _shape_bytes_list, analyze_hlo,
+                              mesh_axis_groups)
+
+NDEV = len(jax.devices())
+
+
+def _mod(*comps):
+    return "HloModule synthetic\n\n" + "\n\n".join(comps)
+
+
+# ---------------------------------------------------------------------------
+# shape literals
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bytes_list_order_and_dtypes():
+    text = "(f32[4]{0}, s32[2,3]{1,0}, pred[8])"
+    assert _shape_bytes_list(text) == [16, 24, 8]
+    assert _shape_bytes(text) == 48
+
+
+def test_shape_bytes_ignores_layout_and_unknown_dtypes():
+    # the layout suffix {1,0} and non-dtype brackets must not parse as shapes
+    assert _shape_bytes_list("f32[2,2]{1,0}") == [16]
+    assert _shape_bytes_list("foo[4]") == []
+    assert _shape_bytes("f32[]") == 4          # scalar
+
+
+# ---------------------------------------------------------------------------
+# replica_groups grammar
+# ---------------------------------------------------------------------------
+
+
+def test_replica_groups_explicit():
+    assert _parse_replica_groups(
+        "x, replica_groups={{0,1},{2,3}}, dims") == ((0, 1), (2, 3))
+
+
+def test_replica_groups_empty_is_all_devices():
+    assert _parse_replica_groups("x, replica_groups={}, y") == ()
+
+
+def test_replica_groups_iota():
+    assert _parse_replica_groups("replica_groups=[2,4]<=[8]") == (
+        (0, 1, 2, 3), (4, 5, 6, 7))
+
+
+def test_replica_groups_transposed_iota_unattributed():
+    # a transposed iota interleaves devices; parsing it as consecutive
+    # groups would attribute the op to the WRONG axis — None is correct
+    assert _parse_replica_groups("replica_groups=[4,2]<=[8]T(1,0)") is None
+
+
+def test_replica_groups_absent():
+    assert _parse_replica_groups("no groups here") is None
+
+
+# ---------------------------------------------------------------------------
+# byte attribution: result only, tuples, async pairs
+# ---------------------------------------------------------------------------
+
+
+def test_result_shape_only_operands_excluded():
+    text = _mod(
+        "ENTRY %main (x: f32[4]) -> f32[4,8] {\n"
+        "  ROOT %ag = f32[4,8]{1,0} all-gather(f32[1,2,4]{2,1,0} %x), "
+        "replica_groups={}, dimensions={0}\n"
+        "}")
+    rep = analyze_hlo(text)
+    assert rep.by_op() == {"all-gather": 4 * 8 * 4}
+    (op,) = rep.collectives
+    assert op.name == "ag" and op.replica_groups == ()
+
+
+def test_variadic_all_reduce_sums_tuple_elements():
+    text = _mod(
+        "ENTRY %main (a: f32[4], b: f32[8]) -> (f32[4], f32[8]) {\n"
+        "  ROOT %ar = (f32[4]{0}, f32[8]{0}) all-reduce(f32[4]{0} %a, "
+        "f32[8]{0} %b), replica_groups={}, to_apply=%add\n"
+        "}")
+    assert analyze_hlo(text).by_op() == {"all-reduce": 16 + 32}
+
+
+def test_async_pair_counted_once_groups_from_start():
+    # -start result tuple carries (operand, result); bytes must come from
+    # the -done result, and replica_groups from the -start line
+    text = _mod(
+        "ENTRY %main (x: f32[4]) -> f32[4,2] {\n"
+        "  %ags = (f32[4]{0}, f32[4,2]{1,0}) all-gather-start(f32[4]{0} %x), "
+        "replica_groups={{0,1}}, dimensions={0}\n"
+        "  ROOT %agd = f32[4,2]{1,0} all-gather-done((f32[4]{0}, "
+        "f32[4,2]{1,0}) %ags)\n"
+        "}")
+    rep = analyze_hlo(text)
+    assert rep.by_op() == {"all-gather": 4 * 2 * 4}
+    (op,) = rep.collectives
+    assert op.replica_groups == ((0, 1),)
+
+
+def test_orphan_start_counts_result_half_only():
+    # no -done in reach: fall back to the start's own result tuple, second
+    # element (the first is the operand buffer of gather-like starts)
+    text = _mod(
+        "ENTRY %main (x: f32[4]) -> f32[4,2] {\n"
+        "  %ags = (f32[4]{0}, f32[4,2]{1,0}) all-gather-start(f32[4]{0} %x), "
+        "replica_groups={}, dimensions={0}\n"
+        "}")
+    assert analyze_hlo(text).by_op() == {"all-gather": 4 * 2 * 4}
+
+
+def test_lhs_collective_name_is_not_a_use_site():
+    # an lhs like %all-gather.1 must not count as a second collective
+    text = _mod(
+        "ENTRY %main (x: f32[4]) -> f32[2,4] {\n"
+        "  ROOT %all-gather.1 = f32[2,4]{1,0} all-gather(f32[4]{0} %x), "
+        "replica_groups={}, dimensions={0}\n"
+        "}")
+    rep = analyze_hlo(text)
+    assert len(rep.collectives) == 1
+    assert rep.by_op() == {"all-gather": 2 * 4 * 4}
+
+
+# ---------------------------------------------------------------------------
+# loop multipliers + call graph
+# ---------------------------------------------------------------------------
+
+
+def test_known_trip_count_multiplies_body():
+    text = _mod(
+        "%body (p: (f32[8], s32[])) -> (f32[8], s32[]) {\n"
+        "  %ar = f32[8]{0} all-reduce(f32[8]{0} %v), replica_groups={}\n"
+        "}",
+        "ENTRY %main (x: f32[8]) -> f32[8] {\n"
+        "  %w = (f32[8], s32[]) while((f32[8], s32[]) %init), "
+        "condition=%cond, body=%body, "
+        'backend_config={"known_trip_count":{"n":"5"}}\n'
+        "}")
+    rep = analyze_hlo(text)
+    assert rep.by_op() == {"all-reduce": 32 * 5}
+    assert rep.unresolved_loops == 0
+    assert all(c.resolved for c in rep.collectives)
+
+
+def test_unresolved_loop_flagged_multiplier_one():
+    text = _mod(
+        "%body (p: (f32[8], s32[])) -> (f32[8], s32[]) {\n"
+        "  %ar = f32[8]{0} all-reduce(f32[8]{0} %v), replica_groups={}\n"
+        "}",
+        "ENTRY %main (x: f32[8]) -> f32[8] {\n"
+        "  %w = (f32[8], s32[]) while((f32[8], s32[]) %init), "
+        "condition=%cond, body=%body\n"
+        "}")
+    rep = analyze_hlo(text)
+    assert rep.unresolved_loops == 1
+    (op,) = rep.collectives
+    assert op.multiplier == 1 and not op.resolved
+    assert rep.by_op() == {"all-reduce": 32}
+
+
+def test_branch_computations_walked():
+    text = _mod(
+        "%true_b (p: f32[4]) -> f32[4] {\n"
+        "  %ar = f32[4]{0} all-reduce(f32[4]{0} %p), replica_groups={}\n"
+        "}",
+        "%false_b (p: f32[4]) -> f32[2,4] {\n"
+        "  %ag = f32[2,4]{1,0} all-gather(f32[4]{0} %p), replica_groups={}, "
+        "dimensions={0}\n"
+        "}",
+        "ENTRY %main (i: s32[], x: f32[4]) -> f32[4] {\n"
+        "  ROOT %c = f32[4]{0} conditional(s32[] %i, f32[4] %x, f32[4] %x), "
+        "branch_computations={%true_b, %false_b}\n"
+        "}")
+    assert analyze_hlo(text).by_op() == {"all-reduce": 16, "all-gather": 32}
+
+
+def test_rewalk_with_larger_multiplier_replaces_stale_entries():
+    # %inner is reached twice: directly (x1) and from a counted loop (x3);
+    # the larger multiplier must REPLACE the direct walk, not add to it
+    text = _mod(
+        "%inner (p: f32[4]) -> f32[4] {\n"
+        "  %ar = f32[4]{0} all-reduce(f32[4]{0} %p), replica_groups={}\n"
+        "}",
+        "%body (p: (f32[4], s32[])) -> (f32[4], s32[]) {\n"
+        "  %c = f32[4]{0} fusion(f32[4]{0} %p), kind=kLoop, calls=%inner\n"
+        "}",
+        "ENTRY %main (x: f32[4]) -> f32[4] {\n"
+        "  %direct = f32[4]{0} fusion(f32[4]{0} %x), kind=kLoop, "
+        "calls=%inner\n"
+        "  %w = (f32[4], s32[]) while((f32[4], s32[]) %init), "
+        "condition=%cond, body=%body, "
+        'backend_config={"known_trip_count":{"n":"3"}}\n'
+        "}")
+    rep = analyze_hlo(text)
+    ars = [c for c in rep.collectives if c.op == "all-reduce"]
+    assert len(ars) == 1
+    assert ars[0].multiplier == 3
+    assert rep.by_op() == {"all-reduce": 16 * 3}
+
+
+# ---------------------------------------------------------------------------
+# mesh-axis attribution
+# ---------------------------------------------------------------------------
+
+
+def test_attribute_axes_explicit_empty_and_none():
+    text = _mod(
+        "ENTRY %main (x: f32[4]) -> f32[4] {\n"
+        "  %a = f32[4]{0} all-reduce(f32[4]{0} %x), "
+        "replica_groups={{0,1},{2,3}}\n"
+        "  %b = f32[4]{0} all-reduce(f32[4]{0} %a), replica_groups={}\n"
+        "  %c = f32[4]{0} all-reduce(f32[4]{0} %b), "
+        "replica_groups=[2,2]<=[4]T(1,0)\n"
+        "}")
+    rep = analyze_hlo(text)
+    rep.attribute_axes({"x": ((0, 1), (2, 3)), "data": ((0, 1, 2, 3),)})
+    by_name = {c.name: c.mesh_axis for c in rep.collectives}
+    assert by_name == {"a": "x",        # explicit groups match axis "x"
+                       "b": "data",     # {} matches the single-group axis
+                       "c": None}       # transposed iota stays unattributed
+    assert rep.by_axis() == {"x": 16, "data": 16, "?": 16}
+
+
+def test_mesh_axis_groups_1d():
+    mesh = jax.sharding.Mesh(jax.devices(), ("data",))
+    assert mesh_axis_groups(mesh) == {"data": (tuple(range(NDEV)),)}
+
+
+@pytest.mark.skipif(NDEV < 2 or NDEV % 2, reason="needs an even device count")
+def test_mesh_axis_groups_2d():
+    import numpy as np
+
+    devs = np.asarray(jax.devices()).reshape(2, NDEV // 2)
+    groups = mesh_axis_groups(jax.sharding.Mesh(devs, ("a", "b")))
+    # axis "a" groups pair device ids stride NDEV//2 apart; axis "b" groups
+    # are the contiguous rows
+    assert groups["b"] == tuple(
+        tuple(range(i * (NDEV // 2), (i + 1) * (NDEV // 2)))
+        for i in range(2))
+    assert groups["a"] == tuple(
+        (i, i + NDEV // 2) for i in range(NDEV // 2))
