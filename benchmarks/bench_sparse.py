@@ -48,9 +48,22 @@ Three sections, all emitted to the CSV stream and to
    multi-device host (the forced-8 CI smoke job); skipped with a note on a
    single device.
 
+8. buffered-async throughput: the event-stream engine (``run_async``) vs
+   the synchronous barrier under a heavy-tailed log-normal delay
+   distribution with injected stragglers. Two kinds of numbers: honest
+   measured wall time per scanned event, and the seed-deterministic
+   *modeled* makespans from the compiled schedule — clients absorbed per
+   simulated time unit for both engines and their ratio (``sim_speedup``).
+   The modeled ratio is machine-independent, so ``check_regression`` pins
+   async > barrier directly against the committed baseline.
+
 ``REPRO_BENCH_SMOKE=1`` shrinks every section to seconds of runtime (tiny V,
 2 rounds, interpret-mode kernel) — the CI smoke job runs that on every PR so
 the pallas backend, the scan engine and the sharded engine stay exercised.
+
+Artifacts land under ``benchmarks/`` by default (``REPRO_BENCH_JSON`` /
+``REPRO_BENCH_TELEMETRY_JSONL`` override) so bench runs never litter the
+repo root.
 """
 from __future__ import annotations
 
@@ -66,7 +79,8 @@ from benchmarks.common import time_us
 from repro.configs import FedConfig
 from repro.core.aggregate import HeatSpec, correct_update_tree
 from repro.data.synthetic import make_sent140_like
-from repro.federated import FederatedTrainer
+from repro.federated import (ArrivalSim, BufferedAsyncServerUpdate,
+                             FederatedTrainer)
 from repro.kernels import ops, ref
 from repro.models.recsys import lstm_logits, lstm_loss, make_lstm_params
 from repro.sparse import RowSparse, aggregate_rowsparse, tree_wire_bytes
@@ -74,7 +88,9 @@ from repro.sparse import RowSparse, aggregate_rowsparse, tree_wire_bytes
 import functools
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
-JSON_PATH = os.environ.get("REPRO_BENCH_JSON", "BENCH_sparse_engine.json")
+_BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+JSON_PATH = os.environ.get(
+    "REPRO_BENCH_JSON", os.path.join(_BENCH_DIR, "BENCH_sparse_engine.json"))
 
 
 def _cohort(rng, k: int, v: int, r: int, d: int):
@@ -346,8 +362,9 @@ def _bench_telemetry(out, records):
         tr_off.run_round()
     us_off = (time.perf_counter() - t0) / n_rounds * 1e6
 
-    jsonl_path = os.environ.get("REPRO_BENCH_TELEMETRY_JSONL",
-                                "BENCH_telemetry.jsonl")
+    jsonl_path = os.environ.get(
+        "REPRO_BENCH_TELEMETRY_JSONL",
+        os.path.join(_BENCH_DIR, "BENCH_telemetry.jsonl"))
     with TraceSink(jsonl_path) as sink:
         tr_on = make_trainer(True, sink=sink)
         tr_on.run_round()                                # warmup/compile
@@ -442,6 +459,62 @@ def _bench_collectives(out, records):
                 failures=con.failures + drift.failures))
 
 
+def _bench_async(out, records):
+    """Section 8: buffered-async engine vs the barrier under heavy tails.
+
+    Heavy-tailed log-normal delays (sigma=1.5) with 10% injected 10x
+    stragglers — the regime where the barrier engine serialises on its
+    slowest client every round. ``us_per_event`` is honest measured wall
+    time for the jitted event scan; the clients-per-simulated-unit columns
+    come from the schedule's deterministic makespan model, so the async >
+    barrier claim is machine-independent and baseline-pinnable.
+    """
+    if SMOKE:
+        vocab, clients, kpr, n_rounds, mean_samples = 512, 16, 4, 4, 8
+    else:
+        vocab, clients, kpr, n_rounds, mean_samples = 65_536, 32, 8, 12, 25
+    ds = make_sent140_like(num_clients=clients, vocab=vocab,
+                           mean_samples=mean_samples, seq_len=24)
+    cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=kpr,
+                    local_iters=2, local_batch=4, lr=0.3,
+                    algorithm="fedsubavg", sparse=True)
+    tr = FederatedTrainer(
+        ds, functools.partial(make_lstm_params, ds.num_features,
+                              emb_dim=16, hidden=32, layers=1),
+        lstm_loss, cfg)
+    sim = ArrivalSim(num_rounds=n_rounds, delay="lognormal", delay_scale=0.5,
+                     lognormal_sigma=1.5, straggler_frac=0.1,
+                     straggler_factor=10.0, seed=0)
+    srv = BufferedAsyncServerUpdate(buffer_size=max(kpr // 2, 1),
+                                    staleness="polynomial", heat="ema")
+    sch = sim.compile(kpr, srv.buffer_size)
+
+    tr.run_async(sim, server=srv)                        # warmup/compile
+    t0 = time.perf_counter()
+    tr.run_async(sim, server=srv)
+    us_event = (time.perf_counter() - t0) / sch.num_events * 1e6
+
+    barrier, asynchronous = sch.barrier_makespan(), sch.async_makespan()
+    per_unit_barrier = sch.num_arrivals / barrier
+    per_unit_async = sch.num_arrivals / asynchronous
+    out.append(("sparse/async_event_scan", us_event,
+                f"V={vocab};K={kpr};M={srv.buffer_size};"
+                f"events={sch.num_events};fires={sch.num_fires}"))
+    out.append(("sparse/async_sim_speedup", sch.sim_speedup(),
+                f"barrier_makespan={barrier:.2f};"
+                f"async_makespan={asynchronous:.2f};"
+                f"clients_per_unit={per_unit_async:.3f}vs"
+                f"{per_unit_barrier:.3f}"))
+    records.append(dict(
+        section="async", v=vocab, k=kpr, rounds=n_rounds,
+        buffer=srv.buffer_size, events=sch.num_events, fires=sch.num_fires,
+        arrivals=sch.num_arrivals, us_per_event=us_event,
+        barrier_makespan=barrier, async_makespan=asynchronous,
+        clients_per_unit_barrier=per_unit_barrier,
+        clients_per_unit_async=per_unit_async,
+        sim_speedup=sch.sim_speedup()))
+
+
 def run():
     out = []
     records = []
@@ -456,6 +529,7 @@ def run():
     _bench_sharded(out, records)
     _bench_telemetry(out, records)
     _bench_collectives(out, records)
+    _bench_async(out, records)
 
     # Pallas kernel (dense-output TPU path) at a kernel-friendly shape
     k, d, total = (4, 8, 100.0) if SMOKE else (16, 64, 100.0)

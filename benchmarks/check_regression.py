@@ -34,6 +34,12 @@ are matched on their shape keys and a missing match fails the gate.
   (its own contract + drift verdict). Both runs must see the same forced
   device count, same as the sharded section.
 
+- async: the buffered-async section's ``sim_speedup`` (modeled barrier /
+  async makespan ratio) is seeded-schedule-deterministic, so the gate pins
+  the acceptance claim directly — async must absorb clients faster than the
+  barrier (``sim_speedup > 1``) under the heavy-tailed straggler schedule —
+  and compares the ratio against the baseline like the other sections.
+
 The telemetry section is validated on the FRESH run only (no baseline
 ratio): the record must carry the full counter schema, a trainer-derived
 run must report zero capacity drops (the trainer sizes ``sub_ids`` to fit,
@@ -54,6 +60,7 @@ import sys
 
 _UNION_KEY = ("v", "density", "k", "d")
 _ENGINE_KEY = ("v", "k", "rounds")
+_ASYNC_KEY = ("v", "k", "rounds", "buffer")
 _SHARDED_KEY = ("v", "k", "rounds", "ndev")
 _COLLECTIVES_KEY = ("mode", "combine", "v", "emb", "ndev")
 
@@ -95,7 +102,8 @@ def check(fresh: dict, baseline: dict, threshold: float):
     # section name instead (telemetry is fresh-only by design, not listed).
     fresh_sections = {r.get("section") for r in fresh.get("records", [])}
     base_sections = {r.get("section") for r in baseline.get("records", [])}
-    for section in ("union_backends", "engine", "sharded", "collectives"):
+    for section in ("union_backends", "engine", "sharded", "collectives",
+                    "async"):
         if section in fresh_sections and section not in base_sections:
             failures.append(
                 f"baseline has no '{section}' section but the fresh run "
@@ -187,6 +195,38 @@ def check(fresh: dict, baseline: dict, threshold: float):
                     f"collectives {key} {col} grew {bval} -> {fval} B "
                     f"(>{threshold:.0%}): a resharding or densified "
                     "combine crept into the lowering")
+
+    # async: the modeled makespans are schedule-deterministic (seeded sim,
+    # no wall clock involved), so the acceptance claim — async absorbs
+    # clients faster than the barrier under heavy-tailed delays with
+    # stragglers — is pinned directly, plus a ratio gate vs the baseline.
+    fresh_a = _index(fresh.get("records", []), "async", _ASYNC_KEY)
+    base_a = _index(baseline.get("records", []), "async", _ASYNC_KEY)
+    if not fresh_a:
+        failures.append("fresh run has no async records")
+    for key, frec in fresh_a.items():
+        fsp = frec.get("sim_speedup")
+        if not fsp or not fsp > 1.0:
+            failures.append(
+                f"async {key}: sim_speedup must exceed 1.0 under the "
+                f"heavy-tailed straggler schedule (got {fsp!r}) — the "
+                "buffered engine no longer beats the barrier")
+        if not frec.get("us_per_event", 0) > 0:
+            failures.append(f"async {key}: non-positive us_per_event")
+        if frec.get("fires", 0) < 1:
+            failures.append(f"async {key}: schedule produced no buffer "
+                            "fires — the section measured nothing")
+    for key, brec in base_a.items():
+        frec = fresh_a.get(key)
+        if frec is None:
+            failures.append(f"async record missing from fresh run: {key}")
+            continue
+        bsp, fsp = brec.get("sim_speedup"), frec.get("sim_speedup")
+        if bsp and fsp and fsp < bsp / (1.0 + threshold):
+            failures.append(
+                f"async {key} sim_speedup regressed {bsp:.2f}x -> "
+                f"{fsp:.2f}x (>{threshold:.0%}): the schedule model or the "
+                "sim defaults changed")
 
     failures.extend(check_telemetry(fresh))
     return failures

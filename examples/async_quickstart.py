@@ -1,0 +1,88 @@
+"""Async quickstart: buffered-async FedSubAvg under heavy-tailed client delays.
+
+The synchronous engine pays the barrier: every round waits for its slowest
+client, so a single 10x straggler stalls the whole cohort. The buffered-async
+engine dispatches waves at a fixed cadence and applies a staleness-weighted
+server update every ``buffer_size`` arrivals instead — stragglers land late
+(down-weighted by ``1/(1+s)^a``) and dropouts simply never land.
+
+Three runs on the same MovieLens-like task:
+
+1. synchronous FedSubAvg baseline (``run_rounds`` via ``run``),
+2. the degeneracy check — a zero-delay async run with ``buffer_size = K``
+   reproduces the synchronous losses (same math, same RNG stream),
+3. buffered-async under a lognormal delay model with stragglers + dropouts,
+   polynomial staleness weighting and streaming (EMA) heat, reporting the
+   modeled barrier-vs-async makespans.
+
+    PYTHONPATH=src python examples/async_quickstart.py
+    PYTHONPATH=src python examples/async_quickstart.py --rounds 6 --clients 40  # CI
+"""
+import argparse
+import functools
+
+from repro.configs import FedConfig
+from repro.data import make_movielens_like
+from repro.federated import (ArrivalSim, BufferedAsyncServerUpdate,
+                             FederatedTrainer, RoundPlan, RowSparseTransport,
+                             ServerUpdate, SubmodelReplicatedLocal)
+from repro.models.recsys import lr_loss, make_lr_params
+
+
+def make_trainer(ds):
+    cfg = FedConfig(num_clients=ds.num_clients, clients_per_round=8,
+                    local_iters=3, local_batch=5, lr=0.5,
+                    algorithm="fedsubavg")
+    plan = RoundPlan(SubmodelReplicatedLocal(),
+                     RowSparseTransport(),
+                     ServerUpdate("fedsubavg"))
+    mk = functools.partial(make_lr_params, ds.num_features)
+    return FederatedTrainer(ds, mk, lr_loss, cfg, plan=plan)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=80)
+    ap.add_argument("--items", type=int, default=60)
+    args = ap.parse_args()
+
+    ds = make_movielens_like(num_clients=args.clients, num_items=args.items,
+                             mean_samples=20)
+    print(f"dataset: {ds.stats()}")
+
+    # 1. synchronous barrier baseline (the in-jit scan engine)
+    tr = make_trainer(ds)
+    sync_losses = tr.run_rounds(args.rounds)
+    print(f"==> sync fedsubavg: final loss={sync_losses[-1]:.4f}")
+
+    # 2. the pinned degeneracy: zero delay + buffer_size=K == run_rounds
+    tr2 = make_trainer(ds)
+    zero = ArrivalSim(num_rounds=args.rounds, delay="zero", seed=0)
+    async_losses = tr2.run_async(zero)
+    drift = max(abs(a - b) for a, b in zip(sync_losses, async_losses))
+    print(f"==> zero-delay async (M=K): max |loss drift| vs sync = {drift:.2e}")
+    assert drift < 1e-5, "zero-delay degeneracy broke"
+
+    # 3. heavy-tailed delays + stragglers + dropouts, staleness-weighted
+    tr3 = make_trainer(ds)
+    sim = ArrivalSim(num_rounds=args.rounds, delay="lognormal",
+                     delay_scale=0.5, lognormal_sigma=1.5,
+                     straggler_frac=0.1, straggler_factor=10.0,
+                     dropout_frac=0.05, seed=0)
+    srv = BufferedAsyncServerUpdate(algorithm="fedsubavg",
+                                    buffer_size=4,
+                                    staleness="polynomial",
+                                    staleness_alpha=0.5,
+                                    heat="ema", heat_beta=0.05)
+    losses = tr3.run_async(sim, server=srv)
+    sch = sim.compile(tr3.cfg.clients_per_round, srv.buffer_size)
+    print(f"==> buffered-async fedsubavg: {len(losses)} fires, "
+          f"final loss={losses[-1]:.4f}")
+    print(f"    modeled makespan: barrier={sch.barrier_makespan():.1f} "
+          f"async={sch.async_makespan():.1f} "
+          f"(speedup {sch.sim_speedup():.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -61,6 +61,16 @@ __all__ = [
 # the server-side row update writes into the (V, D) table in place.
 _DEFAULT_ALLOWED = ("scatter-add", "scatter", "scatter-mul", "scatter-apply")
 
+# Structural (higher-order) primitives: their outputs only thread values
+# produced INSIDE their sub-jaxprs — which this walker descends into — so
+# counting the eqn output would double-report every legitimate pass-through
+# of the carried (V, D) table (e.g. the async engine's event scan carrying
+# the server params through cond branches). A genuine densification inside
+# a branch is still caught at its own producing equation.
+_STRUCTURAL = frozenset({"scan", "while", "cond", "pjit", "closed_call",
+                         "custom_jvp_call", "custom_vjp_call", "remat",
+                         "checkpoint"})
+
 
 @dataclass(frozen=True)
 class DenseIntermediate:
@@ -112,7 +122,7 @@ def _walk(jaxpr, dim0: int, min_ndim: int, allowed: frozenset,
           path: str, out: list) -> None:
     for eqn in jaxpr.eqns:
         prim = eqn.primitive.name
-        if prim not in allowed:
+        if prim not in allowed and prim not in _STRUCTURAL:
             for var in eqn.outvars:
                 aval = getattr(var, "aval", None)
                 shape = getattr(aval, "shape", ())

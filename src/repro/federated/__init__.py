@@ -1,3 +1,14 @@
+from repro.federated.arrivals import (  # noqa: F401
+    ArrivalSim,
+    EventSchedule,
+)
+from repro.federated.async_engine import (  # noqa: F401
+    AsyncEngine,
+    AsyncState,
+    BufferedAsyncServerUpdate,
+    build_async_engine,
+    staleness_weight,
+)
 from repro.federated.client import (  # noqa: F401
     cohort_submodel_deltas,
     make_local_trainer,
@@ -66,4 +77,12 @@ __all__ = [
     "heat_spec_from_axes",
     "round_capacity",
     "sparse_table_paths",
+    # buffered-async engine (event-stream rounds)
+    "ArrivalSim",
+    "EventSchedule",
+    "AsyncEngine",
+    "AsyncState",
+    "BufferedAsyncServerUpdate",
+    "build_async_engine",
+    "staleness_weight",
 ]

@@ -1,0 +1,535 @@
+"""Buffered-asynchronous federated engine on the sparse plane.
+
+FedBuff-style server semantics for the paper's protocol: instead of a
+barrier over a K-client cohort, the server absorbs per-client RowSparse
+deltas *as they arrive* into a bounded buffer and fires one
+staleness-weighted aggregate + apply every ``buffer_size`` arrivals. The
+whole run is a single in-jit ``lax.scan`` over the static event stream a
+:class:`~repro.federated.arrivals.ArrivalSim` compiled host-side:
+
+``DISPATCH`` event
+    Run the client's local training against the server's *current*
+    parameters (the honest asynchronous semantics — by the time the delta
+    arrives, the server may have moved on) and park the compressed delta in
+    the event's pre-assigned in-flight slot, together with its monitoring
+    loss and telemetry scalars. Slots are bounded by the schedule's maximum
+    overlap, and their RowSparse leaves keep the sparse plane's O(R·D)
+    memory — never O(V·D) per in-flight client.
+
+``ARRIVAL`` event
+    Move the slot's delta into the aggregation buffer at position
+    ``buf_count``, scaled by the pluggable staleness weight ``w(s)``
+    (constant, or polynomial ``1/(1+s)^a``); every ``buffer_size = M``-th
+    arrival additionally **fires**: the buffered stack goes through the
+    exact same fused ``sparse_cohort_aggregate`` scale path the synchronous
+    engine uses (cohort mean ``1/M`` + FedSubAvg heat correction ``N/n_m``
+    in one pass over the non-zeros) and the stateless ``X += eta * update``
+    apply advances the server one version.
+
+Heat under asynchrony: ``heat="static"`` feeds the exact per-feature counts
+(the synchronous contract, needed for the degeneracy pin); ``heat="ema"``
+replaces them with a streaming estimate — an exponential moving average over
+per-arrival feature indicators, clamped into ``[1, N]`` exactly like the
+randomized-response estimator — feeding the same correction factors.
+
+Degeneracy contract (pinned by tests/test_async.py): a zero-delay schedule
+with ``buffer_size == clients_per_round``, constant staleness weights and
+static heat replays the synchronous ``run_rounds`` engine event-for-event —
+same losses, same parameters, same RNG stream — because every wave becomes
+K dispatches at the same server version followed by K arrivals whose buffer
+is bitwise the synchronous cohort stack (the constant weight multiply is
+statically skipped).
+
+What deliberately does NOT compose (each rejection is pinned):
+``CohortSharding`` (the event stream is inherently sequential — each
+arrival may advance the server before the next dispatch, so there is no
+cohort axis to shard), ``DenseTransport`` (the bounded slot/buffer stores
+are the sparse plane's memory win), int8 transport (the per-round
+stochastic-rounding key stream has no per-event analogue yet), stateful
+server algorithms (scaffold/fedadam state is defined per barrier round) and
+``FedSgdLocal`` (one pooled gradient has no per-client arrival).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.core.algorithms import ServerState
+from repro.federated.client import (make_local_trainer,
+                                    make_submodel_local_trainer)
+from repro.federated.plan import (FedSgdLocal, ReplicatedLocal, RoundPlan,
+                                  SubmodelReplicatedLocal, _apply_plain,
+                                  heat_spec_from_axes, sparse_table_paths)
+from repro.federated.arrivals import DISPATCH
+from repro.sharding.logical import boxed_like, unbox
+from repro.sparse.aggregate import sparse_cohort_aggregate
+from repro.sparse.compress import compress_delta_tree
+from repro.sparse.encode import (encode_delta_tree, pin_labels,
+                                 sparse_eligible, tree_leaf_at)
+from repro.sparse.rowsparse import PAD_ID, RowSparse, is_rowsparse
+from repro.telemetry.round import (HEAT_BUCKETS, STALENESS_BUCKETS,
+                                   RoundTelemetry, drop_stats, heat_histogram,
+                                   staleness_histogram, tree_agg_rows,
+                                   tree_sq_sum)
+
+Array = jax.Array
+
+STALENESS_SCHEMES = ("constant", "polynomial")
+HEAT_MODES = ("static", "ema")
+#: stateless applies only: scaffold/fedadam server state is defined per
+#: barrier round and has no buffered-async analogue here
+ASYNC_ALGORITHMS = ("fedavg", "fedprox", "fedsubavg")
+
+
+def staleness_weight(staleness: Array, scheme: str = "polynomial",
+                     alpha: float = 0.5) -> Array:
+    """Pluggable staleness weight ``w(s)``.
+
+    ``constant``: ``w(s) = 1`` (zero-staleness weighting — the buffer fire
+    is then the uniform ``1/M`` mean, FedBuff's unnormalised form).
+    ``polynomial``: ``w(s) = 1 / (1 + s)^alpha`` — stale deltas are damped,
+    ``w(0) = 1`` always, so the two schemes agree on a fresh buffer.
+    """
+    s = jnp.asarray(staleness, jnp.float32)
+    if scheme == "constant":
+        return jnp.ones_like(s)
+    if scheme == "polynomial":
+        return (1.0 + s) ** (-float(alpha))
+    raise ValueError(f"unknown staleness scheme {scheme!r}: expected one of "
+                     f"{STALENESS_SCHEMES}")
+
+
+@dataclass(frozen=True)
+class BufferedAsyncServerUpdate:
+    """The buffered-async ServerUpdate slot of a :class:`RoundPlan`.
+
+    ``algorithm``: stateless applies only (fedavg / fedprox / fedsubavg);
+    the FedSubAvg heat correction is fused iff ``algorithm == "fedsubavg"``,
+    exactly as :class:`~repro.federated.plan.ServerUpdate`.
+    ``buffer_size``: arrivals per server apply (FedBuff's M).
+    ``staleness`` / ``staleness_alpha``: the weight ``w(s)`` applied to each
+    buffered delta (see :func:`staleness_weight`).
+    ``heat`` / ``heat_beta``: exact static counts vs the streaming EMA over
+    arrival indicators (``p <- (1 - beta) p + beta * 1[feature in arrival]``,
+    corrected counts ``clip(N * p, 1, N)``).
+    """
+
+    algorithm: str = "fedsubavg"
+    buffer_size: int = 8
+    staleness: str = "constant"
+    staleness_alpha: float = 0.5
+    heat: str = "static"
+    heat_beta: float = 0.05
+
+    def __post_init__(self):
+        if self.algorithm not in ASYNC_ALGORITHMS:
+            raise ValueError(
+                f"unknown/unsupported async server algorithm "
+                f"{self.algorithm!r}: the buffered-async engine supports the "
+                f"stateless applies {ASYNC_ALGORITHMS} (scaffold/fedadam "
+                "server state is defined per barrier round)")
+        if self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got "
+                             f"{self.buffer_size}")
+        if self.staleness not in STALENESS_SCHEMES:
+            raise ValueError(f"unknown staleness scheme {self.staleness!r}: "
+                             f"expected one of {STALENESS_SCHEMES}")
+        if self.staleness_alpha < 0.0:
+            raise ValueError(f"staleness_alpha must be >= 0, got "
+                             f"{self.staleness_alpha}")
+        if self.heat not in HEAT_MODES:
+            raise ValueError(f"unknown heat mode {self.heat!r}: expected one "
+                             f"of {HEAT_MODES}")
+        if not 0.0 < self.heat_beta <= 1.0:
+            raise ValueError(f"heat_beta out of (0, 1]: {self.heat_beta}")
+
+    @property
+    def correct(self) -> bool:
+        return self.algorithm == "fedsubavg"
+
+    @property
+    def stateless(self) -> bool:
+        return True
+
+
+class AsyncState(NamedTuple):
+    """Everything the event scan carries — and everything a mid-run
+    checkpoint needs: scanning ``events[:e]`` then ``events[e:]`` from a
+    saved/restored AsyncState is bit-identical to one uninterrupted scan.
+
+    ``slots``: the in-flight delta store (pytree; RowSparse leaves
+    ``(S, R)`` ids / ``(S, R, ...)`` rows, dense leaves ``(S, ...)``).
+    ``buffer``: the aggregation buffer (same layout with leading ``M``),
+    rows already staleness-weighted. The ``slot_*`` / ``buf_*`` scalars
+    carry each delta's monitoring loss and telemetry stats (zeros when
+    telemetry is off — one state structure either way). ``heat_ema`` is the
+    streaming heat estimate ``p`` in [0, 1] per feature (``None`` under
+    static heat).
+    """
+
+    server: ServerState
+    slots: Any
+    slot_loss: Array            # (S,) f32
+    slot_pre_sq: Array          # (S,) f32: pre-compression squared L2
+    slot_post_sq: Array         # (S,) f32
+    slot_drop: Array            # (S,) i32: capacity-dropped distinct ids
+    slot_mass: Array            # (S,) f32
+    buffer: Any
+    buf_loss: Array             # (M,) f32
+    buf_staleness: Array        # (M,) i32
+    buf_pre_sq: Array           # (M,) f32
+    buf_post_sq: Array          # (M,) f32
+    buf_drop: Array             # (M,) i32
+    buf_mass: Array             # (M,) f32
+    buf_count: Array            # () i32: filled buffer positions
+    heat_ema: Any               # (V,) f32 | None
+    arrivals: Array             # () i32: total arrivals absorbed
+
+
+class AsyncEngine(NamedTuple):
+    """A compiled buffered-async engine: ``init`` builds the scan state,
+    ``run`` is the jittable event loop, ``server`` echoes the plan slot."""
+
+    init: Callable
+    run: Callable
+    server: BufferedAsyncServerUpdate
+
+
+def build_async_engine(plan: RoundPlan, loss_fn: Callable,
+                       boxed_params_template, cfg: FedConfig, *,
+                       heat_counts: Optional[Dict] = None,
+                       total: Optional[float] = None,
+                       telemetry: bool = False) -> AsyncEngine:
+    """Compile a buffered-async plan into its event-scan engine.
+
+    ``plan.server`` must be a :class:`BufferedAsyncServerUpdate`; the local
+    step and transport are the unchanged RoundPlan strategies (replicated
+    locals on the RowSparse transport, optional top-k). ``heat_counts`` /
+    ``total`` bake the heat statistics exactly as ``build_round_step`` does;
+    ``heat="ema"`` uses them as the EMA warm start.
+
+    ``engine.run(state, events, tasks, sub_ids, feats=None)`` scans the
+    event columns (``EventSchedule.event_arrays()``) over the stacked task
+    data (leaves ``(T, I, B, ...)``) and per-task sub-ids ``(T, capacity)``;
+    ``feats`` is the raw ``(T, M)`` feature-id stack (telemetry drop stats
+    only). Returns ``(state, metrics)`` with per-event ``loss`` / ``fired``
+    / ``version`` / ``buf_fill`` columns (filter by the schedule's static
+    fire mask host-side) and, when ``telemetry``, a per-event stacked
+    :class:`RoundTelemetry` whose async fields are live.
+
+    ``engine.init(server_state, num_slots=..., capacity=...)`` builds the
+    :class:`AsyncState`; ``capacity`` is the (pre-top-k) sub-id capacity.
+    """
+    local, transport, server = plan.local, plan.transport, plan.server
+    if not isinstance(server, BufferedAsyncServerUpdate):
+        raise TypeError(
+            f"build_async_engine needs a BufferedAsyncServerUpdate server "
+            f"slot, got {type(server).__name__} — the synchronous "
+            "ServerUpdate compiles through build_round_step")
+    if plan.sharding is not None:
+        raise ValueError(
+            "CohortSharding does not compose with the buffered-async "
+            "engine: the event stream is inherently sequential (each "
+            "arrival may advance the server before the next dispatch), so "
+            "there is no cohort axis to shard — run the synchronous "
+            "engine on the mesh, or the async engine unsharded")
+    if not transport.sparse:
+        raise ValueError(
+            "the buffered-async engine runs the sparse plane only: the "
+            "bounded in-flight slot store is O(R*D) per client because "
+            "deltas stay RowSparse — use RowSparseTransport")
+    if transport.int8:
+        raise ValueError(
+            "int8 transport does not compose with the buffered-async "
+            "engine yet: the stochastic-rounding noise is keyed per "
+            "synchronous round and has no per-event stream that would "
+            "reproduce it")
+    if isinstance(local, FedSgdLocal):
+        raise ValueError(
+            "FedSgdLocal pools the cohort into one fused gradient — there "
+            "is no per-client delta to buffer; use ReplicatedLocal or "
+            "SubmodelReplicatedLocal")
+    if not isinstance(local, (ReplicatedLocal, SubmodelReplicatedLocal)):
+        raise TypeError(f"unknown LocalStep: {local!r}")
+    if plan.debug_checks:
+        raise ValueError(
+            "debug_checks (checkify) is not threaded through the async "
+            "event scan yet — build the plan with debug_checks=False")
+
+    feature_keys = tuple(plan.feature_keys)
+    heat_spec = heat_spec_from_axes(boxed_params_template)
+    paths = sparse_table_paths(heat_spec)
+    table_paths = [p for p, _ in paths]
+    if not table_paths:
+        raise ValueError("the buffered-async engine needs at least one "
+                         "axis-0 feature table (nothing rides the sparse "
+                         "plane otherwise)")
+    plain_template = unbox(boxed_params_template)
+    vocabs = sorted({int(tree_leaf_at(plain_template, p).shape[0])
+                     for p in table_paths})
+    vocab = vocabs[-1]
+    if isinstance(local, SubmodelReplicatedLocal) and len(vocabs) != 1:
+        raise ValueError(
+            f"submodel-replica feature tables disagree on vocab: {vocabs}")
+    heat_space = paths[0][1][0]
+    if server.heat == "ema":
+        spaces = {s[0] for _, s in paths}
+        if len(spaces) != 1 or len(vocabs) != 1:
+            raise ValueError(
+                "heat='ema' streams one indicator EMA over a single shared "
+                f"feature-id space; found spaces {sorted(spaces)} over "
+                f"vocabs {vocabs}")
+    if (server.correct or server.heat == "ema") and heat_counts is None:
+        raise ValueError(
+            "the FedSubAvg correction (and the EMA warm start) need baked "
+            "heat_counts — pass heat_counts/total as build_round_step does")
+    n_total = float(cfg.num_clients if total is None else total)
+    eta = cfg.server_lr
+    m_buf = int(server.buffer_size)
+    beta = float(server.heat_beta)
+    weighted = server.staleness != "constant"   # static skip: the constant
+    # weight multiplies by exactly 1.0, and skipping it keeps the zero-delay
+    # buffer bitwise identical to the synchronous cohort stack
+
+    # ---- per-client local delta + monitoring loss ------------------------
+    if isinstance(local, SubmodelReplicatedLocal):
+        local_train = make_submodel_local_trainer(
+            loss_fn, cfg, table_paths, feature_keys, prox_mu=local.prox_mu)
+
+        def client_delta(params, data, ids):
+            data = pin_labels(data, feature_keys[0])
+            delta = local_train(params, data, ids)
+            first = jax.tree.map(lambda x: x[0], data)
+            return delta, loss_fn(params, first)
+    else:
+        dense_train = make_local_trainer(loss_fn, cfg, prox_mu=local.prox_mu)
+
+        def client_delta(params, data, ids):
+            delta = encode_delta_tree(dense_train(params, data), heat_spec,
+                                      ids)
+            first = jax.tree.map(lambda x: x[0], data)
+            return delta, loss_fn(params, first)
+
+    # ---- bounded stores ---------------------------------------------------
+    def _store_template(n: int, cap: int):
+        def mk(leaf, space):
+            if sparse_eligible(space):
+                return RowSparse(
+                    jnp.full((n, cap), PAD_ID, jnp.int32),
+                    jnp.zeros((n, cap) + tuple(leaf.shape[1:]), leaf.dtype),
+                    int(leaf.shape[0]))
+            return jnp.zeros((n,) + tuple(leaf.shape), leaf.dtype)
+
+        return jax.tree.map(mk, plain_template, heat_spec.leaf_spaces,
+                            is_leaf=lambda x: x is None)
+
+    def _store(store, idx, val):
+        return jax.tree.map(lambda s, v: s.at[idx].set(v.astype(s.dtype)),
+                            store, val)
+
+    def _load(store, idx):
+        return jax.tree.map(lambda s: s[idx], store)
+
+    def _wscale(tree, w):
+        def f(leaf):
+            if is_rowsparse(leaf):
+                return RowSparse(leaf.ids,
+                                 leaf.rows * w.astype(leaf.rows.dtype),
+                                 leaf.num_rows)
+            return leaf * w.astype(leaf.dtype)
+
+        return jax.tree.map(f, tree, is_leaf=is_rowsparse)
+
+    # ---- streaming heat ---------------------------------------------------
+    def _ema_update(p, ids):
+        safe = jnp.where(ids >= 0, ids, vocab)
+        ind = jnp.zeros((vocab,), jnp.float32).at[safe].set(1.0, mode="drop")
+        return (1.0 - beta) * p + beta * ind
+
+    def _fire_counts(st) -> Dict:
+        if server.heat == "ema":
+            # clamp into [1, N], like clamp_heat_estimate: an EMA that
+            # decays a genuinely hot feature toward 0 must not hit the
+            # h > 0 gate and silently zero that row's update
+            return {heat_space: jnp.clip(st.heat_ema * n_total, 1.0,
+                                         n_total)}
+        return heat_counts if heat_counts is not None else {}
+
+    # ---- telemetry assembly ----------------------------------------------
+    def _tel_zero():
+        return RoundTelemetry(
+            dropped_ids=jnp.zeros((), jnp.int32),
+            dropped_mass=jnp.zeros((), jnp.float32),
+            dropped_per_client=jnp.zeros((m_buf,), jnp.int32),
+            union_size=jnp.zeros((), jnp.int32),
+            agg_rows=jnp.zeros((), jnp.int32),
+            shard_union_sizes=None,
+            delta_norm_pre=jnp.zeros((), jnp.float32),
+            delta_norm_post=jnp.zeros((), jnp.float32),
+            heat_hist=jnp.zeros((HEAT_BUCKETS,), jnp.float32),
+            density=jnp.zeros((), jnp.float32),
+            staleness_hist=jnp.zeros((STALENESS_BUCKETS,), jnp.float32),
+            buffer_occupancy=jnp.zeros((), jnp.int32))
+
+    def _tel_fire(st, agg, counts, inflight):
+        union = None
+        for leaf in jax.tree.leaves(agg, is_leaf=is_rowsparse):
+            if is_rowsparse(leaf):
+                union = leaf.ids
+                break
+        union_size = (union >= 0).sum(dtype=jnp.int32)
+        hv = counts.get(heat_space) if counts else None
+        hist = (heat_histogram(hv, union) if hv is not None
+                else jnp.zeros((HEAT_BUCKETS,), jnp.float32))
+        agg_rows = tree_agg_rows(agg)
+        return RoundTelemetry(
+            dropped_ids=st.buf_drop.sum(dtype=jnp.int32),
+            dropped_mass=st.buf_mass.sum(),
+            dropped_per_client=st.buf_drop,
+            union_size=union_size,
+            agg_rows=(agg_rows if agg_rows is not None
+                      else jnp.zeros((), jnp.int32)),
+            shard_union_sizes=None,
+            delta_norm_pre=jnp.sqrt(st.buf_pre_sq.sum()),
+            delta_norm_post=jnp.sqrt(st.buf_post_sq.sum()),
+            heat_hist=hist,
+            density=union_size.astype(jnp.float32) / vocab,
+            staleness_hist=staleness_histogram(st.buf_staleness),
+            buffer_occupancy=inflight.astype(jnp.int32))
+
+    def _ys(st, loss, fired, tel):
+        out = {"loss": loss, "fired": fired,
+               "version": st.server.rounds.astype(jnp.int32),
+               "buf_fill": st.buf_count}
+        if telemetry:
+            out["telemetry"] = tel
+        return out
+
+    zf = lambda: jnp.zeros((), jnp.float32)            # noqa: E731
+
+    # ---- init -------------------------------------------------------------
+    def init(server_state: ServerState, *, num_slots: int, capacity: int,
+             heat_ema=None) -> AsyncState:
+        slot_cap = (min(int(transport.topk), int(capacity))
+                    if transport.topk else int(capacity))
+        p = None
+        if server.heat == "ema":
+            if heat_ema is not None:
+                p = jnp.asarray(heat_ema, jnp.float32)
+            else:
+                p = jnp.clip(
+                    jnp.asarray(heat_counts[heat_space], jnp.float32)
+                    / n_total, 0.0, 1.0)
+        s, m = int(num_slots), m_buf
+        return AsyncState(
+            server=server_state._replace(
+                rounds=jnp.asarray(server_state.rounds, jnp.int32)),
+            slots=_store_template(s, slot_cap),
+            slot_loss=jnp.zeros((s,), jnp.float32),
+            slot_pre_sq=jnp.zeros((s,), jnp.float32),
+            slot_post_sq=jnp.zeros((s,), jnp.float32),
+            slot_drop=jnp.zeros((s,), jnp.int32),
+            slot_mass=jnp.zeros((s,), jnp.float32),
+            buffer=_store_template(m, slot_cap),
+            buf_loss=jnp.zeros((m,), jnp.float32),
+            buf_staleness=jnp.zeros((m,), jnp.int32),
+            buf_pre_sq=jnp.zeros((m,), jnp.float32),
+            buf_post_sq=jnp.zeros((m,), jnp.float32),
+            buf_drop=jnp.zeros((m,), jnp.int32),
+            buf_mass=jnp.zeros((m,), jnp.float32),
+            buf_count=jnp.zeros((), jnp.int32),
+            heat_ema=p,
+            arrivals=jnp.zeros((), jnp.int32))
+
+    # ---- the event scan ---------------------------------------------------
+    def run(state: AsyncState, events: Dict[str, Array], tasks: Dict,
+            sub_ids: Array, feats: Optional[Array] = None):
+        def event_step(st, ev):
+            task, slot = ev["task"], ev["slot"]
+            data = jax.tree.map(lambda x: x[task], tasks)
+            ids = sub_ids[task]
+
+            def do_dispatch(st):
+                delta, loss = client_delta(st.server.params, data, ids)
+                delta_c = (compress_delta_tree(delta, topk=transport.topk)
+                           if transport.topk else delta)
+                st = st._replace(
+                    slots=_store(st.slots, slot, delta_c),
+                    slot_loss=st.slot_loss.at[slot].set(loss))
+                if telemetry:
+                    if feats is not None:
+                        dr, ms = drop_stats(feats[task], ids, vocab)
+                    else:
+                        dr, ms = jnp.zeros((), jnp.int32), zf()
+                    st = st._replace(
+                        slot_pre_sq=st.slot_pre_sq.at[slot].set(
+                            tree_sq_sum(delta)),
+                        slot_post_sq=st.slot_post_sq.at[slot].set(
+                            tree_sq_sum(delta_c)),
+                        slot_drop=st.slot_drop.at[slot].set(
+                            dr.astype(jnp.int32)),
+                        slot_mass=st.slot_mass.at[slot].set(ms))
+                return st, _ys(st, zf(), jnp.zeros((), bool),
+                               _tel_zero() if telemetry else None)
+
+            def do_fire(st):
+                counts = _fire_counts(st)
+                agg = sparse_cohort_aggregate(
+                    st.buffer, heat_spec, counts, n_total, m_buf,
+                    correct=server.correct,
+                    union_backend=transport.union_backend)
+                plain = unbox(st.server.params)
+                new_plain = _apply_plain(plain, agg, eta)
+                srv = ServerState(
+                    boxed_like(new_plain, st.server.params),
+                    st.server.opt, st.server.rounds + 1)
+                loss = st.buf_loss.mean()
+                tel = (_tel_fire(st, agg, counts, ev["inflight"])
+                       if telemetry else None)
+                st = st._replace(server=srv,
+                                 buf_count=jnp.zeros((), jnp.int32))
+                return st, _ys(st, loss, jnp.ones((), bool), tel)
+
+            def no_fire(st):
+                return st, _ys(st, zf(), jnp.zeros((), bool),
+                               _tel_zero() if telemetry else None)
+
+            def do_arrival(st):
+                d = _load(st.slots, slot)
+                if weighted:
+                    d = _wscale(d, staleness_weight(
+                        ev["staleness"], server.staleness,
+                        server.staleness_alpha))
+                pos = st.buf_count
+                st = st._replace(
+                    buffer=_store(st.buffer, pos, d),
+                    buf_loss=st.buf_loss.at[pos].set(st.slot_loss[slot]),
+                    buf_staleness=st.buf_staleness.at[pos].set(
+                        ev["staleness"].astype(jnp.int32)),
+                    buf_count=pos + 1,
+                    arrivals=st.arrivals + 1)
+                if telemetry:
+                    st = st._replace(
+                        buf_pre_sq=st.buf_pre_sq.at[pos].set(
+                            st.slot_pre_sq[slot]),
+                        buf_post_sq=st.buf_post_sq.at[pos].set(
+                            st.slot_post_sq[slot]),
+                        buf_drop=st.buf_drop.at[pos].set(
+                            st.slot_drop[slot]),
+                        buf_mass=st.buf_mass.at[pos].set(
+                            st.slot_mass[slot]))
+                if server.heat == "ema":
+                    st = st._replace(heat_ema=_ema_update(st.heat_ema, ids))
+                return jax.lax.cond(ev["fire"], do_fire, no_fire, st)
+
+            return jax.lax.cond(ev["kind"] == DISPATCH, do_dispatch,
+                                do_arrival, st)
+
+        events = {k: jnp.asarray(v) for k, v in events.items()}
+        return jax.lax.scan(event_step, state, events)
+
+    return AsyncEngine(init=init, run=run, server=server)

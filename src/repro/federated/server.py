@@ -33,6 +33,9 @@ from repro.core.heat import (HeatStats, clamp_heat_estimate,
                              estimate_heat_randomized_response)
 from repro.data.batching import pooled_batches, sample_cohort_batch
 from repro.data.synthetic import FederatedDataset
+from repro.federated.arrivals import ArrivalSim
+from repro.federated.async_engine import (BufferedAsyncServerUpdate,
+                                          build_async_engine)
 from repro.federated.plan import (CohortSharding, RoundPlan,
                                   SubmodelReplicatedLocal, build_round_step,
                                   heat_spec_from_axes, plan_from_config,
@@ -185,6 +188,10 @@ class FederatedTrainer:
         self.telemetry_log: List[Dict[str, Any]] = []
         self._compiled_keys: set = set()      # jit-cache keys seen -> warm
         self._last_dispatch_compiled = False
+        # buffered-async engines, keyed by (server slot, telemetry flag);
+        # the streaming-heat EMA persists across run_async calls
+        self._async_engines: Dict[Any, Any] = {}
+        self._async_heat_ema = None
 
         if cfg.algorithm == "central":
             if plan is not None:
@@ -470,6 +477,94 @@ class FederatedTrainer:
             self._log_sparse_comm(valid_counts[r], capacity)
             self._record_telemetry(tel_events[r], self._rounds_run,
                                    comm=self.comm_log[-1])
+        return [float(l) for l in losses]
+
+    def run_async(self, sim: ArrivalSim,
+                  server: Optional[BufferedAsyncServerUpdate] = None
+                  ) -> List[float]:
+        """Drive a buffered-async run over ``sim``'s compiled event stream.
+
+        The trainer samples ``sim.num_rounds`` dispatch waves of K clients
+        from the SAME ``np_rng`` stream (and in the same order) as
+        ``run_rounds(sim.num_rounds)``, stacks them as per-task data, and
+        scans the :mod:`repro.federated.async_engine` event loop over the
+        schedule in one jitted dispatch. ``server`` overrides the async
+        server slot; by default the plan's algorithm runs with
+        ``buffer_size = K`` — which on a zero-delay sim makes this call
+        reproduce ``run_rounds`` losses/params/RNG exactly (the pinned
+        degeneracy).
+
+        Each buffer fire is one server version: it consumes one global round
+        number, one comm-log entry (priced over the M arrivals it
+        aggregated) and one telemetry event, exactly like a synchronous
+        round. Returns the per-fire buffered monitoring losses
+        (``sim`` arrivals that never complete a buffer are absorbed but not
+        applied, matching the engine).
+        """
+        if self.plan is None or not self._is_sparse:
+            raise ValueError("run_async needs a sparse federated plan "
+                             "(RowSparseTransport)")
+        if self.plan.sharding is not None:
+            raise ValueError(
+                "run_async does not compose with CohortSharding: the event "
+                "stream is inherently sequential — run the synchronous "
+                "engine on the mesh instead")
+        cfg = self.cfg
+        srv = (server if server is not None else BufferedAsyncServerUpdate(
+            algorithm=self.plan.server.algorithm,
+            buffer_size=cfg.clients_per_round))
+        key = (srv, self.telemetry_enabled)
+        if key not in self._async_engines:
+            plan = dataclasses.replace(self.plan, server=srv)
+            eng = build_async_engine(plan, self.loss_fn, self.state.params,
+                                     cfg, heat_counts=self._heat_counts,
+                                     total=self.heat.total,
+                                     telemetry=self.telemetry_enabled)
+            self._async_engines[key] = (eng, jax.jit(eng.run,
+                                                     donate_argnums=(0,)))
+        eng, run = self._async_engines[key]
+
+        k = cfg.clients_per_round
+        sch = sim.compile(k, srv.buffer_size)
+        cohorts, feats = [], []
+        for _ in range(sim.num_rounds):
+            c, f = self._sample_sparse_cohort()
+            cohorts.append(c)
+            feats.append(f)
+        tasks = {key_: jnp.asarray(np.concatenate(
+            [np.asarray(c[key_]) for c in cohorts], axis=0))
+            for key_ in cohorts[0]}
+        flat_feats = jnp.asarray(np.concatenate(feats, axis=0))
+        valid_counts = np.asarray(count_sub_ids(flat_feats,
+                                                self.ds.num_features))
+        capacity = pow2_capacity(int(valid_counts.max()))
+        sub_ids = derive_sub_ids(flat_feats, self.ds.num_features, capacity)
+
+        state0 = eng.init(self.state, num_slots=sch.num_slots,
+                          capacity=capacity,
+                          heat_ema=(self._async_heat_ema
+                                    if srv.heat == "ema" else None))
+        self._mark_dispatch(("async", srv, sch.num_events, capacity,
+                             sch.num_slots))
+        state, ys = run(state0, sch.event_arrays(), tasks, sub_ids,
+                        flat_feats if self.telemetry_enabled else None)
+        self.state = state.server
+        if srv.heat == "ema":
+            self._async_heat_ema = state.heat_ema
+        self._last_capacity = capacity
+
+        fired = np.flatnonzero(np.asarray(sch.fire))
+        losses = np.asarray(ys["loss"])[fired]
+        tel_events = (split_rounds(ys["telemetry"], sch.num_events)
+                      if "telemetry" in ys else None)
+        m = srv.buffer_size
+        for f in range(sch.num_fires):
+            self._rounds_run += 1
+            arrived = sch.arrival_tasks[f * m:(f + 1) * m]
+            self._log_sparse_comm(valid_counts[arrived], capacity)
+            self._record_telemetry(
+                tel_events[fired[f]] if tel_events else None,
+                self._rounds_run, comm=self.comm_log[-1])
         return [float(l) for l in losses]
 
     def _make_central_step(self):

@@ -26,6 +26,12 @@ ran, not a host-side re-derivation:
     ids — the paper's hot/cold dichotomy as a per-round metric.
 ``density``
     Effective table density this round: ``union_size / V``.
+``staleness_hist`` / ``buffer_occupancy``
+    Buffered-async engine only (:mod:`repro.federated.async_engine`): the
+    per-fire histogram of the aggregated arrivals' staleness (server
+    versions elapsed between a delta's dispatch and its arrival) and the
+    number of in-flight dispatched-but-unarrived deltas at the fire event.
+    ``None`` on every synchronous path (a barrier round has neither).
 
 Fields that do not apply to a given execution layout are ``None`` (an empty
 pytree subtree, so scan/vmap/shard_map handle them transparently); scalar
@@ -49,6 +55,10 @@ Array = jax.Array
 #: (bucket 0 also holds h <= 1); 16 buckets cover cohorts of 65k clients.
 HEAT_BUCKETS = 16
 
+#: linear staleness buckets: bucket s counts buffered arrivals that were
+#: dispatched s server versions ago (the last bucket absorbs the tail).
+STALENESS_BUCKETS = 16
+
 
 class RoundTelemetry(NamedTuple):
     """One round's in-jit counters (see module docstring for semantics)."""
@@ -63,6 +73,10 @@ class RoundTelemetry(NamedTuple):
     delta_norm_post: Any        # f32 scalar: L2 after top-k / int8
     heat_hist: Any              # (HEAT_BUCKETS,) f32 over touched union ids
     density: Any                # f32 scalar: union_size / V
+    # buffered-async fields (None on every synchronous path; defaulted so
+    # existing constructors stay source-compatible)
+    staleness_hist: Any = None  # (STALENESS_BUCKETS,) f32 | None: per fire
+    buffer_occupancy: Any = None  # i32 scalar | None: in-flight deltas at fire
 
 
 def valid_feature_ids(ids: Array, vocab: int) -> Array:
@@ -120,6 +134,20 @@ def heat_histogram(heat: Array, ids: Array,
     b = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(h, 1.0))), 0,
                  nbuckets - 1).astype(jnp.int32)
     b = jnp.where(ids >= 0, b, nbuckets)          # pads -> dropped
+    return jnp.zeros((nbuckets,), jnp.float32).at[b].add(1.0, mode="drop")
+
+
+def staleness_histogram(staleness: Array,
+                        nbuckets: int = STALENESS_BUCKETS) -> Array:
+    """Histogram of the buffered arrivals' staleness values.
+
+    ``staleness``: (M,) i32 server-versions-elapsed per buffered delta.
+    Bucket ``s`` counts deltas with staleness exactly ``s``; the last bucket
+    absorbs everything ``>= nbuckets - 1``. Negative entries (unused buffer
+    slots, if a caller ever passes a partial buffer) fall in no bucket.
+    """
+    s = jnp.asarray(staleness, jnp.int32)
+    b = jnp.where(s >= 0, jnp.minimum(s, nbuckets - 1), nbuckets)
     return jnp.zeros((nbuckets,), jnp.float32).at[b].add(1.0, mode="drop")
 
 

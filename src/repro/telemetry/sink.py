@@ -16,6 +16,24 @@ from typing import IO, Any, Dict, List, Optional
 logger = logging.getLogger("repro.telemetry")
 
 
+def _json_default(obj: Any):
+    """Coerce numpy / JAX leaves that ``json`` cannot serialise.
+
+    Device scalars and 0-d arrays become Python scalars via ``.item()``;
+    anything array-like with ``.tolist()`` (numpy arrays, device arrays)
+    becomes a nested list. Everything else keeps json's TypeError so junk
+    still fails loudly.
+    """
+    item = getattr(obj, "item", None)
+    if item is not None and getattr(obj, "ndim", None) == 0:
+        return item()
+    tolist = getattr(obj, "tolist", None)
+    if tolist is not None:
+        return tolist()
+    raise TypeError(f"Object of type {type(obj).__name__} is not JSON "
+                    "serializable")
+
+
 class TraceSink:
     """Collects structured round events; optionally persists them as JSONL.
 
@@ -37,7 +55,7 @@ class TraceSink:
     def emit(self, event: Dict[str, Any]) -> None:
         self.events.append(event)
         if self._fh is not None:
-            self._fh.write(json.dumps(event) + "\n")
+            self._fh.write(json.dumps(event, default=_json_default) + "\n")
             self._fh.flush()
 
     # -- human channel -----------------------------------------------------

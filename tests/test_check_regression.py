@@ -25,6 +25,11 @@ def _fresh():
              "overhead": 0.1, "dropped_ids": 0, "dropped_mass": 0.0,
              "mean_union_size": 12.0, "mean_density": 0.2,
              "jsonl_events": 8, "jsonl": "x.jsonl"},
+            {"section": "async", "v": 1024, "k": 4, "rounds": 8,
+             "buffer": 2, "events": 60, "fires": 15, "arrivals": 30,
+             "us_per_event": 500.0, "barrier_makespan": 40.0,
+             "async_makespan": 16.0, "clients_per_unit_barrier": 0.75,
+             "clients_per_unit_async": 1.875, "sim_speedup": 2.5},
         ],
     }
 
@@ -34,7 +39,7 @@ def test_matching_baseline_passes():
     assert check_regression.check(fresh, copy.deepcopy(fresh), 0.25) == []
 
 
-@pytest.mark.parametrize("section", ["union_backends", "engine"])
+@pytest.mark.parametrize("section", ["union_backends", "engine", "async"])
 def test_baseline_missing_section_fails_by_name(section):
     """The negative path: drop one whole section from the baseline. The
     gate must produce a failure naming that section (previously the
@@ -62,6 +67,32 @@ def test_baseline_missing_section_fresh_lacks_it_too_is_fine():
     # the only acceptable failure is the pre-existing "no union_backends
     # records" guard on the fresh run
     assert all("stale or truncated" not in f for f in failures)
+
+
+def test_async_speedup_must_beat_barrier():
+    """The acceptance pin: an async section whose modeled speedup does not
+    beat the barrier fails regardless of the baseline."""
+    fresh = _fresh()
+    for rec in fresh["records"]:
+        if rec["section"] == "async":
+            rec["sim_speedup"] = 0.9
+    failures = check_regression.check(fresh, copy.deepcopy(fresh), 0.25)
+    assert any("sim_speedup must exceed 1.0" in f for f in failures)
+
+
+def test_async_speedup_ratio_gated_against_baseline():
+    fresh = _fresh()
+    baseline = copy.deepcopy(fresh)
+    for rec in fresh["records"]:
+        if rec["section"] == "async":
+            rec["sim_speedup"] = 1.2      # > 1, but way below baseline 2.5
+    failures = check_regression.check(fresh, baseline, 0.25)
+    assert any("sim_speedup regressed" in f for f in failures)
+    # within the threshold: no ratio failure
+    for rec in fresh["records"]:
+        if rec["section"] == "async":
+            rec["sim_speedup"] = 2.3
+    assert check_regression.check(fresh, baseline, 0.25) == []
 
 
 def test_main_exit_codes(tmp_path):

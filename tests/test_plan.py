@@ -492,6 +492,8 @@ def test_federated_public_api_surface():
         "make_local_trainer", "make_submodel_local_trainer", "RoundRecord",
         "comm_summary", "count_sub_ids", "derive_sub_ids", "pow2_capacity",
         "heat_spec_from_axes", "round_capacity", "sparse_table_paths",
+        "ArrivalSim", "EventSchedule", "AsyncEngine", "AsyncState",
+        "BufferedAsyncServerUpdate", "build_async_engine", "staleness_weight",
     ])
     for name in fed.__all__:
         assert getattr(fed, name) is not None

@@ -172,6 +172,31 @@ def test_trace_sink_jsonl_roundtrip(tmp_path):
     assert events[0]["union_size"] == 7
 
 
+def test_trace_sink_json_safe_for_device_scalars(tmp_path):
+    """Satellite pin: emitting a telemetry dict whose leaves are jnp / numpy
+    scalars and 0-d arrays must write valid JSON (coerced via the default=
+    serializer) and round-trip through read_events as plain Python."""
+    path = tmp_path / "trace.jsonl"
+    with TraceSink(str(path)) as sink:
+        sink.emit({"event": "round", "round": jnp.asarray(3, jnp.int32),
+                   "loss": jnp.float32(0.25),
+                   "density": np.float64(0.5),
+                   "union": np.asarray(7),                 # 0-d ndarray
+                   "hist": jnp.arange(3, dtype=jnp.float32),
+                   "nested": {"occupancy": jnp.asarray(2)}})
+    (event,) = read_events(str(path))
+    assert event["round"] == 3 and isinstance(event["round"], int)
+    assert event["loss"] == pytest.approx(0.25)
+    assert event["density"] == pytest.approx(0.5)
+    assert event["union"] == 7
+    assert event["hist"] == [0.0, 1.0, 2.0]
+    assert event["nested"]["occupancy"] == 2
+    # genuinely unserialisable junk still fails loudly
+    with pytest.raises(TypeError):
+        with TraceSink(str(tmp_path / "bad.jsonl")) as sink:
+            sink.emit({"event": "round", "obj": object()})
+
+
 def test_trace_sink_report_goes_through_logging(caplog):
     sink = TraceSink()
     with caplog.at_level(logging.INFO, logger="repro.telemetry"):
