@@ -57,6 +57,17 @@ Three sections, all emitted to the CSV stream and to
    The modeled ratio is machine-independent, so ``check_regression`` pins
    async > barrier directly against the committed baseline.
 
+9. kernel roofline: achieved vs analytic bandwidth per union backend. The
+   analytic bytes come from the kernel-contract plane — the pallas column is
+   ``repro.analysis.kernel_audit.cost_model`` run on the ``pallas_call``
+   captured out of the traced aggregate at the bench shape (so operand
+   re-streaming, e.g. the heat table refetched per vocab block, is priced
+   in), the jnp columns are documented closed forms over the same shapes.
+   Analytic bytes/FLOPs are static-shape-deterministic, so
+   ``check_regression`` pins them against the baseline directly (growth =
+   re-streaming or a densified path crept in); achieved GB/s is honest
+   measured wall time and stays machine-local (fresh-run sanity only).
+
 ``REPRO_BENCH_SMOKE=1`` shrinks every section to seconds of runtime (tiny V,
 2 rounds, interpret-mode kernel) — the CI smoke job runs that on every PR so
 the pallas backend, the scan engine and the sharded engine stay exercised.
@@ -515,6 +526,93 @@ def _bench_async(out, records):
         sim_speedup=sch.sim_speedup()))
 
 
+def _ceil_log2(x: int) -> int:
+    return max(int(x) - 1, 1).bit_length()
+
+
+def _bench_kernel_roofline(rng, out, records):
+    """Section 9: analytic bytes/FLOPs vs achieved bandwidth per backend.
+
+    One record per (shape, union backend). ``analytic_bytes`` for the pallas
+    backend is the kernel-audit cost model evaluated on the ``pallas_call``
+    captured from the traced aggregate (re-streaming priced in via the grid
+    x BlockSpec fetch counts); the jnp backends get closed forms: the
+    payload movement every backend pays (stream ids + rows in, gather heat
+    at the union, write the union out) plus the backend's union-structure
+    cost — bitmap: mark/cumsum/nonzero passes over the (V,) bitmap plus the
+    rank gather; sort: ~log2(T) read+write key passes plus the
+    binary-search remap. Achieved GB/s divides the analytic bytes by
+    measured wall time; off-TPU at full shapes the pallas interpreter would
+    crawl, so that cell is analytic-only (``us`` absent, nothing silently
+    dropped).
+    """
+    from repro.analysis import kernel_audit
+    from repro.common.hw import HW
+
+    on_tpu = jax.default_backend() == "tpu"
+    k, d, total = (4, 8, 100.0) if SMOKE else (16, 64, 100.0)
+    vs = (512,) if SMOKE else (65_536,)
+    densities = (0.10,) if SMOKE else (0.01, 0.10)
+    for v in vs:
+        for density in densities:
+            r = max(int(v * density), 1)
+            ids, rows, heat = _cohort(rng, k, v, r, d)
+            stacked = RowSparse(ids, rows, v)
+            t = k * r
+            cap = min(v, t)
+            payload = (t + t * d) * 4 + cap * 4 + (cap + cap * d) * 4
+            payload_flops = float(t * d + 2 * cap * d)
+            analytic = {
+                # (V,) bool mark written then read twice (cumsum, bounded
+                # nonzero), (V,) i32 rank written, (T,) i32 rank gather
+                "bitmap": payload + v * (1 + 2 + 4) + t * 4,
+                # ~log2(T) read+write passes over the (T,) i32 keys, then a
+                # log2(cap) binary-search remap per element
+                "sort": payload + (2 * _ceil_log2(t) + _ceil_log2(cap)) * t * 4,
+            }
+            flops = {
+                "bitmap": payload_flops + float(v),
+                "sort": payload_flops + float(t * _ceil_log2(t)),
+            }
+            restream = {}
+            caps = kernel_audit.capture_pallas_calls(
+                lambda s: aggregate_rowsparse(s, heat, total, 1.0 / k,
+                                              union_backend="pallas"),
+                stacked)
+            cost = kernel_audit.cost_model(caps[0], kernel="union_segsum")
+            analytic["pallas"] = cost.bytes_touched
+            flops["pallas"] = cost.flops
+            restream["pallas"] = max(
+                op["restream"] for op in cost.per_operand.values())
+
+            for backend in ("sort", "bitmap", "pallas"):
+                rec = dict(section="kernel_roofline", v=v, density=density,
+                           k=k, d=d, backend=backend,
+                           analytic_bytes=int(analytic[backend]),
+                           analytic_flops=flops[backend],
+                           intensity=flops[backend] / analytic[backend],
+                           restream=restream.get(backend, 1.0))
+                timed = backend != "pallas" or on_tpu or SMOKE
+                tail = ""
+                if timed:
+                    fn = jax.jit(lambda s, _b=backend: aggregate_rowsparse(
+                        s, heat, total, 1.0 / k, union_backend=_b))
+                    us = time_us(fn, stacked, iters=3)
+                    achieved = analytic[backend] / (us * 1e-6)
+                    rec.update(us=us, achieved_gbps=achieved / 1e9,
+                               hbm_frac=achieved / HW["hbm_bandwidth"])
+                    tail = (f";achieved_GBps={achieved / 1e9:.2f}"
+                            f";hbm_frac={achieved / HW['hbm_bandwidth']:.4f}")
+                else:
+                    rec["analytic_only"] = True
+                    tail = ";note=analytic_only_off_tpu"
+                out.append((f"sparse/roofline_{backend}", rec.get("us", 0.0),
+                            f"V={v};density={density};K={k};D={d};"
+                            f"analytic_B={rec['analytic_bytes']};"
+                            f"restream={rec['restream']:.1f}x" + tail))
+                records.append(rec)
+
+
 def run():
     out = []
     records = []
@@ -530,6 +628,7 @@ def run():
     _bench_telemetry(out, records)
     _bench_collectives(out, records)
     _bench_async(out, records)
+    _bench_kernel_roofline(rng, out, records)
 
     # Pallas kernel (dense-output TPU path) at a kernel-friendly shape
     k, d, total = (4, 8, 100.0) if SMOKE else (16, 64, 100.0)

@@ -40,6 +40,14 @@ are matched on their shape keys and a missing match fails the gate.
   barrier (``sim_speedup > 1``) under the heavy-tailed straggler schedule —
   and compares the ratio against the baseline like the other sections.
 
+- kernel_roofline: the per-backend analytic bytes/FLOPs (section 9) come
+  from static shapes — the kernel-audit cost model for the pallas backend,
+  closed forms for the jnp backends — so they compare directly: fresh
+  analytic bytes (or the pallas max-restream factor) exceeding the
+  baseline's by more than the threshold means operand re-streaming or a
+  densified path crept into the aggregation. Achieved GB/s is wall-clock
+  and machine-local, so it is sanity-checked on the fresh run only.
+
 The telemetry section is validated on the FRESH run only (no baseline
 ratio): the record must carry the full counter schema, a trainer-derived
 run must report zero capacity drops (the trainer sizes ``sub_ids`` to fit,
@@ -63,6 +71,7 @@ _ENGINE_KEY = ("v", "k", "rounds")
 _ASYNC_KEY = ("v", "k", "rounds", "buffer")
 _SHARDED_KEY = ("v", "k", "rounds", "ndev")
 _COLLECTIVES_KEY = ("mode", "combine", "v", "emb", "ndev")
+_ROOFLINE_KEY = ("v", "density", "k", "d", "backend")
 
 #: byte columns of a collectives record the gate pins against the baseline
 _COLLECTIVES_BYTES = ("all_reduce_bytes", "all_gather_bytes")
@@ -103,7 +112,7 @@ def check(fresh: dict, baseline: dict, threshold: float):
     fresh_sections = {r.get("section") for r in fresh.get("records", [])}
     base_sections = {r.get("section") for r in baseline.get("records", [])}
     for section in ("union_backends", "engine", "sharded", "collectives",
-                    "async"):
+                    "async", "kernel_roofline"):
         if section in fresh_sections and section not in base_sections:
             failures.append(
                 f"baseline has no '{section}' section but the fresh run "
@@ -227,6 +236,45 @@ def check(fresh: dict, baseline: dict, threshold: float):
                 f"async {key} sim_speedup regressed {bsp:.2f}x -> "
                 f"{fsp:.2f}x (>{threshold:.0%}): the schedule model or the "
                 "sim defaults changed")
+
+    # kernel_roofline: analytic bytes/FLOPs are static-shape-deterministic
+    # (cost model for pallas, closed forms for the jnp backends) — growth
+    # means operand re-streaming or a densified path crept in. Achieved
+    # bandwidth is machine-local: fresh-run sanity only.
+    fresh_r = _index(fresh.get("records", []), "kernel_roofline",
+                     _ROOFLINE_KEY)
+    base_r = _index(baseline.get("records", []), "kernel_roofline",
+                    _ROOFLINE_KEY)
+    if not fresh_r:
+        failures.append("fresh run has no kernel_roofline records")
+    for key, frec in fresh_r.items():
+        if not frec.get("analytic_bytes", 0) > 0:
+            failures.append(f"kernel_roofline {key}: non-positive "
+                            f"analytic_bytes ({frec.get('analytic_bytes')!r})")
+        if not frec.get("analytic_only") and not frec.get(
+                "achieved_gbps", 0) > 0:
+            failures.append(f"kernel_roofline {key}: timed record with "
+                            "non-positive achieved_gbps")
+    for key, brec in base_r.items():
+        frec = fresh_r.get(key)
+        if frec is None:
+            failures.append(f"kernel_roofline record missing from fresh "
+                            f"run: {key}")
+            continue
+        bval, fval = brec.get("analytic_bytes", 0), frec.get(
+            "analytic_bytes", 0)
+        if bval and fval > bval * (1.0 + threshold):
+            failures.append(
+                f"kernel_roofline {key} analytic_bytes grew {bval} -> "
+                f"{fval} B (>{threshold:.0%}): operand re-streaming or a "
+                "densified path crept into the aggregation")
+        brs, frs = brec.get("restream", 0.0), frec.get("restream", 0.0)
+        if brs and frs > brs * (1.0 + threshold):
+            failures.append(
+                f"kernel_roofline {key} max restream grew {brs:.1f}x -> "
+                f"{frs:.1f}x (>{threshold:.0%}): an operand is streamed "
+                "through VMEM more often per invocation than the baseline "
+                "kernel")
 
     failures.extend(check_telemetry(fresh))
     return failures

@@ -29,8 +29,8 @@ import os
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+from repro.common.hw import HW
 from repro.configs import SHAPES, get_config
-from repro.launch.mesh import HW
 
 
 def analytic_flops(cfg, shape_name: str) -> Dict[str, float]:

@@ -1,6 +1,6 @@
 """repro.analysis: correctness tooling for the jitted federated round path.
 
-Four layers, each machine-checking a bug class this repo has actually
+Five layers, each machine-checking a bug class this repo has actually
 shipped (see DESIGN.md "Static analysis & sanitizer" for the rule table):
 
 ``repro.analysis.lint``
@@ -25,13 +25,21 @@ shipped (see DESIGN.md "Static analysis & sanitizer" for the rule table):
     optimized HLO actually moves:
     ``python -m repro.analysis.hlo_audit --json contract-report.json``.
 
+``repro.analysis.kernel_audit``
+    Kernel contract plane: static Pallas VMEM/race/cost auditor over every
+    ``pallas_call`` in ``repro.kernels`` — VMEM budget + guard-drift
+    contract, Megacore grid-semantics race detector, and the analytic
+    bytes/FLOPs cost model behind ``bench_sparse``'s kernel roofline:
+    ``python -m repro.analysis.kernel_audit --json kernel-audit.json``.
+
 Submodules are imported lazily: ``lint`` must stay importable in an
 environment without jax, so this package must not pull the jax-dependent
 layers at import time.
 """
 from __future__ import annotations
 
-_SUBMODULES = ("lint", "jaxpr_audit", "sanitize", "hlo_audit")
+_SUBMODULES = ("lint", "jaxpr_audit", "sanitize", "hlo_audit",
+               "kernel_audit")
 
 __all__ = list(_SUBMODULES)
 

@@ -27,6 +27,13 @@ Rules
     kernel that carries state across a grid dimension under Megacore
     partitioning (the union_segsum SMEM-carry bug class).
 
+``pallas-blockspec-misaligned``
+    A ``pl.BlockSpec`` whose literal block shape has a trailing dim pair
+    that is not a multiple of the TPU (8, 128) tile (size-1 dims exempt):
+    Mosaic pads or re-lays-out misaligned windows, silently wasting VMEM
+    and bandwidth. Computed block picks (``_block_sizes`` helpers) are
+    exempt — the kernel-audit plane checks those against the guards.
+
 ``data-dep-shape``
     ``jnp.unique`` / ``jnp.nonzero`` / ``jnp.flatnonzero`` / ``jnp.argwhere``
     without ``size=`` (or one-argument ``jnp.where``) in a traced context:
@@ -104,6 +111,8 @@ RULES: Dict[str, str] = {
                              "parameter",
     "pallas-dim-semantics": "pl.pallas_call without explicit "
                             "dimension_semantics (compiler_params)",
+    "pallas-blockspec-misaligned": "pl.BlockSpec literal block shape with "
+                                   "trailing dims off the (8, 128) TPU tile",
     "data-dep-shape": "data-dependent output shape (jnp.unique/nonzero/... "
                       "without size=) under jit",
     "donated-reuse": "donated buffer re-referenced after the donating call",
@@ -642,6 +651,49 @@ def _check_pallas_semantics(tree: ast.Module, index: _ModuleIndex, path: str,
                     "dimension_semantics: pass them explicitly per grid"))
 
 
+def _check_blockspec_alignment(tree: ast.Module, path: str,
+                               out: List[Violation]) -> None:
+    """pallas-blockspec-misaligned: literal block shapes off the TPU tile.
+
+    Only ALL-literal shapes are judged — a computed dim (``v_blk``, ``hd``)
+    means the block pick flows through a ``_block_sizes`` helper, which the
+    kernel-audit plane pins against the kernel's guard instead. Size-1 dims
+    are exempt: squeezed / leading axes are laid out for free.
+    """
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _name_tail(node.func) == "BlockSpec"):
+            continue
+        shape_node = node.args[0] if node.args else None
+        if shape_node is None:
+            for kw in node.keywords:
+                if kw.arg == "block_shape":
+                    shape_node = kw.value
+        if not isinstance(shape_node, (ast.Tuple, ast.List)):
+            continue
+        elts = shape_node.elts
+        if not elts or not all(isinstance(e, ast.Constant)
+                               and isinstance(e.value, int)
+                               for e in elts):
+            continue
+        dims = [e.value for e in elts]
+        bad: List[str] = []
+        last = dims[-1]
+        if last != 1 and last % 128 != 0:
+            bad.append(f"lane dim {last} is not a multiple of 128")
+        if len(dims) >= 2:
+            sub = dims[-2]
+            if sub != 1 and sub % 8 != 0:
+                bad.append(f"sublane dim {sub} is not a multiple of 8")
+        if bad:
+            out.append(Violation(
+                "pallas-blockspec-misaligned", path, node.lineno,
+                node.col_offset,
+                f"pl.BlockSpec block shape {tuple(dims)}: "
+                f"{'; '.join(bad)} — TPU tiles are (8, 128), so Mosaic "
+                "pads/re-lays-out this window, wasting VMEM and bandwidth"))
+
+
 def _static_argnames_values(call: ast.Call) -> List[Tuple[str, ast.AST]]:
     for kw in call.keywords:
         if kw.arg != "static_argnames":
@@ -980,6 +1032,7 @@ def lint_source(source: str, path: str):
             _check_traced_coercions(info, index, path, raw)
             _check_data_dep_shapes(info, path, raw)
     _check_pallas_semantics(tree, index, path, raw)
+    _check_blockspec_alignment(tree, path, raw)
     _check_static_argnames(tree, index, path, raw)
     _check_donated_reuse(tree, index, path, raw)
     _check_shard_hygiene(tree, index, path, raw)

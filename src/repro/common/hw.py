@@ -1,0 +1,22 @@
+"""Single source of the target-hardware constants (TPU v5e per chip/core).
+
+Every analytic performance model in the repo reads THIS dict — the LLM
+roofline (``benchmarks/roofline.py``), the mesh/dry-run plane
+(``repro.launch.mesh`` re-exports it unchanged), and the kernel cost model
+(``repro.analysis.kernel_audit``). Two models quoting different peak
+numbers would make their "fraction of roofline" columns incomparable, so
+the constants live in exactly one place and a test pins every consumer to
+the same object.
+"""
+from __future__ import annotations
+
+HW = {
+    # TPU v5e per-chip constants used by the roofline analyses
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bandwidth": 819e9,        # B/s
+    "ici_bandwidth": 50e9,         # B/s per link
+    "hbm_bytes": 16 * 2**30,
+    # per-core VMEM capacity; kernels budget against a fraction of this
+    # (pipeline buffers + compiler scratch need headroom)
+    "vmem_bytes": 16 * 1024 * 1024,
+}

@@ -20,9 +20,41 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.heat_scatter import _tpu_compiler_params
+from repro.kernels.heat_scatter import VMEM_BUDGET, _tpu_compiler_params
 
 NEG_INF = -1e30
+
+
+def _block_sizes(sq, sk, blk_q: int, blk_k: int):
+    """The (blk_q, blk_k) the kernel actually runs with — the single source
+    of the block clamps, shared by ``flash_attention``, its ``fits_vmem``
+    guard, and the static auditor so they cannot drift."""
+    if sq is not None:
+        blk_q = min(blk_q, sq)
+    if sk is not None:
+        blk_k = min(blk_k, sk)
+    return blk_q, blk_k
+
+
+def vmem_footprint(hd: int, *, sq: int | None = None, sk: int | None = None,
+                   blk_q: int = 512, blk_k: int = 512) -> int:
+    """Analytic per-program VMEM bytes for ``flash_attention``.
+
+    Double-buffered pipeline blocks (q, k, v in; o out), the (m, l, acc)
+    scratch, and the two (blk_q, blk_k) f32 score/prob temporaries.
+    """
+    blk_q, blk_k = _block_sizes(sq, sk, blk_q, blk_k)
+    blocks = 2 * (blk_q * hd + 2 * blk_k * hd + blk_q * hd) * 4
+    scratch = (2 * blk_q + blk_q * hd) * 4
+    scores = 2 * blk_q * blk_k * 4
+    return blocks + scratch + scores
+
+
+def fits_vmem(hd: int, *, sq: int | None = None, sk: int | None = None,
+              blk_q: int = 512, blk_k: int = 512,
+              budget: int = VMEM_BUDGET) -> bool:
+    """Whether ``flash_attention``'s working set fits the compiled budget."""
+    return vmem_footprint(hd, sq=sq, sk=sk, blk_q=blk_q, blk_k=blk_k) <= budget
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
@@ -71,8 +103,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     b, sq, h, hd = q.shape
     _, sk, kvh, _ = k.shape
     groups = h // kvh
-    blk_q = min(blk_q, sq)
-    blk_k = min(blk_k, sk)
+    blk_q, blk_k = _block_sizes(sq, sk, blk_q, blk_k)
     assert sq % blk_q == 0 and sk % blk_k == 0
     nq, nk = sq // blk_q, sk // blk_k
     scale = 1.0 / float(hd) ** 0.5

@@ -17,9 +17,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.heat_scatter import _tpu_compiler_params
+from repro.kernels.heat_scatter import VMEM_BUDGET, _tpu_compiler_params
 
 NEG_INF = -1e30
+
+
+def _block_sizes(s, blk_s: int):
+    """The blk_s the kernel actually runs with — the single source of the
+    block clamp, shared by ``flash_decode``, its ``fits_vmem`` guard, and
+    the static auditor so they cannot drift."""
+    if s is not None:
+        blk_s = min(blk_s, s)
+    return blk_s
+
+
+def vmem_footprint(hd: int, *, s: int | None = None, blk_s: int = 1024) -> int:
+    """Analytic per-program VMEM bytes for ``flash_decode``.
+
+    Double-buffered pipeline blocks (qpos, q, k, v, positions in; o out),
+    the (m, l, acc) scratch, and the (1, blk_s) f32 score/prob temporaries.
+    """
+    blk_s = _block_sizes(s, blk_s)
+    blocks = 2 * (1 + hd + 2 * blk_s * hd + blk_s + hd) * 4
+    scratch = (2 + hd) * 4
+    scores = 2 * blk_s * 4
+    return blocks + scratch + scores
+
+
+def fits_vmem(hd: int, *, s: int | None = None, blk_s: int = 1024,
+              budget: int = VMEM_BUDGET) -> bool:
+    """Whether ``flash_decode``'s working set fits the compiled budget."""
+    return vmem_footprint(hd, s=s, blk_s=blk_s) <= budget
 
 
 def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref, m_scr, l_scr, acc_scr, *,
@@ -63,7 +91,7 @@ def flash_decode(q, k_cache, v_cache, k_positions, q_position, *, window: int = 
     b, h, hd = q.shape
     _, kvh, s, _ = k_cache.shape
     groups = h // kvh
-    blk_s = min(blk_s, s)
+    blk_s = _block_sizes(s, blk_s)
     assert s % blk_s == 0
     ns = s // blk_s
     scale = 1.0 / float(hd) ** 0.5

@@ -32,8 +32,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.common.hw import HW
+
 DEFAULT_V_BLK = 512
 DEFAULT_T_BLK = 1024
+
+#: VMEM budget (bytes) a kernel's per-program working set must fit for the
+#: compiled path: the per-core capacity from ``repro.common.hw`` minus 1/4
+#: headroom for Mosaic's own pipeline buffers and compiler scratch. Shared
+#: by every kernel guard in this package and by the static auditor
+#: (``repro.analysis.kernel_audit``).
+VMEM_BUDGET = 3 * HW["vmem_bytes"] // 4
 
 
 def _kernel(params_ref, ids_ref, rows_ref, heat_ref, out_ref, *,
@@ -68,6 +77,42 @@ def _pick_blk(dim: int, blk: int) -> int:
     while b * 2 <= min(blk, dim):
         b *= 2
     return b
+
+
+def _block_sizes(vocab, t, v_blk: int, t_blk: int):
+    """The (v_blk, t_blk) the kernel actually runs with — the single source
+    of the block adjustments, shared by ``rowsparse_scatter``, its
+    ``fits_vmem`` guard, and the static auditor so they cannot drift."""
+    if vocab is not None:
+        v_blk = _pick_blk(vocab, v_blk)
+    if t is not None and t > 0:
+        t_blk = min(t_blk, t)
+    return v_blk, t_blk
+
+
+def vmem_footprint(row_elems: int, *, vocab: int | None = None,
+                   t: int | None = None, v_blk: int = DEFAULT_V_BLK,
+                   t_blk: int = DEFAULT_T_BLK) -> int:
+    """Analytic per-program VMEM bytes for ``rowsparse_scatter``.
+
+    Double-buffered pipeline blocks (ids, rows, heat inputs and the output
+    tile — its index map varies with the grid), the (v_blk, t_blk) one-hot
+    matmul operand, and the SMEM params pair.
+    """
+    d = max(int(row_elems), 1)
+    v_blk, t_blk = _block_sizes(vocab, t, v_blk, t_blk)
+    blocks = 2 * (t_blk + t_blk * d + v_blk + v_blk * d) * 4
+    onehot = v_blk * t_blk * 4
+    smem = 2 * 4
+    return blocks + onehot + smem
+
+
+def fits_vmem(row_elems: int, *, vocab: int | None = None,
+              t: int | None = None, v_blk: int = DEFAULT_V_BLK,
+              t_blk: int = DEFAULT_T_BLK, budget: int = VMEM_BUDGET) -> bool:
+    """Whether ``rowsparse_scatter``'s working set fits the compiled budget."""
+    return vmem_footprint(row_elems, vocab=vocab, t=t, v_blk=v_blk,
+                          t_blk=t_blk) <= budget
 
 
 def on_tpu() -> bool:
@@ -114,8 +159,7 @@ def rowsparse_scatter(ids, rows, heat, total: float, vocab: int, *,
     if t == 0:
         # an empty grid would never run the kernel body (or its output init)
         return jnp.zeros((vocab, d), jnp.float32)
-    v_blk = _pick_blk(vocab, v_blk)
-    t_blk = min(t_blk, t)
+    v_blk, t_blk = _block_sizes(vocab, t, v_blk, t_blk)
     pad = (-t) % t_blk
     if pad:
         ids = jnp.concatenate([ids, jnp.full((pad,), -1, ids.dtype)])

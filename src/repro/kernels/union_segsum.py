@@ -44,14 +44,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.heat_scatter import _pick_blk, _tpu_compiler_params, on_tpu
+from repro.kernels.heat_scatter import (VMEM_BUDGET, _pick_blk,
+                                        _tpu_compiler_params, on_tpu)
 
 DEFAULT_V_BLK = 512
 DEFAULT_T_BLK = 512
 
-#: VMEM budget (bytes) the resident outputs + scratch must fit for the
-#: compiled path; ~16 MB/core minus headroom for pipeline buffers.
-VMEM_BUDGET = 12 * 1024 * 1024
+__all__ = ["union_segsum", "fits_vmem", "vmem_footprint", "VMEM_BUDGET"]
 
 
 #: Grid dimension semantics for the compiled path. BOTH dims are
@@ -139,14 +138,14 @@ def _block_sizes(num_rows, t, v_blk: int, t_blk: int):
     return v_blk, t_blk
 
 
-def fits_vmem(cap: int, row_elems: int, *, num_rows: int | None = None,
-              t: int | None = None, v_blk: int = DEFAULT_V_BLK,
-              t_blk: int = DEFAULT_T_BLK, budget: int = VMEM_BUDGET) -> bool:
-    """Whether the kernel's VMEM-resident footprint fits the compiled budget.
+def vmem_footprint(cap: int, row_elems: int, *, num_rows: int | None = None,
+                   t: int | None = None, v_blk: int = DEFAULT_V_BLK,
+                   t_blk: int = DEFAULT_T_BLK) -> int:
+    """Analytic per-program VMEM bytes for ``union_segsum``.
 
     Applies the same ``_block_sizes`` adjustments ``union_segsum`` itself
-    makes when ``num_rows`` / ``t`` are given, so the ``"auto"`` guard and
-    the kernel agree near the budget boundary.
+    makes when ``num_rows`` / ``t`` are given, so the ``"auto"`` guard, the
+    kernel, and the static auditor agree near the budget boundary.
     """
     d = max(int(row_elems), 1)
     v_blk, t_blk = _block_sizes(num_rows, t, v_blk, t_blk)
@@ -156,7 +155,16 @@ def fits_vmem(cap: int, row_elems: int, *, num_rows: int | None = None,
     blocks = (2 * (t_blk + t_blk * d + v_blk)
               + v_blk * d + v_blk
               + v_blk * t_blk + v_blk * v_blk) * 4
-    return resident + blocks <= budget
+    smem = (2 + 1) * 4                               # params pair + carry
+    return resident + blocks + smem
+
+
+def fits_vmem(cap: int, row_elems: int, *, num_rows: int | None = None,
+              t: int | None = None, v_blk: int = DEFAULT_V_BLK,
+              t_blk: int = DEFAULT_T_BLK, budget: int = VMEM_BUDGET) -> bool:
+    """Whether the kernel's VMEM-resident footprint fits the compiled budget."""
+    return vmem_footprint(cap, row_elems, num_rows=num_rows, t=t,
+                          v_blk=v_blk, t_blk=t_blk) <= budget
 
 
 def union_segsum(ids, rows, heat, total: float, cap: int, num_rows: int, *,

@@ -13,6 +13,8 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.common.hw import HW as _HW
+
 
 def make_cohort_mesh(num_devices: Optional[int] = None, axis: str = "data"):
     """1-D data mesh for cohort-sharded federated rounds.
@@ -46,10 +48,6 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
 
 
-HW = {
-    # TPU v5e per-chip constants used by the roofline analysis
-    "peak_flops_bf16": 197e12,     # FLOP/s
-    "hbm_bandwidth": 819e9,        # B/s
-    "ici_bandwidth": 50e9,         # B/s per link
-    "hbm_bytes": 16 * 2**30,
-}
+# re-exported for existing consumers; the constants themselves are
+# single-sourced in repro.common.hw (shared with the kernel cost model)
+HW = _HW

@@ -1,0 +1,19 @@
+"""Seeded violation: pl.BlockSpec literal block shape off the (8, 128) tile.
+
+TPU vector memory is tiled (8, 128) for f32: a literal block shape whose
+lane dim is not a multiple of 128 (or sublane not a multiple of 8) makes
+Mosaic pad or re-lay-out every window, silently wasting VMEM and HBM
+bandwidth. Size-1 dims and computed block picks (which the kernel-audit
+plane pins against the kernel's own guard) are exempt; only the marked
+spec below must fire.
+"""
+from jax.experimental import pallas as pl
+
+
+def specs(v_blk: int, d: int):
+    aligned = pl.BlockSpec((8, 128), lambda i, j: (i, j))
+    squeezed = pl.BlockSpec((1,), lambda i, j: (i,))
+    leading_one = pl.BlockSpec((1, 512, 128), lambda i, j: (0, i, j))
+    computed = pl.BlockSpec((v_blk, d), lambda i, j: (i, j))
+    bad = pl.BlockSpec((16, 100), lambda i, j: (i, j))  # VIOLATION: lane dim 100
+    return aligned, squeezed, leading_one, computed, bad

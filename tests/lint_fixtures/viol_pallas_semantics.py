@@ -18,9 +18,9 @@ def _kernel(x_ref, o_ref):
 def double(x):
     return pl.pallas_call(          # VIOLATION: no compiler_params
         _kernel,
-        grid=(x.shape[0] // 8,),
-        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
-        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        grid=(x.shape[0] // 128,),
+        in_specs=[pl.BlockSpec((128,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((128,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
         interpret=True,
     )(x)

@@ -21,6 +21,7 @@ _SEEDED = {
     "viol_host_numpy.py": "host-numpy",
     "viol_static_argnames.py": "static-argnames-array",
     "viol_pallas_semantics.py": "pallas-dim-semantics",
+    "viol_pallas_blockspec.py": "pallas-blockspec-misaligned",
     "viol_data_dep_shape.py": "data-dep-shape",
     "viol_donated_reuse.py": "donated-reuse",
     "viol_shard_full_aggregate.py": "shard-full-aggregate",

@@ -30,6 +30,10 @@ def _fresh():
              "us_per_event": 500.0, "barrier_makespan": 40.0,
              "async_makespan": 16.0, "clients_per_unit_barrier": 0.75,
              "clients_per_unit_async": 1.875, "sim_speedup": 2.5},
+            {"section": "kernel_roofline", "v": 1024, "density": 0.1,
+             "k": 4, "d": 8, "backend": "pallas", "analytic_bytes": 40000,
+             "analytic_flops": 8.0e6, "intensity": 200.0, "restream": 1.0,
+             "us": 800.0, "achieved_gbps": 0.05, "hbm_frac": 6e-5},
         ],
     }
 
@@ -107,3 +111,49 @@ def test_main_exit_codes(tmp_path):
     sp.write_text(json.dumps(stale))
     assert check_regression.main([str(fp), "--baseline", str(bp)]) == 0
     assert check_regression.main([str(fp), "--baseline", str(sp)]) == 1
+
+
+def test_kernel_roofline_analytic_bytes_growth_fails():
+    """The deterministic pin: analytic bytes growing past the threshold is
+    re-streaming or a densified path, regardless of runner speed."""
+    fresh = _fresh()
+    baseline = copy.deepcopy(fresh)
+    for rec in fresh["records"]:
+        if rec["section"] == "kernel_roofline":
+            rec["analytic_bytes"] = rec["analytic_bytes"] * 2
+            rec["restream"] = 64.0
+    failures = check_regression.check(fresh, baseline, 0.25)
+    assert any("analytic_bytes grew" in f for f in failures)
+    assert any("restream grew" in f for f in failures)
+    # within the threshold: no failure
+    fresh = _fresh()
+    for rec in fresh["records"]:
+        if rec["section"] == "kernel_roofline":
+            rec["analytic_bytes"] = int(rec["analytic_bytes"] * 1.1)
+    assert check_regression.check(fresh, baseline, 0.25) == []
+
+
+def test_kernel_roofline_fresh_sanity():
+    """Fresh-only checks: positive analytic bytes; timed records must carry
+    a positive achieved bandwidth (analytic-only off-TPU cells are exempt)."""
+    fresh = _fresh()
+    for rec in fresh["records"]:
+        if rec["section"] == "kernel_roofline":
+            rec["achieved_gbps"] = 0.0
+    failures = check_regression.check(fresh, copy.deepcopy(fresh), 0.25)
+    assert any("non-positive achieved_gbps" in f for f in failures)
+    for rec in fresh["records"]:
+        if rec["section"] == "kernel_roofline":
+            rec["analytic_only"] = True   # off-TPU pallas cell: exempt
+    fresh2 = copy.deepcopy(fresh)
+    assert check_regression.check(fresh2, copy.deepcopy(fresh2), 0.25) == []
+
+
+def test_kernel_roofline_missing_from_baseline_is_stale():
+    fresh = _fresh()
+    baseline = copy.deepcopy(fresh)
+    baseline["records"] = [r for r in baseline["records"]
+                           if r["section"] != "kernel_roofline"]
+    failures = check_regression.check(fresh, baseline, 0.25)
+    assert any("'kernel_roofline'" in f and "stale or truncated" in f
+               for f in failures)

@@ -78,3 +78,36 @@ def test_analytic_flops_moe_uses_active_params():
     f_dense = analytic_flops_for(dense_equiv, "decode", 8, 4096)["matmul"]
     # top-2 of 4 experts ~ dense with 2x d_ff (+ router); within 15%
     assert abs(f_moe - f_dense) / f_dense < 0.15
+
+
+def test_bench_roofline_missing_artifact_is_graceful(tmp_path, monkeypatch):
+    """No dry-run artifact: one explanatory row, no crash, no table."""
+    from benchmarks import bench_roofline
+    monkeypatch.chdir(tmp_path)
+    rows = bench_roofline.run()
+    assert len(rows) == 1
+    name, us, derived = rows[0]
+    assert name == "roofline/missing"
+    assert us == 0.0
+    assert "dryrun" in derived
+
+
+def test_hardware_constants_single_sourced():
+    """Every roofline consumer reads the same HW dict object: the LLM
+    roofline (benchmarks.roofline), the mesh model (repro.launch.mesh) and
+    the kernel cost model (repro.analysis.kernel_audit) cannot disagree on
+    peak FLOP/s or HBM bandwidth."""
+    import benchmarks.roofline as llm_roofline
+    from repro.analysis import kernel_audit
+    from repro.common.hw import HW
+    from repro.launch import mesh
+
+    assert llm_roofline.HW is HW
+    assert mesh.HW is HW
+    assert kernel_audit.HW is HW
+    for key in ("peak_flops_bf16", "hbm_bandwidth", "ici_bandwidth",
+                "hbm_bytes", "vmem_bytes"):
+        assert HW[key] > 0
+    # the kernel VMEM budgets derive from the same source
+    from repro.kernels.heat_scatter import VMEM_BUDGET
+    assert VMEM_BUDGET == 3 * HW["vmem_bytes"] // 4
